@@ -1,0 +1,30 @@
+"""Shared benchmark helpers: CSV emission + wall-clock accounting."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from contextlib import contextmanager
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+GB = 1e9
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """Benchmark contract: ``name,us_per_call,derived`` CSV on stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed(holder: dict):
+    t0 = time.time()
+    yield
+    holder["us"] = (time.time() - t0) * 1e6
+
+
+def table(rows, header):
+    widths = [max(len(str(r[i])) for r in [header] + rows) for i in range(len(header))]
+    fmt = "  ".join("{:<%d}" % w for w in widths)
+    lines = [fmt.format(*header), fmt.format(*["-" * w for w in widths])]
+    lines += [fmt.format(*[str(c) for c in r]) for r in rows]
+    return "\n".join("| " + l for l in lines)

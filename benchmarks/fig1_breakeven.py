@@ -1,0 +1,33 @@
+"""Paper Fig. 1: energy breakeven curves for 1-100 GB checkpoints —
+breakeven always within minutes => time, not energy, limits feasibility."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import feasibility as fz
+
+from benchmarks.common import GB, emit, table, timed
+
+
+def run():
+    hold = {}
+    with timed(hold):
+        sizes = np.array([1, 5, 10, 20, 40, 60, 80, 100], float)
+        bws = [("1 Gbps", 1e9), ("10 Gbps", 10e9), ("100 Gbps", 100e9)]
+        rows = []
+        for s in sizes:
+            row = [f"{s:.0f} GB"]
+            for _, b in bws:
+                row.append(f"{float(fz.breakeven_time_s(s * GB, b)) / 60:.2f} min")
+            rows.append(row)
+        tbl = table(rows, ["ckpt"] + [f"T_BE @ {n}" for n, _ in bws])
+        worst = float(fz.breakeven_time_s(100 * GB, 1e9)) / 60
+    print(tbl)
+    print("| paper Critical Finding reproduced: all breakeven points are minutes,")
+    print(f"| worst case (100 GB @ 1 Gbps) = {worst:.1f} min << 2.5 h windows.")
+    emit("fig1_breakeven", hold["us"],
+         f"worst T_BE(100GB@1Gbps)={worst:.1f}min << 150min window; ratio P_sys/P_node={fz.P_SYS_KW/fz.P_NODE_KW}")
+
+
+if __name__ == "__main__":
+    run()

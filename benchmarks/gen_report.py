@@ -1,0 +1,89 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
+the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.gen_report [--tag baseline] > tables.md
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro.configs import ASSIGNED, SHAPES, get_config
+
+from benchmarks.roofline import analyse, load_records
+
+
+def human(n):
+    if n is None:
+        return "?"
+    for u in ("B", "KB", "MB", "GB"):
+        if abs(n) < 1024:
+            return f"{n:.1f}{u}"
+        n /= 1024
+    return f"{n:.2f}TB"
+
+
+def dryrun_table(recs):
+    by = {(r["arch"], r["shape"], r["mesh"]): r for r in recs}
+    lines = [
+        "| arch | shape | mesh | status | peak/chip | HLO GFLOP/chip | HLO GB/chip | coll GB/chip | compile s |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ASSIGNED:
+        cfg = get_config(arch)
+        for shape in SHAPES:
+            for mesh in ("single", "multi"):
+                r = by.get((arch, shape, mesh))
+                if shape not in cfg.shapes():
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | SKIP (full attention; DESIGN.md §7) | | | | | |"
+                    )
+                    continue
+                if r is None:
+                    lines.append(f"| {arch} | {shape} | {mesh} | MISSING | | | | | |")
+                    continue
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {r['status']} | "
+                    f"{human(r['memory']['peak_bytes'])} | "
+                    f"{r['hlo_flops_per_device']/1e9:,.0f} | "
+                    f"{r['hlo_bytes_per_device']/1e9:.1f} | "
+                    f"{r['collective_bytes_per_device']/1e9:.2f} | "
+                    f"{r['lower_compile_s']} |"
+                )
+    return "\n".join(lines)
+
+
+def roofline_table(recs):
+    lines = [
+        "| arch | shape | mesh | t_compute s | t_memory s | t_collective s | bound | MODEL_FLOPS/chip | useful ratio | roofline frac |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        a = analyse(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} | "
+            f"{r['t_collective_s']:.3f} | **{a['dominant']}** | "
+            f"{a['model_flops_per_device']/1e9:,.0f}G | {a['useful_ratio']:.2f} | "
+            f"{a['roofline_frac']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    args = ap.parse_args()
+    recs = [r for r in load_records(args.tag) if r.get("status") == "OK"]
+    recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    if args.section in ("dryrun", "both"):
+        print("### Dry-run matrix\n")
+        print(dryrun_table(recs))
+    if args.section in ("roofline", "both"):
+        print("\n### Roofline table\n")
+        print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""§Roofline: per (arch × shape × mesh) three-term roofline from the
+dry-run artifacts (benchmarks/artifacts/*.json written by launch/dryrun.py).
+
+  compute    = HLO_FLOPs / peak_FLOP/s          (197 TFLOP/s bf16, v5e)
+  memory     = HLO_bytes / HBM_bw               (819 GB/s)
+  collective = collective_bytes / link_bw       (~50 GB/s ICI)
+
+(cost_analysis is per-device under SPMD, so the chip-count division is
+already applied.) Also reports MODEL_FLOPS = 6·N·D (6·N_active·D for MoE)
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES, active_param_count, get_config, param_count
+
+from benchmarks.common import ARTIFACTS, emit, table, timed
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+def model_flops_per_device(arch: str, shape_name: str, n_chips: int) -> float:
+    """6·N·D for train (fwd+bwd), 2·N·D for prefill, 2·N per token decode."""
+    cfg = get_config(arch)
+    n = active_param_count(cfg) if cfg.moe else param_count(cfg)
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return 6.0 * n * shape.tokens / n_chips
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.tokens / n_chips
+    return 2.0 * n * shape.global_batch / n_chips  # one decode token
+
+
+def load_records(tag: str = "baseline", artifact_dir: Optional[str] = None) -> List[dict]:
+    d = artifact_dir or ARTIFACTS
+    recs = []
+    for path in sorted(glob.glob(os.path.join(d, f"{tag}_*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def analyse(rec: dict) -> dict:
+    terms = {
+        "compute": rec["t_compute_s"],
+        "memory": rec["t_memory_s"],
+        "collective": rec["t_collective_s"],
+    }
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], rec["n_chips"])
+    hf = rec["hlo_flops_per_device"] or 1.0
+    t_model = mf / PEAK_FLOPS  # ideal compute time for useful FLOPs
+    t_bound = max(terms.values())
+    return {
+        **rec,
+        "dominant": dominant,
+        "model_flops_per_device": mf,
+        "useful_ratio": mf / hf,
+        # roofline fraction: ideal useful-compute time / achievable step time
+        # (the §Perf score — how close the bound is to pure useful compute)
+        "roofline_frac": t_model / t_bound if t_bound > 0 else 0.0,
+    }
+
+
+def run(tag: str = "baseline"):
+    hold = {}
+    with timed(hold):
+        recs = [analyse(r) for r in load_records(tag) if r.get("status") == "OK"]
+        rows = []
+        for r in sorted(recs, key=lambda x: (x["mesh"], x["arch"], x["shape"])):
+            rows.append([
+                r["mesh"], r["arch"], r["shape"],
+                f"{r['t_compute_s']:.3f}", f"{r['t_memory_s']:.3f}",
+                f"{r['t_collective_s']:.3f}", r["dominant"],
+                f"{r['useful_ratio']:.2f}", f"{r['roofline_frac']:.3f}",
+                f"{(r['memory']['peak_bytes'] or 0)/2**30:.2f}G",
+            ])
+        tbl = table(rows, ["mesh", "arch", "shape", "t_comp", "t_mem",
+                           "t_coll", "bound", "useful", "roofline", "peak"])
+    print(tbl)
+    if recs:
+        worst = min(recs, key=lambda r: r["roofline_frac"])
+        coll = max(recs, key=lambda r: r["t_collective_s"])
+        emit("roofline", hold["us"],
+             f"{len(recs)} cells; worst roofline_frac={worst['roofline_frac']:.3f} "
+             f"({worst['arch']}/{worst['shape']}/{worst['mesh']}); most collective-bound "
+             f"{coll['arch']}/{coll['shape']} t_coll={coll['t_collective_s']:.2f}s")
+    else:
+        emit("roofline", hold["us"], "no artifacts yet (run launch/dryrun.py --all)")
+    return recs
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,56 @@
+"""Benchmark runner: one function per paper table/figure.
+Each prints its table then a ``name,us_per_call,derived`` CSV line.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --fast     # smaller sims
+  PYTHONPATH=src python -m benchmarks.run --only table6_policy
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="smaller trace-driven sims")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (
+        fig1_breakeven, fig2_phase, roofline, table1_hardware,
+        table2_checkpoints, table3_transfer, table4_classes, table6_policy,
+        table7_validation, table8_baselines,
+    )
+
+    benches = [
+        ("table1_hardware", table1_hardware.run, {}),
+        ("table2_checkpoints", table2_checkpoints.run, {}),
+        ("table3_transfer", table3_transfer.run, {}),
+        ("table4_classes", table4_classes.run, {}),
+        ("fig1_breakeven", fig1_breakeven.run, {}),
+        ("fig2_phase", fig2_phase.run, {}),
+        ("table6_policy", table6_policy.run, {"fast": args.fast}),
+        ("table7_validation", table7_validation.run, {}),
+        ("table8_baselines", table8_baselines.run, {"fast": args.fast}),
+        ("roofline", roofline.run, {}),
+    ]
+    print("name,us_per_call,derived")
+    failed = 0
+    for name, fn, kw in benches:
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name} ===")
+        try:
+            fn(**kw)
+        except Exception:
+            failed += 1
+            traceback.print_exc()
+            print(f"{name},0,FAILED")
+    if failed:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Table III: checkpoint transfer time vs WAN speeds."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import feasibility as fz
+
+from benchmarks.common import GB, emit, table, timed
+
+
+def fmt(seconds: float) -> str:
+    if seconds < 60:
+        return f"{seconds:.2f}s" if seconds < 10 else f"{seconds:.1f}s"
+    m, s = divmod(seconds, 60)
+    return f"{int(m)}m{s:02.0f}s"
+
+
+def run():
+    hold = {}
+    with timed(hold):
+        sizes = [1, 16, 40, 100]
+        bws = [("100 Mbps", 100e6), ("1 Gbps", 1e9), ("10 Gbps", 10e9), ("100 Gbps", 100e9)]
+        rows = []
+        for s in sizes:
+            row = [f"{s} GB"]
+            for _, b in bws:
+                row.append(fmt(float(fz.transfer_time_s(s * GB, b))))
+            rows.append(row)
+        tbl = table(rows, ["Size"] + [n for n, _ in bws])
+        t40 = float(fz.transfer_time_s(40 * GB, 10e9))
+    print(tbl)
+    emit("table3_transfer", hold["us"],
+         f"40GB@10Gbps={t40:.0f}s (paper: 34s incl. overheads); grid matches 8S/B")
+
+
+if __name__ == "__main__":
+    run()

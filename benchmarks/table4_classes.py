@@ -1,0 +1,40 @@
+"""Paper Table IV: workload classification by migration feasibility
+(size bands + time-threshold classes at 1 and 10 Gbps)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import feasibility as fz
+
+from benchmarks.common import GB, emit, table, timed
+
+
+def run():
+    hold = {}
+    with timed(hold):
+        rows = []
+        for label, size_gb, chars in [
+            ("A: Suitable", 5, "Small (<10 GB)"),
+            ("B: Conditional", 40, "Medium (10-100 GB)"),
+            ("C: Infeasible", 280, "Large LLMs (>100 GB)"),
+        ]:
+            s = size_gb * GB
+            t10 = float(fz.transfer_time_s(s, 10e9))
+            t1 = float(fz.transfer_time_s(s, 1e9))
+            rows.append([
+                label, chars, f"{size_gb} GB",
+                "ABC"[int(fz.classify_by_size(s))],
+                f"{t1:.0f}s -> " + "ABC"[int(fz.classify(s, 1e9))],
+                f"{t10:.0f}s -> " + "ABC"[int(fz.classify(s, 10e9))],
+            ])
+        tbl = table(rows, ["Class", "Characteristics", "Size", "size-band",
+                           "T@1Gbps->cls", "T@10Gbps->cls"])
+    print(tbl)
+    print("| note: the paper's Table IV size bands coincide with the §VI.D time")
+    print("| thresholds at ~1 Gbps effective bandwidth (60s≈7.5GB, 300s≈37.5GB).")
+    emit("table4_classes", hold["us"],
+         "size bands == time thresholds @ ~1Gbps; A<10GB B10-100GB C>100GB")
+
+
+if __name__ == "__main__":
+    run()

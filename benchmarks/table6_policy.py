@@ -1,0 +1,59 @@
+"""Paper Table VI: policy comparison over the 7-day CAISO-calibrated trace,
+normalized to the Static baseline. Run at the nominal 10 Gbps NIC and at
+1 Gbps effective per-flow bandwidth (shared inter-region WAN — the regime
+where the paper's ordering is sharpest; see EXPERIMENTS.md)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import SimConfig, normalized_table, run_policy_comparison
+
+from benchmarks.common import emit, table, timed
+
+PAPER = {
+    "static": (1.00, 1.00, "0%"),
+    "energy-only": (0.62, 1.35, "18%"),
+    "feasibility-aware": (0.48, 0.82, "<2%"),
+    "oracle": (0.40, 0.79, "<2%"),
+}
+
+
+def one(cfg, label):
+    rows = normalized_table(run_policy_comparison(cfg))
+    out = []
+    for r in rows:
+        pe, pj, po = PAPER[r["policy"]]
+        out.append([
+            r["policy"], r["nonrenew_energy"], r["jct"],
+            f"{r['migration_overhead']:.1%}", f"{r['stall_overhead']:.1%}",
+            f"{r['renewable_frac']:.1%}", f"{pe}/{pj}/{po}",
+        ])
+    print(f"--- {label} ---")
+    print(table(out, ["policy", "nonrenew", "JCT", "migr-ovh", "stalls",
+                      "renew%", "paper(e/jct/ovh)"]))
+    return {r["policy"]: r for r in rows}
+
+
+def run(fast: bool = False):
+    hold = {}
+    with timed(hold):
+        cfg = SimConfig(dt_s=120.0 if fast else 60.0,
+                        n_jobs=120 if fast else 240,
+                        days=4 if fast else 7)
+        r10 = one(cfg, "WAN 10 Gbps NIC (Table V nominal)")
+        r1 = one(dataclasses.replace(cfg, wan_gbps=1.0),
+                 "WAN 1 Gbps effective per-flow")
+    fa10, fa1 = r10["feasibility-aware"], r1["feasibility-aware"]
+    eo1 = r1["energy-only"]
+    emit(
+        "table6_policy", hold["us"],
+        f"feas@10G e={fa10['nonrenew_energy']} jct={fa10['jct']} "
+        f"ovh={fa10['migration_overhead']:.3f} | feas@1G e={fa1['nonrenew_energy']} "
+        f"jct={fa1['jct']} | EO@1G e={eo1['nonrenew_energy']} jct={eo1['jct']} "
+        f"(paper: 0.48/0.82/<2% and EO 0.62/1.35/18%)",
+    )
+    return r10, r1
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,67 @@
+"""Paper Table VII: feasibility-domain validation — one migration per
+representative workload inside a 2.5 h renewable window; measured JCT
+overhead vs the analytic eq.(1) prediction, and the resulting
+FEASIBLE/INFEASIBLE status under the formal model."""
+from __future__ import annotations
+
+from repro.core import feasibility as fz
+
+from benchmarks.common import GB, emit, table, timed
+
+WORKLOADS = [
+    ("ResNet-50", 1.0, "A", "FEASIBLE"),
+    ("GPT-2 Small", 6.0, "A", "FEASIBLE"),
+    ("GPT-2 Medium", 40.0, "B", "INFEASIBLE (Energy)"),
+    ("LLaMA-70B", 280.0, "C", "INFEASIBLE (Both)"),
+]
+PAPER_OVH = {"ResNet-50": "1.3%", "GPT-2 Small": "5.4%",
+             "GPT-2 Medium": "25.9%", "LLaMA-70B": "187%"}
+WINDOW_S = 2.5 * 3600
+JCT_BASE_S = 3600.0  # 1 h compute segment between checkpoints
+
+
+def verdict_str(v) -> str:
+    if bool(v.feasible):
+        return "FEASIBLE"
+    why = []
+    if not bool(v.time_ok) or int(v.workload_class) == 2:
+        why.append("Time")
+    if not bool(v.energy_ok):
+        why.append("Energy")
+    return f"INFEASIBLE ({'+'.join(why) or 'Class'})"
+
+
+def run():
+    hold = {}
+    with timed(hold):
+        rows = []
+        agree = 0
+        for name, gb, paper_cls, paper_status in WORKLOADS:
+            s = gb * GB
+            for bw_name, bw in [("10G", 10e9), ("1G", 1e9)]:
+                v = fz.evaluate(s, bw, WINDOW_S)
+                ovh = float(v.t_cost_s) / JCT_BASE_S
+                status = verdict_str(v)
+                if bw_name == "1G":
+                    # the paper's statuses correspond to ~1 Gbps effective bw
+                    agree += (status.startswith("FEASIBLE")
+                              == paper_status.startswith("FEASIBLE"))
+                rows.append([
+                    name, f"{gb:.0f} GB", bw_name,
+                    "ABC"[int(v.workload_class)],
+                    f"{float(v.t_transfer_s):.1f}s", f"{ovh:.1%}", status,
+                    f"{paper_cls}/{PAPER_OVH[name]}/{paper_status}" if bw_name == "1G" else "",
+                ])
+        tbl = table(rows, ["Workload", "Size", "bw", "class", "T_transfer",
+                           "JCT-ovh(1h seg)", "status(formal model)", "paper@(their sim)"])
+    print(tbl)
+    print("| note: at the nominal 10 Gbps the formal model admits GPT-2-M (42.7s")
+    print("| cost < 900s budget); the paper's INFEASIBLE statuses for B/C reproduce")
+    print("| at ~1 Gbps effective bandwidth. The paper's '(Energy)' tag for GPT-2-M")
+    print("| contradicts its own §IV.D finding (T_BE is minutes) — see EXPERIMENTS.md.")
+    emit("table7_validation", hold["us"],
+         f"status agreement @1Gbps effective: {agree}/4 (A feasible; B/C infeasible)")
+
+
+if __name__ == "__main__":
+    run()

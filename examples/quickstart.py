@@ -1,0 +1,39 @@
+"""Quickstart: the feasibility-domain model + one orchestration decision.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import feasibility as fz
+from repro.core.orchestrator import FeasibilityAwarePolicy, JobView, OrchestratorContext, SiteView
+
+GB = 1e9
+
+# --- 1. the paper's core equations ----------------------------------------
+for size_gb in (1, 6, 40, 280):
+    v = fz.evaluate(size_gb * GB, 10e9, window_s=2.5 * 3600)
+    print(
+        f"{size_gb:>4} GB @10Gbps: T_transfer={float(v.t_transfer_s):7.1f}s  "
+        f"T_cost={float(v.t_cost_s):7.1f}s  T_breakeven={float(v.t_breakeven_s):6.1f}s  "
+        f"class={'ABC'[int(v.workload_class)]}  feasible={bool(v.feasible)}"
+    )
+
+# --- 2. one Algorithm-1 decision -------------------------------------------
+job = JobView(jid=0, site=0, ckpt_bytes=6 * GB, remaining_compute_s=4 * 3600)
+sites = [
+    SiteView(0, slots=4, busy=3, queued=2, renewable_active=False, window_remaining_s=0),
+    SiteView(1, slots=4, busy=1, queued=0, renewable_active=True, window_remaining_s=3 * 3600),
+    SiteView(2, slots=4, busy=4, queued=3, renewable_active=True, window_remaining_s=8 * 3600),
+]
+ctx = OrchestratorContext(t=0.0, jobs=[job], sites=sites,
+                          bandwidth_bps=np.full((3, 3), 10e9))
+decisions = FeasibilityAwarePolicy().decide(ctx)
+print("\nAlgorithm 1 decision:", decisions,
+      "-> migrate to the green, *uncongested* site (site 1), not the greener"
+      " but congested site 2")
+
+# --- 3. stochastic feasibility (§VI.H) -------------------------------------
+for eps in (0.5, 0.05, 0.01):
+    ok = bool(fz.stochastic_feasible(40 * GB, 1e9, window_forecast_s=3600,
+                                     window_sigma_s=900, eps=eps))
+    print(f"40GB@1Gbps, 1h±15min window, eps={eps}: migrate={ok}")

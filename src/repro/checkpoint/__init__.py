@@ -1,0 +1,4 @@
+from repro.checkpoint.serializer import (  # noqa: F401
+    serialize_tree, deserialize_tree, tree_bytes, CheckpointPayload,
+)
+from repro.checkpoint.manager import CheckpointManager, CheckpointInfo  # noqa: F401

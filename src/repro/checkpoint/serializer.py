@@ -1,0 +1,164 @@
+"""Pytree checkpoint serialization with exact byte accounting, int8
+compression and delta encoding.
+
+The serialized size IS the feasibility model's S_j — the orchestrator reads
+it from CheckpointManager, never from an estimate (DESIGN.md §4). Modes:
+
+  full        raw little-endian buffers (bf16/f32/int32 as stored)
+  int8        per-256-block symmetric int8 (kernels/quantize) + f32 scales
+              -> ~2x (bf16) / ~4x (f32) smaller, lossy but training-safe
+  delta-int8  int8-quantized (x - base) against a base checkpoint the
+              destination already holds — the paper §VIII 'compressed model
+              deltas' / incremental checkpoints, usually another ~step-
+              dependent win on top (identical leaves collapse to zeros).
+
+Format: JSON manifest (paths, shapes, dtypes, mode, block) + concatenated
+payload. Works on any pytree of jax/numpy arrays.
+"""
+from __future__ import annotations
+
+import io
+import json
+import zlib
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops as kops
+
+BLOCK = 256
+MAGIC = b"GRNCKPT1"
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def _flatten_with_paths(tree):
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [(_path_str(p), np.asarray(x)) for p, x in leaves]
+
+
+def tree_bytes(tree) -> int:
+    """Exact raw (mode='full') checkpoint payload size in bytes."""
+    return int(sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+@dataclass
+class CheckpointPayload:
+    manifest: Dict[str, Any]
+    data: bytes
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.data) + len(json.dumps(self.manifest).encode())
+
+
+def _quant_flat(flat: np.ndarray) -> Tuple[bytes, bytes, int]:
+    """int8-quantize a flat f32 array (padded to BLOCK)."""
+    n = flat.size
+    pad = (-n) % BLOCK
+    padded = np.pad(flat.astype(np.float32), (0, pad))
+    q, s = kops.quantize_int8(jnp.asarray(padded), block=BLOCK)
+    return np.asarray(q).tobytes(), np.asarray(s).tobytes(), pad
+
+
+def serialize_tree(
+    tree,
+    mode: str = "full",
+    base: Optional[Any] = None,
+) -> CheckpointPayload:
+    assert mode in ("full", "int8", "delta-int8"), mode
+    if mode == "delta-int8" and base is None:
+        raise ValueError("delta-int8 needs a base checkpoint tree")
+    entries: List[Dict[str, Any]] = []
+    buf = io.BytesIO()
+    base_leaves = dict(_flatten_with_paths(base)) if base is not None else {}
+    for path, arr in _flatten_with_paths(tree):
+        entry: Dict[str, Any] = {
+            "path": path,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "offset": buf.tell(),
+        }
+        if mode == "full" or not jnp.issubdtype(arr.dtype, jnp.floating):
+            raw = arr.tobytes()
+            entry["enc"] = "raw"
+            buf.write(raw)
+        else:
+            flat = arr.astype(np.float32).reshape(-1)
+            if mode == "delta-int8":
+                b = base_leaves.get(path)
+                if b is not None and b.shape == arr.shape:
+                    flat = flat - b.astype(np.float32).reshape(-1)
+                    entry["delta"] = True
+            qb, sb, pad = _quant_flat(flat)
+            # entropy-code the int8 payload: near-zero deltas collapse
+            # (the paper's §VIII 'compressed model deltas', implemented)
+            qz = zlib.compress(qb, level=1)
+            sz = zlib.compress(sb, level=1)
+            entry["enc"] = "int8"
+            entry["pad"] = pad
+            entry["qlen"] = len(qz)
+            entry["q_raw"] = len(qb)
+            entry["s_raw"] = len(sb)
+            buf.write(qz)
+            buf.write(sz)
+        entry["nbytes"] = buf.tell() - entry["offset"]
+        entries.append(entry)
+    manifest = {"mode": mode, "block": BLOCK, "entries": entries}
+    return CheckpointPayload(manifest, buf.getvalue())
+
+
+def deserialize_tree(
+    payload: CheckpointPayload,
+    like,
+    base: Optional[Any] = None,
+):
+    """Rebuild a pytree with the structure/dtypes of `like` (params template
+    or ShapeDtypeStructs). delta-int8 payloads need the same base tree."""
+    entries = {e["path"]: e for e in payload.manifest["entries"]}
+    base_leaves = dict(_flatten_with_paths(base)) if base is not None else {}
+    data = payload.data
+
+    def rebuild(path, leaf):
+        p = _path_str(path)
+        e = entries[p]
+        raw = data[e["offset"]: e["offset"] + e["nbytes"]]
+        shape = tuple(e["shape"])
+        dtype = np.dtype(e["dtype"])
+        if e["enc"] == "raw":
+            arr = np.frombuffer(raw, dtype=dtype).reshape(shape)
+        else:
+            q = np.frombuffer(zlib.decompress(raw[: e["qlen"]]), dtype=np.int8)
+            s = np.frombuffer(zlib.decompress(raw[e["qlen"]:]), dtype=np.float32)
+            flat = np.asarray(
+                kops.dequantize_int8(jnp.asarray(q), jnp.asarray(s), block=payload.manifest["block"])
+            )
+            if e["pad"]:
+                flat = flat[: -e["pad"]] if e["pad"] else flat
+            if e.get("delta") and p in base_leaves:
+                flat = flat + base_leaves[p].astype(np.float32).reshape(-1)
+            arr = flat.reshape(shape).astype(dtype)
+        return arr
+
+    return jax.tree_util.tree_map_with_path(rebuild, like)
+
+
+def to_bytes(payload: CheckpointPayload) -> bytes:
+    mjson = json.dumps(payload.manifest).encode()
+    head = MAGIC + len(mjson).to_bytes(8, "little")
+    return head + mjson + payload.data
+
+
+def from_bytes(raw: bytes) -> CheckpointPayload:
+    assert raw[:8] == MAGIC, "not a GreenFlow checkpoint"
+    mlen = int.from_bytes(raw[8:16], "little")
+    manifest = json.loads(raw[16: 16 + mlen].decode())
+    return CheckpointPayload(manifest, raw[16 + mlen:])

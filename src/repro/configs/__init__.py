@@ -1,0 +1,2 @@
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES, param_count, active_param_count  # noqa: F401
+from repro.configs.registry import ARCHS, ASSIGNED, get_config  # noqa: F401

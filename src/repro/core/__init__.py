@@ -1,0 +1,19 @@
+"""The paper's contribution: feasibility-domain model (§IV/§VI),
+feasibility-aware orchestration (§V, Algorithm 1), CAISO-calibrated traces
+and the trace-driven multi-site simulator (§VII)."""
+from repro.core import feasibility  # noqa: F401
+from repro.core.feasibility import (  # noqa: F401
+    ALPHA, CLASS_A_MAX_S, CLASS_B_MAX_S, P_NODE_KW, P_SYS_KW,
+    FeasibilityVerdict, breakeven_time_s, classify, classify_by_size,
+    evaluate, migration_cost_s, migration_energy_kwh, phase_diagram,
+    stochastic_feasible, transfer_time_s,
+)
+from repro.core.orchestrator import (  # noqa: F401
+    EnergyOnlyPolicy, FeasibilityAwarePolicy, OrchestratorContext, Policy,
+    StaticPolicy, make_policy,
+)
+from repro.core.simulator import (  # noqa: F401
+    ClusterSimulator, SimConfig, SimJob, SimResult, generate_jobs,
+    normalized_table, run_policy_comparison,
+)
+from repro.core.traces import Forecaster, SiteTrace, Window, generate_trace, trace_stats  # noqa: F401

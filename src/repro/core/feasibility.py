@@ -1,0 +1,192 @@
+"""Feasibility-domain model for migratory AI workloads (paper §IV + §VI).
+
+A workload w = (S, τ) migrating from site s to site d over WAN bandwidth
+B_{s,d} is governed by:
+
+  time:     T_transfer + T_load + T_downtime < α · T_energy(d)      (eq. 1)
+  energy:   T_breakeven = P_sys · T_transfer / P_node < T_energy(d) (§IV.D)
+
+with T_transfer = 8·S / B  (S bytes, B bits/s).  Classification (§VI.D):
+
+  class A:  T_transfer < 60 s      (freely migratable)
+  class B:  60 s ≤ T_transfer < 300 s  (conditional: needs α-window check)
+  class C:  T_transfer ≥ 300 s     (never migrated)
+
+Everything is vectorized jnp (grids for the Fig. 2 phase diagram lower to a
+single fused kernel) but accepts plain floats transparently.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ArrayLike = Union[float, np.ndarray, jax.Array]
+
+# --- paper constants (Table V + §IV) ---------------------------------------
+ALPHA = 0.1  # acceptable disruption fraction of the renewable window
+T_DOWNTIME_S = 0.4  # stop-the-world (PhoenixOS [17])
+T_LOAD_S = 10.3  # checkpoint load (ServerlessLLM [19])
+P_SYS_KW = 1.8  # combined system power during transfer (§IV.D)
+P_NODE_KW = 0.75  # compute-node power (§IV.D)
+CLASS_A_MAX_S = 60.0
+CLASS_B_MAX_S = 300.0
+
+GB = 1e9
+
+
+class FeasibilityVerdict(NamedTuple):
+    feasible: ArrayLike  # bool: time AND energy constraints hold
+    time_ok: ArrayLike
+    energy_ok: ArrayLike
+    t_transfer_s: ArrayLike
+    t_cost_s: ArrayLike  # transfer + load + downtime
+    t_breakeven_s: ArrayLike
+    workload_class: ArrayLike  # 0=A, 1=B, 2=C
+
+
+def transfer_time_s(size_bytes: ArrayLike, bandwidth_bps: ArrayLike) -> ArrayLike:
+    """T_transfer = 8 S / B  (paper §V)."""
+    return 8.0 * size_bytes / bandwidth_bps
+
+
+def migration_cost_s(
+    size_bytes: ArrayLike,
+    bandwidth_bps: ArrayLike,
+    t_load_s: ArrayLike = T_LOAD_S,
+    t_downtime_s: float = T_DOWNTIME_S,
+) -> ArrayLike:
+    return transfer_time_s(size_bytes, bandwidth_bps) + t_load_s + t_downtime_s
+
+
+def migration_energy_kwh(
+    size_bytes: ArrayLike, bandwidth_bps: ArrayLike, p_sys_kw: float = P_SYS_KW
+) -> ArrayLike:
+    """E_mig = P_sys · T_transfer  (eq. 2)."""
+    return p_sys_kw * transfer_time_s(size_bytes, bandwidth_bps) / 3600.0
+
+
+def breakeven_time_s(
+    size_bytes: ArrayLike,
+    bandwidth_bps: ArrayLike,
+    p_sys_kw: float = P_SYS_KW,
+    p_node_kw: float = P_NODE_KW,
+) -> ArrayLike:
+    """T_BE = E_mig / P_node — minimum renewable runtime to amortize the
+    migration energy (§IV.D / §VI.B)."""
+    return (p_sys_kw / p_node_kw) * transfer_time_s(size_bytes, bandwidth_bps)
+
+
+def classify(size_bytes: ArrayLike, bandwidth_bps: ArrayLike) -> ArrayLike:
+    """0=A, 1=B, 2=C per the §VI.D T_transfer thresholds."""
+    t = transfer_time_s(size_bytes, bandwidth_bps)
+    t = jnp.asarray(t)
+    return jnp.where(t < CLASS_A_MAX_S, 0, jnp.where(t < CLASS_B_MAX_S, 1, 2)).astype(jnp.int32)
+
+
+def classify_by_size(size_bytes: ArrayLike) -> ArrayLike:
+    """Table IV size bands (equivalent to the time thresholds at ~1 Gbps):
+    A < 10 GB, B 10–100 GB, C > 100 GB."""
+    s = jnp.asarray(size_bytes, jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32)
+    return jnp.where(s < 10 * GB, 0, jnp.where(s <= 100 * GB, 1, 2)).astype(jnp.int32)
+
+
+def evaluate(
+    size_bytes: ArrayLike,
+    bandwidth_bps: ArrayLike,
+    window_s: ArrayLike,
+    *,
+    alpha: float = ALPHA,
+    t_load_s: ArrayLike = T_LOAD_S,
+    t_downtime_s: float = T_DOWNTIME_S,
+    p_sys_kw: float = P_SYS_KW,
+    p_node_kw: float = P_NODE_KW,
+) -> FeasibilityVerdict:
+    """Full feasibility verdict for (w, s→d) triples. Broadcasts."""
+    t_transfer = transfer_time_s(size_bytes, bandwidth_bps)
+    t_cost = t_transfer + t_load_s + t_downtime_s
+    t_be = breakeven_time_s(size_bytes, bandwidth_bps, p_sys_kw, p_node_kw)
+    cls = classify(size_bytes, bandwidth_bps)
+    time_ok = t_cost < alpha * window_s
+    energy_ok = t_be < window_s
+    feasible = jnp.logical_and(jnp.logical_and(time_ok, energy_ok), cls != 2)
+    return FeasibilityVerdict(feasible, time_ok, energy_ok, t_transfer, t_cost, t_be, cls)
+
+
+# ---------------------------------------------------------------------------
+# Stochastic renewable windows (§VI.H)
+# ---------------------------------------------------------------------------
+
+
+def _norm_ppf(p: ArrayLike) -> ArrayLike:
+    """Standard normal inverse CDF via erfinv."""
+    return jnp.sqrt(2.0) * jax.scipy.special.erfinv(2.0 * jnp.asarray(p) - 1.0)
+
+
+def stochastic_feasible(
+    size_bytes: ArrayLike,
+    bandwidth_bps: ArrayLike,
+    window_forecast_s: ArrayLike,
+    window_sigma_s: ArrayLike,
+    *,
+    eps: float = 0.05,
+    alpha: float = ALPHA,
+    t_load_s: float = T_LOAD_S,
+    t_downtime_s: float = T_DOWNTIME_S,
+) -> ArrayLike:
+    """P[T_mig + T_load + T_dt < α·T̃_d | T̂_d] ≥ 1 − ε with a Gaussian
+    forecast-error model T̃ ~ N(T̂, σ²): equivalent to checking the
+    deterministic condition against the lower ε-quantile of the window."""
+    t_cost = migration_cost_s(size_bytes, bandwidth_bps, t_load_s, t_downtime_s)
+    window_lo = window_forecast_s + _norm_ppf(eps) * window_sigma_s  # ε-quantile
+    return t_cost < alpha * jnp.maximum(window_lo, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Phase diagram (Fig. 2) and utility model (§VI.F-G)
+# ---------------------------------------------------------------------------
+
+
+def phase_diagram(
+    sizes_gb: np.ndarray,
+    bandwidths_gbps: np.ndarray,
+    window_s: float = 2.5 * 3600,
+    alpha: float = ALPHA,
+):
+    """Grid of (class, T_transfer, feasible) over checkpoint-size × WAN-bw —
+    the paper's Fig. 2. Returns dict of (len(sizes), len(bws)) arrays."""
+    S = jnp.asarray(sizes_gb, jnp.float32)[:, None] * GB
+    B = jnp.asarray(bandwidths_gbps, jnp.float32)[None, :] * 1e9
+    v = evaluate(S, B, window_s, alpha=alpha)
+    return {
+        "t_transfer_s": np.asarray(v.t_transfer_s),
+        "class": np.asarray(v.workload_class),
+        "feasible": np.asarray(v.feasible),
+        "t_breakeven_s": np.asarray(v.t_breakeven_s),
+    }
+
+
+@dataclass(frozen=True)
+class UtilityWeights:
+    gamma: float = 1.0  # renewable-availability weight  (§VI.F)
+    beta: float = 1.0  # congestion/load weight
+
+
+def site_utility(renewable: ArrayLike, load: ArrayLike, w: UtilityWeights = UtilityWeights()):
+    """U(w, d) = γ·R(d) − β·L(d)."""
+    return w.gamma * jnp.asarray(renewable) - w.beta * jnp.asarray(load)
+
+
+def feasible_destinations(
+    size_bytes: float,
+    bandwidths_bps: np.ndarray,  # (n_sites,) from current site
+    windows_s: np.ndarray,  # (n_sites,) remaining renewable windows
+    *,
+    alpha: float = ALPHA,
+) -> np.ndarray:
+    """D_feasible(w, s) = {d | class(w) != C  ∧  T_mig < α·T_d}  (§VI.E)."""
+    v = evaluate(size_bytes, jnp.asarray(bandwidths_bps), jnp.asarray(windows_s), alpha=alpha)
+    return np.asarray(v.feasible)

@@ -1,0 +1,203 @@
+"""Migration policies, including the paper's feasibility-aware scheduler
+(Algorithm 1).
+
+All policies share one interface: ``decide(ctx) -> [(job_id, dest_site)]``
+evaluated at every orchestrator tick (Δt).  The simulator provides the
+context: running jobs (with *measured* checkpoint sizes), per-site
+renewable forecasts, effective inter-site bandwidths, and site load.
+
+  Static            never migrates (Table VI row 1)
+  EnergyOnly        chases renewable windows, no feasibility filter (row 2)
+  FeasibilityAware  Algorithm 1: hard feasibility filter, then utility
+                    maximization within the feasible set (row 3)
+  Oracle            FeasibilityAware with σ=0 forecasts (Table VIII row 4)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import feasibility as fz
+
+
+@dataclass
+class JobView:
+    jid: int
+    site: int
+    ckpt_bytes: float
+    remaining_compute_s: float
+    t_load_s: float = fz.T_LOAD_S
+
+
+@dataclass
+class SiteView:
+    sid: int
+    slots: int
+    busy: int  # running jobs
+    queued: int
+    renewable_active: bool
+    window_remaining_s: float  # forecast
+    incoming: int = 0  # in-flight migrations committed to this site
+
+    @property
+    def load(self) -> float:
+        return (self.busy + self.queued + self.incoming) / max(self.slots, 1)
+
+    @property
+    def free_slots(self) -> int:
+        return max(0, self.slots - self.busy - self.incoming)
+
+
+@dataclass
+class OrchestratorContext:
+    t: float
+    jobs: List[JobView]
+    sites: List[SiteView]
+    bandwidth_bps: np.ndarray  # (n_sites, n_sites) effective measured WAN bw
+
+    def site(self, sid: int) -> SiteView:
+        return self.sites[sid]
+
+
+Decision = Tuple[int, int]  # (job_id, destination site)
+
+
+class Policy:
+    name = "base"
+
+    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
+        raise NotImplementedError
+
+
+class StaticPolicy(Policy):
+    """Fixed placement, no inter-site coordination (§VII.E baseline 1)."""
+
+    name = "static"
+
+    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
+        return []
+
+
+class EnergyOnlyPolicy(Policy):
+    """Migrate whenever renewable energy is available elsewhere, without
+    feasibility constraints (§VII.E baseline 2). Herds onto the greenest
+    site; initiates transfers that cannot finish inside windows."""
+
+    name = "energy-only"
+
+    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
+        out: List[Decision] = []
+        for job in ctx.jobs:
+            cur = ctx.site(job.site)
+            if cur.renewable_active:
+                continue  # already green
+            greens = [
+                s for s in ctx.sites
+                if s.renewable_active and s.sid != job.site
+                and (s.slots - s.busy) > 0  # STALE capacity: ignores in-flight
+            ]
+            if not greens:
+                continue
+            # spread over whatever is green right now (hash placement), with
+            # only a stale capacity check and NO feasibility filter (§VII.E:
+            # 'lacks awareness of transfer-time or energy-cost limits'):
+            # transfers near window end, Class C checkpoints and transient
+            # over-subscription all happen.
+            dest = greens[job.jid % len(greens)]
+            out.append((job.jid, dest.sid))
+        return out
+
+
+@dataclass
+class FeasibilityAwarePolicy(Policy):
+    """Paper Algorithm 1 (§V.B).
+
+    Stage 1 — strict feasibility filter per (job, destination):
+        T_cost = T_transfer + T_load + 0.4 s
+        reject if T_cost > α · window(d)            (time)
+        reject if T_breakeven > window(d)           (energy)
+        reject if class(w) == C                     (§VI.D)
+    Stage 2 — optimization inside the feasible set:
+        benefit(d) = expected grid-seconds avoided − queue penalty
+        migrate to argmax benefit iff benefit > T_cost, ties by T_transfer.
+    """
+
+    name = "feasibility-aware"
+    alpha: float = fz.ALPHA
+    gamma: float = 1.0  # renewable weight (benefit term)
+    beta: float = 1.0  # congestion weight
+    queue_penalty_s: float = 7200.0  # expected wait per unit load
+    min_benefit_s: float = 1500.0  # hysteresis: don't move for marginal wins
+    eps: float = 0.0  # >0 enables stochastic feasibility (§VI.H)
+    forecast_sigma_s: float = 0.0
+
+    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
+        out: List[Decision] = []
+        # Track slot reservations within this tick so we do not herd.
+        reserved: Dict[int, int] = {s.sid: 0 for s in ctx.sites}
+        for job in ctx.jobs:
+            cur = ctx.site(job.site)
+            best: Optional[Tuple[float, float, int]] = None  # (-benefit, t_transfer, sid)
+            for dest in ctx.sites:
+                if dest.sid == job.site:
+                    continue
+                bw = float(ctx.bandwidth_bps[job.site, dest.sid])
+                window = dest.window_remaining_s
+                # ---- Stage 1: feasibility filter ----
+                if self.eps > 0.0 and self.forecast_sigma_s > 0.0:
+                    ok = bool(
+                        fz.stochastic_feasible(
+                            job.ckpt_bytes, bw, window, self.forecast_sigma_s,
+                            eps=self.eps, alpha=self.alpha, t_load_s=job.t_load_s,
+                        )
+                    )
+                    v = fz.evaluate(job.ckpt_bytes, bw, window, alpha=self.alpha,
+                                    t_load_s=job.t_load_s)
+                    ok = ok and bool(v.energy_ok) and int(v.workload_class) != 2
+                else:
+                    v = fz.evaluate(job.ckpt_bytes, bw, window, alpha=self.alpha,
+                                    t_load_s=job.t_load_s)
+                    ok = bool(v.feasible)
+                if not ok:
+                    continue
+                t_transfer = float(fz.transfer_time_s(job.ckpt_bytes, bw))
+                t_cost = t_transfer + job.t_load_s + fz.T_DOWNTIME_S
+                # ---- Stage 2: benefit inside the feasible set ----
+                cur_green_s = cur.window_remaining_s if cur.renewable_active else 0.0
+                dest_green_s = min(window, job.remaining_compute_s)
+                grid_seconds_avoided = max(0.0, dest_green_s - min(cur_green_s, job.remaining_compute_s))
+                dest_load = (dest.busy + dest.queued + reserved[dest.sid]) / max(dest.slots, 1)
+                # symmetric congestion term: moving toward a less-loaded site
+                # is itself a benefit (contention-aware placement, §V.D.2)
+                benefit = (
+                    self.gamma * grid_seconds_avoided
+                    - self.beta * self.queue_penalty_s * (dest_load - cur.load)
+                )
+                if dest.free_slots - reserved[dest.sid] <= 0:
+                    benefit -= self.queue_penalty_s  # would have to queue
+                if benefit <= max(t_cost, self.min_benefit_s):
+                    continue
+                key = (-benefit, t_transfer, dest.sid)
+                if best is None or key < best:
+                    best = key
+            if best is not None:
+                out.append((job.jid, best[2]))
+                reserved[best[2]] += 1
+        return out
+
+
+def make_policy(name: str, **kw) -> Policy:
+    name = name.lower()
+    if name == "static":
+        return StaticPolicy()
+    if name in ("energy-only", "energy_only", "energyonly"):
+        return EnergyOnlyPolicy()
+    if name in ("feasibility-aware", "feasibility", "ours"):
+        return FeasibilityAwarePolicy(**kw)
+    if name == "oracle":
+        p = FeasibilityAwarePolicy(**kw)
+        p.name = "oracle"
+        return p
+    raise KeyError(name)

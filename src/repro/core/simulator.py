@@ -1,0 +1,418 @@
+"""Trace-driven discrete-time simulator of renewable-powered
+micro-datacenters (paper §VII: 5 sites, 10 Gbps WAN, 7-day CAISO-calibrated
+trace, job mix A:70% 1–6 GB / B:20% 10–40 GB / C:10% 100–300 GB).
+
+Models:
+  * per-site GPU slots with FIFO queues,
+  * renewable windows from core/traces.py; grid vs. renewable kWh accounting
+    (P_node = 0.75 kW compute, P_sys = 1.8 kW during transfer),
+  * WAN transfers with per-site NIC contention (concurrent transfers share
+    the 10 Gbps uplink — this is what stalls the energy-only policy),
+  * migration = pause → transfer → load (10.3 s) → downtime (0.4 s) →
+    resume (possibly queued on arrival),
+  * optional node failures with checkpoint/restart (beyond-paper: the
+    fault-tolerance path of the framework, §VIII.F of the paper lists this
+    as unmodeled future work).
+
+Deterministic for a given seed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core import feasibility as fz
+from repro.core.orchestrator import (
+    JobView, OrchestratorContext, Policy, SiteView, StaticPolicy,
+)
+from repro.core.traces import Forecaster, SiteTrace, generate_trace
+
+HOUR = 3600.0
+GB = 1e9
+
+
+@dataclass
+class SimJob:
+    jid: int
+    arrival_s: float
+    compute_s: float
+    ckpt_bytes: float
+    size_class: str
+    home_site: int
+
+    site: int = -1
+    state: str = "pending"  # pending|queued|running|migrating|loading|done
+    progress_s: float = 0.0
+    done_s: float = -1.0
+    started_s: float = -1.0
+    migrations: int = 0
+    failed_migrations: int = 0
+    pause_s: float = 0.0  # time spent not computing due to migration
+    pause_transfer_s: float = 0.0
+    pause_wait_s: float = 0.0  # post-migration queue wait
+    queue_s: float = 0.0
+    renewable_kwh: float = 0.0
+    grid_kwh: float = 0.0
+    # in-flight transfer
+    transfer_remaining_bits: float = 0.0
+    transfer_dest: int = -1
+    load_remaining_s: float = 0.0
+    last_ckpt_progress_s: float = 0.0
+    post_migration_wait: bool = False  # queue time after arrival counts as
+    # migration-induced pause (the paper's 'stall/congestion' mode)
+    last_migration_end_s: float = -1e18
+
+    @property
+    def jct_s(self) -> float:
+        return self.done_s - self.arrival_s if self.done_s >= 0 else float("nan")
+
+
+@dataclass
+class SimConfig:
+    n_sites: int = 5
+    slots_per_site: int = 4
+    wan_gbps: float = 10.0
+    days: int = 7
+    dt_s: float = 30.0
+    orch_dt_s: float = 300.0
+    seed: int = 0
+    n_jobs: int = 240
+    arrival_skew: Sequence[float] = (0.45, 0.1925, 0.1485, 0.121, 0.088)
+    p_node_kw: float = fz.P_NODE_KW
+    p_sys_kw: float = fz.P_SYS_KW
+    t_load_s: float = fz.T_LOAD_S
+    t_downtime_s: float = fz.T_DOWNTIME_S
+    forecast_sigma_s: float = 900.0
+    migration_cooldown_s: float = 900.0  # orchestrator debounce per job
+    # job mix (paper §VII)
+    frac_a: float = 0.70
+    frac_b: float = 0.20
+    size_a_gb: tuple = (1.0, 6.0)
+    size_b_gb: tuple = (10.0, 40.0)
+    size_c_gb: tuple = (100.0, 300.0)
+    mean_compute_h: float = 3.5
+    # beyond-paper fault injection
+    failure_rate_per_slot_hour: float = 0.0
+    checkpoint_interval_s: float = 1800.0
+
+
+@dataclass
+class SimResult:
+    policy: str
+    jobs: List[SimJob]
+    grid_kwh: float
+    renewable_kwh: float
+    migration_kwh: float
+    migrations: int
+    failed_migrations: int
+    failures: int
+
+    @property
+    def mean_jct_s(self) -> float:
+        vals = [j.jct_s for j in self.jobs if j.done_s >= 0]
+        return float(np.mean(vals)) if vals else float("nan")
+
+    @property
+    def completed(self) -> int:
+        return sum(1 for j in self.jobs if j.done_s >= 0)
+
+    @property
+    def total_compute_s(self) -> float:
+        return sum(j.progress_s for j in self.jobs)
+
+    @property
+    def migration_overhead(self) -> float:
+        """Direct migration cost (transfer + load + downtime) over compute —
+        the paper's 'Migr. overhead' column."""
+        c = self.total_compute_s
+        return (sum(j.pause_transfer_s for j in self.jobs) / c) if c else 0.0
+
+    @property
+    def stall_overhead(self) -> float:
+        """Migration-induced queueing stalls over compute (the energy-only
+        failure mode: §VII.E 'stalled transfers, congestion, retries')."""
+        c = self.total_compute_s
+        return (sum(j.pause_wait_s for j in self.jobs) / c) if c else 0.0
+
+    @property
+    def renewable_fraction(self) -> float:
+        tot = self.grid_kwh + self.renewable_kwh
+        return self.renewable_kwh / tot if tot else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "policy": self.policy,
+            "grid_kwh": round(self.grid_kwh, 1),
+            "renewable_kwh": round(self.renewable_kwh, 1),
+            "renewable_frac": round(self.renewable_fraction, 3),
+            "mean_jct_h": round(self.mean_jct_s / HOUR, 2),
+            "migration_overhead": round(self.migration_overhead, 4),
+            "stall_overhead": round(self.stall_overhead, 4),
+            "migrations": self.migrations,
+            "failed_migrations": self.failed_migrations,
+            "completed": self.completed,
+            "failures": self.failures,
+        }
+
+
+def generate_jobs(cfg: SimConfig) -> List[SimJob]:
+    rng = np.random.default_rng(cfg.seed + 1)
+    horizon = cfg.days * 24 * HOUR
+    arrivals = np.sort(rng.uniform(0, horizon * 0.75, cfg.n_jobs))
+    skew = np.asarray(cfg.arrival_skew[: cfg.n_sites], float)
+    skew = skew / skew.sum()
+    jobs = []
+    sigma = 0.6
+    mu = np.log(cfg.mean_compute_h) - sigma ** 2 / 2
+    for i, t in enumerate(arrivals):
+        u = rng.random()
+        if u < cfg.frac_a:
+            cls, (lo, hi) = "A", cfg.size_a_gb
+        elif u < cfg.frac_a + cfg.frac_b:
+            cls, (lo, hi) = "B", cfg.size_b_gb
+        else:
+            cls, (lo, hi) = "C", cfg.size_c_gb
+        size = rng.uniform(lo, hi) * GB
+        compute_h = float(np.clip(rng.lognormal(mu, sigma), 0.5, 24.0))
+        home = int(rng.choice(cfg.n_sites, p=skew))
+        jobs.append(SimJob(i, float(t), compute_h * HOUR, size, cls, home, site=home))
+    return jobs
+
+
+class ClusterSimulator:
+    def __init__(
+        self,
+        cfg: SimConfig,
+        policy: Policy,
+        traces: Optional[List[SiteTrace]] = None,
+        jobs: Optional[List[SimJob]] = None,
+        oracle_forecast: bool = False,
+    ):
+        self.cfg = cfg
+        self.policy = policy
+        self.traces = traces or generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed)
+        self.jobs = jobs if jobs is not None else generate_jobs(cfg)
+        sigma = 0.0 if oracle_forecast else cfg.forecast_sigma_s
+        self.forecaster = Forecaster(self.traces, sigma_s=sigma, seed=cfg.seed + 7)
+        self._fail_rng = np.random.default_rng(cfg.seed + 23)
+        self.grid_kwh = 0.0
+        self.renewable_kwh = 0.0
+        self.migration_kwh = 0.0
+        self.migrations = 0
+        self.failed_migrations = 0
+        self.failures = 0
+
+    # -- helpers ------------------------------------------------------------
+    def _running(self, sid: int) -> List[SimJob]:
+        return [j for j in self.jobs if j.site == sid and j.state == "running"]
+
+    def _queued(self, sid: int) -> List[SimJob]:
+        return [j for j in self.jobs if j.site == sid and j.state == "queued"]
+
+    def _transfers(self) -> List[SimJob]:
+        return [j for j in self.jobs if j.state == "migrating"]
+
+    def _effective_bw(self, transfers: List[SimJob]) -> Dict[int, float]:
+        """Per-transfer effective bps under per-site NIC sharing."""
+        nic = self.cfg.wan_gbps * 1e9
+        src_count: Dict[int, int] = {}
+        dst_count: Dict[int, int] = {}
+        for j in transfers:
+            src_count[j.site] = src_count.get(j.site, 0) + 1
+            dst_count[j.transfer_dest] = dst_count.get(j.transfer_dest, 0) + 1
+        return {
+            j.jid: min(nic / src_count[j.site], nic / dst_count[j.transfer_dest])
+            for j in transfers
+        }
+
+    def _ctx(self, t: float) -> OrchestratorContext:
+        incoming: Dict[int, int] = {s: 0 for s in range(self.cfg.n_sites)}
+        for j in self.jobs:
+            if j.state == "migrating":
+                incoming[j.transfer_dest] += 1
+            elif j.state == "loading":
+                incoming[j.site] += 1
+        sites = []
+        for s in range(self.cfg.n_sites):
+            sites.append(
+                SiteView(
+                    sid=s,
+                    slots=self.cfg.slots_per_site,
+                    busy=len(self._running(s)),
+                    queued=len(self._queued(s)),
+                    renewable_active=self.traces[s].active(t),
+                    window_remaining_s=self.forecaster.remaining(s, t),
+                    incoming=incoming[s],
+                )
+            )
+        # measured bandwidth: current NIC contention applied symmetrically
+        n = self.cfg.n_sites
+        bw = np.full((n, n), self.cfg.wan_gbps * 1e9)
+        active = self._transfers()
+        for j in active:
+            bw[j.site, :] /= 2.0
+            bw[:, j.transfer_dest] /= 2.0
+        jobs = [
+            JobView(j.jid, j.site, j.ckpt_bytes, j.compute_s - j.progress_s, self.cfg.t_load_s)
+            for j in self.jobs
+            if j.state == "running"
+            and t - j.last_migration_end_s >= self.cfg.migration_cooldown_s
+        ]
+        return OrchestratorContext(t=t, jobs=jobs, sites=sites, bandwidth_bps=bw)
+
+    # -- main loop ----------------------------------------------------------
+    def run(self) -> SimResult:
+        cfg = self.cfg
+        horizon = cfg.days * 24 * HOUR
+        # allow the tail of late jobs to finish
+        t, t_end = 0.0, horizon * 2.0
+        next_orch = 0.0
+        jobs_by_id = {j.jid: j for j in self.jobs}
+        while t < t_end:
+            dt = cfg.dt_s
+            # 1) arrivals
+            for j in self.jobs:
+                if j.state == "pending" and j.arrival_s <= t:
+                    j.state = "queued"
+            # 2) transfers progress
+            transfers = self._transfers()
+            if transfers:
+                eff = self._effective_bw(transfers)
+                for j in transfers:
+                    rate = eff[j.jid]
+                    j.transfer_remaining_bits -= rate * dt
+                    j.pause_s += dt
+                    j.pause_transfer_s += dt
+                    e = self.cfg.p_sys_kw * dt / HOUR
+                    self.migration_kwh += e
+                    self.grid_kwh += e  # transfer power billed to grid
+                    if j.transfer_remaining_bits <= 0:
+                        j.site = j.transfer_dest
+                        j.transfer_dest = -1
+                        j.state = "loading"
+                        j.load_remaining_s = cfg.t_load_s + cfg.t_downtime_s
+            # 3) checkpoint loads
+            for j in self.jobs:
+                if j.state == "loading":
+                    j.load_remaining_s -= dt
+                    j.pause_s += dt
+                    j.pause_transfer_s += dt
+                    if j.load_remaining_s <= 0:
+                        j.state = "queued"
+                        j.post_migration_wait = True
+                        j.last_migration_end_s = t
+            # 4) scheduling: fill free slots FIFO
+            for s in range(cfg.n_sites):
+                free = cfg.slots_per_site - len(self._running(s))
+                if free > 0:
+                    for j in sorted(self._queued(s), key=lambda x: x.arrival_s)[:free]:
+                        j.state = "running"
+                        j.post_migration_wait = False
+                        if j.started_s < 0:
+                            j.started_s = t
+            # 5) compute progress + energy + failures
+            for s in range(cfg.n_sites):
+                green = self.traces[s].active(t)
+                for j in self._running(s):
+                    j.progress_s += dt
+                    e = cfg.p_node_kw * dt / HOUR
+                    if green:
+                        j.renewable_kwh += e
+                        self.renewable_kwh += e
+                    else:
+                        j.grid_kwh += e
+                        self.grid_kwh += e
+                    if j.progress_s - j.last_ckpt_progress_s >= cfg.checkpoint_interval_s:
+                        j.last_ckpt_progress_s = j.progress_s
+                    if cfg.failure_rate_per_slot_hour > 0.0:
+                        if self._fail_rng.random() < cfg.failure_rate_per_slot_hour * dt / HOUR:
+                            # node failure: roll back to last checkpoint
+                            lost = j.progress_s - j.last_ckpt_progress_s
+                            j.progress_s = j.last_ckpt_progress_s
+                            j.pause_s += lost
+                            self.failures += 1
+                    if j.progress_s >= j.compute_s:
+                        j.state = "done"
+                        j.done_s = t
+            # queue-time accounting
+            for j in self.jobs:
+                if j.state == "queued":
+                    j.queue_s += dt
+                    if j.post_migration_wait:
+                        j.pause_s += dt  # stalled by its own migration
+                        j.pause_wait_s += dt
+            # 6) orchestrator tick
+            if t >= next_orch:
+                next_orch = t + cfg.orch_dt_s
+                ctx = self._ctx(t)
+                for jid, dest in self.policy.decide(ctx):
+                    j = jobs_by_id[jid]
+                    if j.state != "running" or dest == j.site:
+                        continue
+                    j.state = "migrating"
+                    j.transfer_dest = dest
+                    j.transfer_remaining_bits = 8.0 * j.ckpt_bytes
+                    j.migrations += 1
+                    self.migrations += 1
+                    # a migration whose destination window closes before the
+                    # transfer ends is counted as failed (it still completes,
+                    # but arrives onto grid power — the paper's stall mode)
+                    bw_now = float(ctx.bandwidth_bps[j.site, dest])
+                    t_arrive = t + 8.0 * j.ckpt_bytes / bw_now
+                    if not self.traces[dest].active(min(t_arrive, horizon - 1)):
+                        self.failed_migrations += 1
+            if all(j.state == "done" for j in self.jobs):
+                break
+            t += dt
+        return SimResult(
+            policy=self.policy.name,
+            jobs=self.jobs,
+            grid_kwh=self.grid_kwh,
+            renewable_kwh=self.renewable_kwh,
+            migration_kwh=self.migration_kwh,
+            migrations=self.migrations,
+            failed_migrations=self.failed_migrations,
+            failures=self.failures,
+        )
+
+
+def run_policy_comparison(
+    cfg: Optional[SimConfig] = None,
+    policies: Sequence[str] = ("static", "energy-only", "feasibility-aware", "oracle"),
+) -> Dict[str, SimResult]:
+    """Table VI / VIII: same trace + same jobs, one run per policy."""
+    from repro.core.orchestrator import make_policy
+    import copy
+
+    cfg = cfg or SimConfig()
+    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed)
+    base_jobs = generate_jobs(cfg)
+    out: Dict[str, SimResult] = {}
+    for name in policies:
+        jobs = copy.deepcopy(base_jobs)
+        pol = make_policy(name)
+        sim = ClusterSimulator(
+            cfg, pol, traces=traces, jobs=jobs, oracle_forecast=(name == "oracle")
+        )
+        out[name] = sim.run()
+    return out
+
+
+def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
+    """Paper Table VI/VIII format: normalized to the static baseline."""
+    base = results["static"]
+    rows = []
+    for name, r in results.items():
+        rows.append(
+            {
+                "policy": name,
+                "nonrenew_energy": round(r.grid_kwh / base.grid_kwh, 2) if base.grid_kwh else 0.0,
+                "jct": round(r.mean_jct_s / base.mean_jct_s, 2),
+                "migration_overhead": round(r.migration_overhead, 3),
+                "stall_overhead": round(r.stall_overhead, 3),
+                "renewable_frac": round(r.renewable_fraction, 3),
+            }
+        )
+    return rows

@@ -1,0 +1,143 @@
+"""Renewable-surplus window traces calibrated on CAISO curtailment
+statistics (paper §VII: 7-day trace, mean window ≈ 2.5 h; footnote 1:
+events last 2.5–9.5 h; solar curtailment peaks midday).
+
+Windows are generated per site with a diurnal solar profile: one surplus
+window per day with probability `p_window`, centered near local noon
+(per-site phase offsets model geographic spread), duration ~ clipped
+lognormal with mean 2.5 h. Deterministic given a seed.
+
+Forecasts: the orchestrator sees the true window start/end with Gaussian
+noise on the remaining duration (σ configurable); the Oracle policy gets
+σ = 0 (paper Table VIII 'Perfect Forecast').
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+
+@dataclass(frozen=True)
+class Window:
+    start_s: float
+    end_s: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.end_s - self.start_s
+
+
+@dataclass
+class SiteTrace:
+    site: int
+    windows: List[Window]
+
+    def active(self, t: float) -> bool:
+        return any(w.start_s <= t < w.end_s for w in self.windows)
+
+    def remaining(self, t: float) -> float:
+        """Remaining surplus seconds at time t (0 if not in a window)."""
+        for w in self.windows:
+            if w.start_s <= t < w.end_s:
+                return w.end_s - t
+        return 0.0
+
+    def next_window(self, t: float):
+        for w in self.windows:
+            if w.start_s > t:
+                return w
+        return None
+
+    def renewable_seconds(self, t0: float, t1: float) -> float:
+        tot = 0.0
+        for w in self.windows:
+            tot += max(0.0, min(t1, w.end_s) - max(t0, w.start_s))
+        return tot
+
+
+def generate_trace(
+    n_sites: int = 5,
+    days: int = 7,
+    *,
+    seed: int = 0,
+    mean_window_h: float = 4.25,
+    max_window_h: float = 9.5,
+    min_window_h: float = 1.5,
+    p_window: float = 1.0,
+    noon_h: float = 12.5,
+    phase_spread_h: float = 9.0,
+    p_wind: float = 0.5,
+    wind_mean_h: float = 2.5,
+) -> List[SiteTrace]:
+    """CAISO-calibrated per-site renewable windows over `days`:
+    one solar-curtailment window per day (midday, site-phase-shifted) plus
+    an optional night wind-curtailment window."""
+    rng = np.random.default_rng(seed)
+    # lognormal with mean mean_window_h: mu = ln(mean) - sigma^2/2
+    sigma = 0.55
+    mu = np.log(mean_window_h) - sigma ** 2 / 2
+    mu_w = np.log(wind_mean_h) - sigma ** 2 / 2
+    traces = []
+    for s in range(n_sites):
+        phase = (s / max(n_sites - 1, 1) - 0.5) * 2 * phase_spread_h  # hours
+        wins: List[Window] = []
+        for d in range(days):
+            if rng.random() <= p_window:
+                dur = float(np.clip(rng.lognormal(mu, sigma), min_window_h, max_window_h))
+                center = d * 24 + noon_h + phase + rng.normal(0, 0.75)
+                start = max(d * 24.0, center - dur / 2)
+                end = min((d + 1) * 24.0, start + dur)
+                if end - start >= min_window_h:
+                    wins.append(Window(start * HOUR, end * HOUR))
+            if rng.random() <= p_wind:
+                dur = float(np.clip(rng.lognormal(mu_w, sigma), 1.0, 6.0))
+                center = d * 24 + (2.5 + (phase if abs(phase) < 6 else 0) + rng.normal(0, 1.0)) % 24
+                start = max(d * 24.0, center - dur / 2)
+                end = min((d + 1) * 24.0, start + dur)
+                if end - start >= 1.0 and not any(
+                    max(w.start_s, start * HOUR) < min(w.end_s, end * HOUR) for w in wins
+                ):
+                    wins.append(Window(start * HOUR, end * HOUR))
+        wins.sort(key=lambda w: w.start_s)
+        traces.append(SiteTrace(s, wins))
+    return traces
+
+
+@dataclass
+class Forecaster:
+    """Noisy view of the remaining-window duration (§VI.H)."""
+
+    traces: Sequence[SiteTrace]
+    sigma_s: float = 900.0  # 15 min 1-sigma forecast error
+    seed: int = 17
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+
+    def remaining(self, site: int, t: float) -> float:
+        true = self.traces[site].remaining(t)
+        if self.sigma_s <= 0:
+            return true
+        if true <= 0:
+            return 0.0
+        return max(0.0, true + float(self._rng.normal(0, self.sigma_s)))
+
+    def active(self, site: int, t: float) -> bool:
+        return self.traces[site].active(t)
+
+
+def trace_stats(traces: Sequence[SiteTrace]) -> dict:
+    durs = [w.duration_s / HOUR for tr in traces for w in tr.windows]
+    total = sum(durs)
+    return {
+        "n_windows": len(durs),
+        "mean_h": float(np.mean(durs)) if durs else 0.0,
+        "min_h": float(np.min(durs)) if durs else 0.0,
+        "max_h": float(np.max(durs)) if durs else 0.0,
+        "total_surplus_h": total,
+    }

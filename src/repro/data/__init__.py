@@ -1,0 +1,1 @@
+from repro.data.pipeline import SyntheticLMDataset, make_global_batch  # noqa: F401

@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the compute hot-spots (flash attention, int8
+quantize) with jnp reference oracles. See ops.py for backend dispatch."""
+from repro.kernels.ops import flash_attention, quantize_int8, dequantize_int8  # noqa: F401

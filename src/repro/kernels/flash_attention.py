@@ -1,0 +1,141 @@
+"""Pallas TPU flash attention (forward), VMEM-tiled online softmax.
+
+TPU-native adaptation (DESIGN.md §8): q tiles of BLOCK_Q=256 rows stream
+through VMEM while the kv reduction runs along the innermost grid axis;
+(m, l, acc) online-softmax carries live in VMEM scratch across kv steps.
+All matmul tile dims are multiples of the 128-lane MXU systolic width.
+Supports causal masking, sliding windows (gemma2 local layers), GQA head
+grouping via BlockSpec index maps, and tanh soft-capping — fused, so the
+masked QK^T logits never round-trip to HBM.
+
+Validated against kernels/ref.py in interpret mode (CPU) by
+tests/test_kernels.py; selected automatically on TPU by kernels/ops.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 256
+DEFAULT_BLOCK_K = 512
+NEG_INF = -2.0e38
+
+
+def _attn_kernel(
+    q_ref,  # (1, bq, 1, hd)
+    k_ref,  # (1, bk, 1, hd)
+    v_ref,  # (1, bk, 1, hd)
+    o_ref,  # (1, bq, 1, hd)
+    m_scr,  # (bq,) f32  running max
+    l_scr,  # (bq,) f32  running denom
+    acc_scr,  # (bq, hd) f32  running numerator
+    *,
+    mask_kind: str,
+    window: int,
+    attn_softcap: float,
+    block_q: int,
+    block_k: int,
+    n_k_blocks: int,
+):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]  # (bq, hd)
+    k = k_ref[0, :, 0, :]  # (bk, hd)
+    v = v_ref[0, :, 0, :]
+    hd = q.shape[-1]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * (hd ** -0.5)  # (bq, bk)
+    if attn_softcap:
+        s = attn_softcap * jnp.tanh(s / attn_softcap)
+
+    qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    if mask_kind != "full":
+        ok = kpos <= qpos
+        if mask_kind == "window" and window > 0:
+            ok &= (qpos - kpos) < window
+        s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])  # (bq, bk)
+    l_cur = l_scr[...] * alpha + jnp.sum(p, axis=1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + pv
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "mask_kind", "window", "attn_softcap", "block_q", "block_k", "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q: jax.Array,  # (b, s, nh, hd)
+    k: jax.Array,  # (b, t, nkv, hd)
+    v: jax.Array,
+    *,
+    mask_kind: str = "causal",
+    window: int = 0,
+    attn_softcap: float = 0.0,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, s, nh, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    group = nh // nkv
+    block_q = min(block_q, s)
+    block_k = min(block_k, t)
+    assert s % block_q == 0 and t % block_k == 0, (s, t, block_q, block_k)
+    n_q = s // block_q
+    n_k = t // block_k
+
+    grid = (b, nh, n_q, n_k)
+    kernel = functools.partial(
+        _attn_kernel,
+        mask_kind=mask_kind, window=window, attn_softcap=attn_softcap,
+        block_q=block_q, block_k=block_k, n_k_blocks=n_k,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi // group, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda bi, hi, qi, ki: (bi, ki, hi // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda bi, hi, qi, ki: (bi, qi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, nh, hd), q.dtype),
+        scratch_shapes=[
+            # (bq,) m, (bq,) l, (bq, hd) acc — f32 online-softmax VMEM carries
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

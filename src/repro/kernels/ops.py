@@ -1,0 +1,61 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On TPU backends the Pallas fast path is selected; on CPU (this container,
+incl. every dry-run lowering) the jnp reference executes — identical math,
+so tests/smoke runs and the roofline lowering are faithful. Override with
+REPRO_ATTN_IMPL / REPRO_QUANT_IMPL in {'pallas','ref','interpret'}.
+"""
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as ref_lib
+
+
+def _impl(env: str) -> str:
+    forced = os.environ.get(env, "").lower()
+    if forced in ("pallas", "ref", "interpret"):
+        return forced
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def flash_attention(
+    q, k, v, *, mask_kind="causal", window=0, attn_softcap=0.0,
+    qpos=None, kpos=None, impl=None,
+):
+    """GQA attention. qpos/kpos accepted for API parity with the decode path;
+    the kernel assumes dense left-aligned sequences (qpos==kpos==arange),
+    which is what train/prefill use."""
+    impl = impl or _impl("REPRO_ATTN_IMPL")
+    if impl == "ref":
+        return ref_lib.flash_attention_ref(
+            q, k, v, mask_kind=mask_kind, window=window, attn_softcap=attn_softcap
+        )
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, mask_kind=mask_kind, window=window, attn_softcap=attn_softcap,
+        interpret=(impl == "interpret"),
+    )
+
+
+def quantize_int8(x: jax.Array, *, block: int = 256, impl=None) -> Tuple[jax.Array, jax.Array]:
+    impl = impl or _impl("REPRO_QUANT_IMPL")
+    if impl == "ref":
+        return ref_lib.quantize_int8_ref(x, block=block)
+    from repro.kernels.quantize import quantize_int8_pallas
+
+    return quantize_int8_pallas(x, block=block, interpret=(impl == "interpret"))
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, *, block: int = 256, impl=None) -> jax.Array:
+    impl = impl or _impl("REPRO_QUANT_IMPL")
+    if impl == "ref":
+        return ref_lib.dequantize_int8_ref(q, scale, block=block)
+    from repro.kernels.quantize import dequantize_int8_pallas
+
+    return dequantize_int8_pallas(q, scale, interpret=(impl == "interpret"), block=block)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth for the allclose sweeps in
+tests/test_kernels.py, and double as the XLA execution path on non-TPU
+backends (CPU container, dry-run lowering).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (b, s, nh, hd)
+    k: jax.Array,  # (b, t, nkv, hd)
+    v: jax.Array,  # (b, t, nkv, hd)
+    *,
+    mask_kind: str = "causal",  # 'causal' | 'window' | 'full'
+    window: int = 0,
+    attn_softcap: float = 0.0,
+) -> jax.Array:
+    """Quadratic GQA attention oracle, f32 softmax, dense left-aligned
+    positions (qpos/kpos = arange)."""
+    b, s, nh, hd = q.shape
+    t, nkv = k.shape[1], k.shape[2]
+    g = nh // nkv
+    qg = q.reshape(b, s, nkv, g, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32) * (hd ** -0.5)
+    if attn_softcap:
+        scores = attn_softcap * jnp.tanh(scores / attn_softcap)
+    if mask_kind != "full":
+        qpos = jnp.arange(s)[:, None]
+        kpos = jnp.arange(t)[None, :]
+        ok = kpos <= qpos
+        if mask_kind == "window" and window > 0:
+            ok &= (qpos - kpos) < window
+        scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", probs, v)
+    return out.reshape(b, s, nh, hd)
+
+
+def quantize_int8_ref(x: jax.Array, block: int = 256) -> Tuple[jax.Array, jax.Array]:
+    """Per-block symmetric int8 quantization of a flat f32/bf16 array.
+    Returns (q int8 (n,), scales f32 (n_blocks,)). n must divide by block
+    (callers pad)."""
+    n = x.shape[0]
+    assert n % block == 0, (n, block)
+    xb = x.astype(jnp.float32).reshape(n // block, block)
+    amax = jnp.max(jnp.abs(xb), axis=1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    qv = jnp.clip(jnp.round(xb / scale[:, None]), -127, 127).astype(jnp.int8)
+    return qv.reshape(n), scale
+
+
+def dequantize_int8_ref(q: jax.Array, scale: jax.Array, block: int = 256) -> jax.Array:
+    n = q.shape[0]
+    qb = q.reshape(n // block, block).astype(jnp.float32)
+    return (qb * scale[:, None]).reshape(n)

@@ -1,0 +1,119 @@
+"""Shared primitive layers (pure-functional, params = nested dicts)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import shd
+
+
+def truncated_normal(key, shape, std, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(d: int, norm_type: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype=dtype)}
+    if norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, norm_type: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if norm_type == "rmsnorm":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        y = y + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_norm_1d(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    """RMSNorm over the last dim with an explicit scale vector (qk-norm)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+
+def activation(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu}[name]
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """tanh soft-capping (gemma2)."""
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, num_layers: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    out_std = 0.02 / max(1.0, (2.0 * num_layers) ** 0.5)
+    return {
+        "wi": truncated_normal(k1, (d, d_ff), 0.02, dtype),
+        "wg": truncated_normal(k2, (d, d_ff), 0.02, dtype),
+        "wo": truncated_normal(k3, (d_ff, d), out_std, dtype),
+    }
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    h = activation(act)(x @ p["wg"]) * (x @ p["wi"])
+    h = shd(h, "batch", "seq", "mlp_act")
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embed(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": truncated_normal(key, (vocab, d), 0.02, dtype)}
+
+
+def apply_embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+def apply_unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """x: (..., d) @ table.T -> logits.  ``table`` is (vocab, d) when tied
+    (embed table) or (d, vocab) for a dedicated unembed matrix."""
+    if table.shape[0] == x.shape[-1]:
+        logits = x @ table
+    else:
+        logits = x @ table.T
+    return shd(logits, "batch", "seq", "vocab_act")
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean token-level cross entropy in f32. labels < 0 are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = logz - gold
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

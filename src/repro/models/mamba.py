@@ -1,0 +1,153 @@
+"""Mamba-1 selective SSM mixer (jamba's non-attention layers).
+
+Training/prefill uses a chunked associative scan: sequence chunks are
+processed with `jax.lax.associative_scan` (parallel within a chunk) and the
+SSM state is carried across chunks with `jax.lax.scan`. This bounds the
+materialized (b, chunk, d_inner, d_state) discretization tensors to one chunk
+(VMEM/HBM-friendly) while remaining fully parallel inside the chunk.
+
+Decode is the O(1) recurrent update.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import truncated_normal
+from repro.parallel.sharding import shd
+
+CHUNK = 256
+
+
+def init_mamba(key, d: int, *, expand: int, d_state: int, d_conv: int, num_layers: int, dtype) -> dict:
+    d_in = expand * d
+    dt_rank = max(1, d // 16)
+    keys = jax.random.split(key, 6)
+    out_std = 0.02 / max(1.0, (2.0 * num_layers) ** 0.5)
+    # S4D-real initialization for A.
+    A = jnp.broadcast_to(jnp.arange(1, d_state + 1, dtype=jnp.float32), (d_in, d_state))
+    return {
+        "in_proj": truncated_normal(keys[0], (d, 2 * d_in), 0.02, dtype),
+        "conv_w": truncated_normal(keys[1], (d_conv, d_in), 0.02, dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": truncated_normal(keys[2], (d_in, dt_rank + 2 * d_state), 0.02, dtype),
+        "dt_proj": truncated_normal(keys[3], (dt_rank, d_in), dt_rank ** -0.5, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((d_in,), 0.01))).astype(dtype),
+        "A_log": jnp.log(A),  # f32
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": truncated_normal(keys[4], (d_in, d), out_std, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array, state=None):
+    """Depthwise causal conv along seq. x: (b, s, c), w: (k, c).
+    If `state` (b, k-1, c) is given, it is the left context (decode)."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)  # (b, s+k-1, c)
+    out = sum(xp[:, i : i + x.shape[1], :] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):, :] if k > 1 else None
+    return out + b, new_state
+
+
+def _ssm_params(p, xc, d_state):
+    """xc: (b, l, d_in) post-conv activations -> (dt, B, C) discretization."""
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"]  # (b, l, dt_rank + 2N)
+    dt_raw, B, C = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"].astype(jnp.float32))  # (b,l,d_in)
+    return dt.astype(jnp.float32), B.astype(jnp.float32), C.astype(jnp.float32)
+
+
+def _scan_chunk(h0, A, dt, B, C, x):
+    """One chunk of the selective scan.
+    h0: (b, d_in, N); dt: (b,l,d_in); B,C: (b,l,N); x: (b,l,d_in)."""
+    Abar = jnp.exp(dt[..., None] * (-jnp.exp(A))[None, None])  # (b,l,d_in,N)
+    Bx = (dt * x)[..., None] * B[:, :, None, :]  # (b,l,d_in,N)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, h_intra = jax.lax.associative_scan(combine, (Abar, Bx), axis=1)
+    h = h_intra + a_cum * h0[:, None]  # (b,l,d_in,N)
+    y = jnp.einsum("bldn,bln->bld", h, C)
+    return h[:, -1], y
+
+
+def apply_mamba(p: dict, x: jax.Array, *, d_state: int, act_dtype=None) -> jax.Array:
+    """Full-sequence forward. x: (b, s, d) -> (b, s, d)."""
+    b, s, d = x.shape
+    xz = x @ p["in_proj"]  # (b, s, 2*d_in)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shd(xi, "batch", "seq", None)
+    xc, _ = _causal_conv(xi, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dt, B, C = _ssm_params(p, xc, d_state)
+    xcf = xc.astype(jnp.float32)
+
+    d_in = xi.shape[-1]
+    n_chunks = max(1, s // CHUNK)
+    l = s // n_chunks
+    A = p["A_log"]
+
+    def step(h, inputs):
+        dt_c, B_c, C_c, x_c = inputs
+        h2, y = _scan_chunk(h, A, dt_c, B_c, C_c, x_c)
+        return h2, y
+
+    resh = lambda t: t.reshape(b, n_chunks, l, *t.shape[2:]).swapaxes(0, 1)
+    h0 = jnp.zeros((b, d_in, d_state), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (resh(dt), resh(B), resh(C), resh(xcf)))
+    y = ys.swapaxes(0, 1).reshape(b, s, d_in)
+    y = y + xcf * p["D"]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    y = shd(y, "batch", "seq", None)
+    return y @ p["out_proj"]
+
+
+# ---------------------------------------------------------------------------
+# Decode (recurrent)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba_state(batch: int, d: int, *, expand: int, d_state: int, d_conv: int, dtype):
+    d_in = expand * d
+    return {
+        "conv": jnp.zeros((batch, d_conv - 1, d_in), dtype),
+        "ssm": jnp.zeros((batch, d_in, d_state), jnp.float32),
+    }
+
+
+def mamba_state_spec(batch, d, *, expand, d_state, d_conv, dtype, long_context=False):
+    d_in = expand * d
+    conv = jax.ShapeDtypeStruct((batch, d_conv - 1, d_in), dtype)
+    ssm = jax.ShapeDtypeStruct((batch, d_in, d_state), jnp.float32)
+    inner = ("kv_long",) if long_context else ("model",)
+    return {"conv": conv, "ssm": ssm}, {
+        "conv": (None if long_context else "dp_batch", None, inner[0]),
+        "ssm": (None if long_context else "dp_batch", inner[0], None),
+    }
+
+
+def apply_mamba_decode(p: dict, x: jax.Array, state: dict, *, d_state: int):
+    """x: (b, 1, d); state: {'conv','ssm'} -> (y (b,1,d), new_state)."""
+    xz = x @ p["in_proj"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xc, conv_state = _causal_conv(xi, p["conv_w"], p["conv_b"], state=state["conv"])
+    xc = jax.nn.silu(xc)
+    dt, B, C = _ssm_params(p, xc, d_state)
+    A = -jnp.exp(p["A_log"])  # (d_in, N)
+    xcf = xc.astype(jnp.float32)
+    Abar = jnp.exp(dt[:, 0, :, None] * A[None])  # (b, d_in, N)
+    Bx = (dt[:, 0] * xcf[:, 0])[..., None] * B[:, 0, None, :]
+    h = Abar * state["ssm"] + Bx  # (b, d_in, N)
+    y = jnp.einsum("bdn,bn->bd", h, C[:, 0]) + xcf[:, 0] * p["D"]
+    y = (y[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"conv": conv_state.astype(state["conv"].dtype), "ssm": h}

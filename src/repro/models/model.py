@@ -1,0 +1,129 @@
+"""Unified model façade: build_model(cfg) -> Model with init / loss /
+forward / decode / input_specs, covering decoder-only LMs, hybrids, SSMs and
+the whisper encoder-decoder.
+
+``input_specs(shape_name)`` returns ShapeDtypeStruct stand-ins + logical
+partition specs for every model input — the dry-run lowers against these
+without allocating anything (assignment §MULTI-POD DRY-RUN item 2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SHAPES, ShapeSpec
+from repro.models import encdec as encdec_lib
+from repro.models import transformer as tfm
+
+
+@dataclass
+class Model:
+    cfg: ModelConfig
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> dict:
+        if self.cfg.is_encdec:
+            return encdec_lib.init_encdec(key, self.cfg)
+        return tfm.init_lm(key, self.cfg)
+
+    def init_eval_shape(self, key=None) -> dict:
+        """Param ShapeDtypeStructs without allocation (dry-run)."""
+        key = key if key is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.init, key)
+
+    # --------------------------------------------------------------- compute
+    def loss(self, params, batch, *, remat_policy: str = "full"):
+        if self.cfg.is_encdec:
+            return encdec_lib.encdec_loss(params, batch, self.cfg, remat_policy=remat_policy)
+        return tfm.lm_loss(params, batch, self.cfg, remat_policy=remat_policy)
+
+    def forward(self, params, batch, *, remat_policy: str = "full"):
+        if self.cfg.is_encdec:
+            return encdec_lib.encdec_forward(params, batch, self.cfg, remat_policy)
+        return tfm.lm_forward(params, batch, self.cfg, remat_policy=remat_policy)
+
+    def decode_step(self, params, cache, batch, *, long_context: bool = False):
+        if self.cfg.is_encdec:
+            return encdec_lib.encdec_decode_step(params, cache, batch, self.cfg)
+        return tfm.lm_decode_step(params, cache, batch, self.cfg, long_context=long_context)
+
+    # ----------------------------------------------------------------- cache
+    def cache_specs(self, batch: int, max_len: int, long_context: bool = False):
+        if self.cfg.is_encdec:
+            return encdec_lib.encdec_cache_specs(self.cfg, batch, max_len)
+        return tfm.cache_specs(self.cfg, batch, max_len, long_context)
+
+    def init_cache(self, batch: int, max_len: int, long_context: bool = False):
+        specs, _ = self.cache_specs(batch, max_len, long_context)
+        return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+
+    # ----------------------------------------------------------- input specs
+    def input_specs(self, shape_name: str) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+        """(ShapeDtypeStruct pytree, logical-axis pspec pytree) for the given
+        assigned shape. Decode shapes include the KV cache / SSM state."""
+        cfg = self.cfg
+        shape = SHAPES[shape_name]
+        B, S = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        long = shape_name == "long_500k"
+
+        if shape.kind in ("train", "prefill"):
+            specs: Dict[str, Any] = {}
+            pspecs: Dict[str, Any] = {}
+            if cfg.is_encdec:
+                specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dt)
+                pspecs["frames"] = ("batch", None, None)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+                pspecs["tokens"] = ("batch", "seq")
+            elif cfg.input_mode == "embeddings":
+                specs["embeds"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), dt)
+                pspecs["embeds"] = ("batch", "seq", None)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+                pspecs["tokens"] = ("batch", "seq")
+            if cfg.rope_type == "mrope":
+                specs["positions"] = jax.ShapeDtypeStruct((B, S, 3), i32)
+                pspecs["positions"] = ("batch", "seq", None)
+            if shape.kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+                pspecs["labels"] = ("batch", "seq")
+            return specs, pspecs
+
+        # decode: one new token against a cache of size S
+        cache_sds, cache_ps = self.cache_specs(B, S, long_context=long)
+        specs = {"cache": cache_sds, "index": jax.ShapeDtypeStruct((), i32)}
+        pspecs = {"cache": cache_ps, "index": ()}
+        if cfg.input_mode == "embeddings" and not cfg.is_encdec:
+            specs["embeds"] = jax.ShapeDtypeStruct((B, 1, cfg.d_model), dt)
+            pspecs["embeds"] = (None if long else "dp_batch", None, None)
+        else:
+            specs["token"] = jax.ShapeDtypeStruct((B,), i32)
+            pspecs["token"] = (None if long else "dp_batch",)
+        if cfg.rope_type == "mrope":
+            specs["positions"] = jax.ShapeDtypeStruct((B, 1, 3), i32)
+            pspecs["positions"] = (None if long else "dp_batch", None, None)
+        return specs, pspecs
+
+    # ------------------------------------------------------------ demo batch
+    def dummy_batch(self, shape_name: str, seed: int = 0):
+        """Concrete random batch matching input_specs (smoke tests/examples)."""
+        specs, _ = self.input_specs(shape_name)
+        key = jax.random.PRNGKey(seed)
+
+        def gen(path, s):
+            nonlocal key
+            key, sub = jax.random.split(key)
+            if jnp.issubdtype(s.dtype, jnp.integer):
+                hi = self.cfg.vocab_size if s.shape else 1
+                return jax.random.randint(sub, s.shape, 0, max(hi, 2), dtype=s.dtype)
+            return jax.random.normal(sub, s.shape, jnp.float32).astype(s.dtype)
+
+        return jax.tree_util.tree_map_with_path(gen, specs)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,70 @@
+"""Rotary position embeddings: standard RoPE and qwen2-vl M-RoPE."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """(head_dim/2,) inverse frequencies, f32."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(
+    x: jax.Array,  # (b, s, h, head_dim)
+    positions: jax.Array,  # (b, s) int32
+    theta: float,
+) -> jax.Array:
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (b, s, half)
+    cos = jnp.cos(angles)[:, :, None, :]  # (b, s, 1, half)
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: jax.Array,  # (b, s, h, head_dim)
+    positions: jax.Array,  # (b, s, 3) int32 — temporal / height / width ids
+    theta: float,
+    sections: Tuple[int, ...],  # half-dim split, e.g. (16, 24, 24)
+) -> jax.Array:
+    """qwen2-vl multimodal RoPE: the rotary half-dim is partitioned into
+    `sections`, each rotated by its own position stream (t/h/w)."""
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (half,)
+    # Build a (b, s, half) position matrix by picking the section's stream.
+    section_id = jnp.concatenate(
+        [jnp.full((n,), i, dtype=jnp.int32) for i, n in enumerate(sections)]
+    )  # (half,)
+    pos = jnp.take_along_axis(
+        positions.astype(jnp.float32),
+        jnp.broadcast_to(section_id, positions.shape[:-1] + (half,)).astype(jnp.int32),
+        axis=-1,
+    )  # (b, s, half)
+    angles = pos * freqs
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_positional(x, positions, rope_type: str, theta: float, sections=()):
+    if rope_type == "none":
+        return x
+    if rope_type == "mrope":
+        if positions.ndim == 2:  # text-only fallback: same stream thrice
+            positions = jnp.stack([positions] * 3, axis=-1)
+        return apply_mrope(x, positions, theta, sections)
+    if positions.ndim == 3:
+        positions = positions[..., 0]
+    return apply_rope(x, positions, theta)

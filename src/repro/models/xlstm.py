@@ -1,0 +1,283 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunk-parallel) and sLSTM (scalar
+memory, sequential scan), following arXiv:2405.04517.
+
+mLSTM stabilized recurrence (per head):
+    m_t = max(f̂_t + m_{t-1}, ĩ_t)                       (f̂ = log-forget)
+    C_t = e^{f̂_t + m_{t-1} - m_t} C_{t-1} + e^{ĩ_t - m_t} v_t k_tᵀ
+    n_t = e^{f̂_t + m_{t-1} - m_t} n_{t-1} + e^{ĩ_t - m_t} k_t
+    h_t = (C_t q_t) / max(|n_tᵀ q_t|, e^{-m_t})          (q scaled dh^-1/2)
+
+Chunk-parallel form: with b_t = Σ_{τ≤t} f̂_τ inside a chunk,
+    m_t = b_t + max(m_0 - b_0·0, cummax_τ≤t (ĩ_τ - b_τ))
+so the stabilizer is a `lax.cummax`, and both the intra-chunk contribution
+(decay-matrix masked q·kᵀ) and the inter-chunk contribution (carried C) are
+plain matmuls.  The recurrent form (`*_recurrent`) is kept as the oracle for
+property tests.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import activation, truncated_normal
+from repro.parallel.sharding import shd
+
+CHUNK = 256
+NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, d: int, num_heads: int, num_layers: int, dtype) -> dict:
+    d_in = 2 * d  # projection factor 2
+    dh = d_in // num_heads
+    ks = jax.random.split(key, 8)
+    out_std = 0.02 / max(1.0, (2.0 * num_layers) ** 0.5)
+    return {
+        "w_up": truncated_normal(ks[0], (d, 2 * d_in), 0.02, dtype),  # [x | z-gate]
+        # block-diagonal per-head q/k/v maps (xLSTM §mLSTM block)
+        "wq": truncated_normal(ks[1], (num_heads, dh, dh), 0.02, dtype),
+        "wk": truncated_normal(ks[2], (num_heads, dh, dh), 0.02, dtype),
+        "wv": truncated_normal(ks[3], (num_heads, dh, dh), 0.02, dtype),
+        "wi": truncated_normal(ks[4], (d_in, num_heads), 0.02, dtype),
+        "wf": truncated_normal(ks[5], (d_in, num_heads), 0.02, dtype),
+        "bi": jnp.zeros((num_heads,), dtype),
+        "bf": jnp.full((num_heads,), 3.0, dtype),  # open forget gates at init
+        "skip": jnp.ones((d_in,), dtype),
+        "w_down": truncated_normal(ks[6], (d_in, d), out_std, dtype),
+    }
+
+
+def _mlstm_qkvif(p, xi):
+    b, s, d_in = xi.shape
+    H, dh = p["wq"].shape[0], p["wq"].shape[1]
+    xh = xi.reshape(b, s, H, dh)
+    q = jnp.einsum("bshk,hkj->bshj", xh, p["wq"])
+    k = jnp.einsum("bshk,hkj->bshj", xh, p["wk"])
+    v = jnp.einsum("bshk,hkj->bshj", xh, p["wv"])
+    i_raw = (xi @ p["wi"] + p["bi"]).astype(jnp.float32)  # (b,s,H)
+    f_raw = (xi @ p["wf"] + p["bf"]).astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw)
+    return q, k, v, i_raw, logf
+
+
+def _mlstm_chunk(carry, q, k, v, i_raw, logf):
+    """One chunk. carry = (C (b,H,dh,dh), n (b,H,dh), m (b,H)).
+    q,k,v: (b,l,H,dh) f32; i_raw, logf: (b,l,H) f32."""
+    C0, n0, m0 = carry
+    b, l, H, dh = q.shape
+    scale = dh ** -0.5
+    bcs = jnp.cumsum(logf, axis=1)  # (b,l,H) inclusive
+    # stabilizer: m_t = b_t + max(m0, cummax(i_τ - b_τ))
+    g = jax.lax.cummax(i_raw - bcs, axis=1)
+    m = bcs + jnp.maximum(m0[:, None], g)  # (b,l,H)
+    # intra-chunk decay matrix  D_tj = exp(b_t - b_j + i_j - m_t),  j <= t
+    S = bcs[:, :, None, :] - bcs[:, None, :, :] + i_raw[:, None, :, :]  # (b,t,j,H)
+    tri = jnp.tril(jnp.ones((l, l), bool))
+    S = jnp.where(tri[None, :, :, None], S, NEG)
+    D = jnp.exp(S - m[:, :, None, :])  # (b,t,j,H)
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    scores = jnp.einsum("bthk,bjhk->btjh", qf, kf) * scale
+    w = scores * D  # w_tj = D_tj * (q_t . k_j) * scale
+    num_intra = jnp.einsum("btjh,bjhe->bthe", w, vf)
+    den_intra = jnp.sum(w, axis=2)  # (b,t,H) == sum_j w_tj  (n_t . q_t intra)
+    # inter-chunk: decay from carry  exp(m0 + b_t - m_t)
+    dec = jnp.exp(m0[:, None] + bcs - m)  # (b,l,H)
+    num_inter = jnp.einsum("bthk,bhke->bthe", qf * scale * dec[..., None], C0)
+    den_inter = jnp.einsum("bthk,bhk->bth", qf * scale * dec[..., None], n0)
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+    # end-of-chunk carry
+    bL = bcs[:, -1]  # (b,H)
+    mL = m[:, -1]
+    wC = jnp.exp(bL[:, None] - bcs + i_raw - mL[:, None])  # (b,l,H)
+    C1 = jnp.exp(m0 + bL - mL)[:, :, None, None] * C0 + jnp.einsum(
+        "blh,blhk,blhe->bhke", wC, k.astype(jnp.float32), v.astype(jnp.float32)
+    )
+    n1 = jnp.exp(m0 + bL - mL)[:, :, None] * n0 + jnp.einsum("blh,blhk->bhk", wC, k.astype(jnp.float32))
+    return (C1, n1, mL), h
+
+
+def mlstm_cell(q, k, v, i_raw, logf, carry=None, chunk: int = CHUNK):
+    """Chunk-parallel mLSTM over a full sequence.
+    q,k,v: (b,s,H,dh); i_raw/logf: (b,s,H) f32. Returns (h (b,s,H,dh) f32, carry)."""
+    b, s, H, dh = q.shape
+    if carry is None:
+        carry = (
+            jnp.zeros((b, H, dh, dh), jnp.float32),
+            jnp.zeros((b, H, dh), jnp.float32),
+            jnp.full((b, H), -jnp.inf, jnp.float32),
+        )
+    l = min(chunk, s)
+    n_chunks = max(1, s // l)
+    assert s % l == 0
+
+    resh = lambda t: t.reshape(b, n_chunks, l, *t.shape[2:]).swapaxes(0, 1)
+
+    def step(c, xs):
+        qc, kc, vc, ic, fc = xs
+        c2, h = _mlstm_chunk(c, qc, kc, vc, ic, fc)
+        return c2, h
+
+    carry, hs = jax.lax.scan(step, carry, (resh(q), resh(k), resh(v), resh(i_raw), resh(logf)))
+    h = hs.swapaxes(0, 1).reshape(b, s, H, dh)
+    return h, carry
+
+
+def mlstm_cell_recurrent(q, k, v, i_raw, logf, carry=None):
+    """Step-by-step oracle (property tests compare against mlstm_cell)."""
+    b, s, H, dh = q.shape
+    if carry is None:
+        carry = (
+            jnp.zeros((b, H, dh, dh), jnp.float32),
+            jnp.zeros((b, H, dh), jnp.float32),
+            jnp.full((b, H), -jnp.inf, jnp.float32),
+        )
+    scale = dh ** -0.5
+
+    def step(c, xs):
+        C, n, m = c
+        qt, kt, vt, it, ft = xs  # (b,H,dh) / (b,H)
+        qt, kt, vt = (a.astype(jnp.float32) for a in (qt, kt, vt))
+        m2 = jnp.maximum(ft + m, it)
+        fdec = jnp.exp(ft + m - m2)[..., None]
+        iin = jnp.exp(it - m2)[..., None]
+        C2 = fdec[..., None] * C + iin[..., None] * jnp.einsum("bhk,bhe->bhke", kt, vt)
+        n2 = fdec * n + iin * kt
+        den = jnp.einsum("bhk,bhk->bh", n2, qt * scale)
+        num = jnp.einsum("bhke,bhk->bhe", C2, qt * scale)
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m2))[..., None]
+        return (C2, n2, m2), h
+
+    sw = lambda t: t.swapaxes(0, 1)
+    carry, hs = jax.lax.scan(step, carry, (sw(q), sw(k), sw(v), sw(i_raw), sw(logf)))
+    return hs.swapaxes(0, 1), carry
+
+
+def apply_mlstm(p: dict, x: jax.Array, num_heads: int, state=None, decode: bool = False):
+    """Full mLSTM block. x: (b, s, d) -> (b, s, d) [+ state if decode]."""
+    xz = x @ p["w_up"]
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = shd(xi, "batch", "seq", None)
+    q, k, v, i_raw, logf = _mlstm_qkvif(p, xi)
+    if decode:
+        h, state = mlstm_cell_recurrent(q, k, v, i_raw, logf, carry=state)
+    else:
+        h, state = mlstm_cell(q, k, v, i_raw, logf, carry=state)
+    b, s, H, dh = h.shape
+    hflat = h.reshape(b, s, H * dh).astype(x.dtype) + xi * p["skip"]
+    y = hflat * jax.nn.silu(z)
+    y = shd(y, "batch", "seq", None)
+    out = y @ p["w_down"]
+    return (out, state) if decode else out
+
+
+def mlstm_state_spec(batch: int, d: int, num_heads: int, long_context=False):
+    d_in = 2 * d
+    dh = d_in // num_heads
+    specs = (
+        jax.ShapeDtypeStruct((batch, num_heads, dh, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, num_heads, dh), jnp.float32),
+        jax.ShapeDtypeStruct((batch, num_heads), jnp.float32),
+    )
+    ax = "kv_long" if long_context else "model"
+    pspecs = (
+        (None if long_context else "dp_batch", None, ax, None),
+        (None if long_context else "dp_batch", None, ax),
+        (None if long_context else "dp_batch", None),
+    )
+    return specs, pspecs
+
+
+def init_mlstm_state(batch: int, d: int, num_heads: int):
+    d_in = 2 * d
+    dh = d_in // num_heads
+    return (
+        jnp.zeros((batch, num_heads, dh, dh), jnp.float32),
+        jnp.zeros((batch, num_heads, dh), jnp.float32),
+        jnp.full((batch, num_heads), -jnp.inf, jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(key, d: int, num_heads: int, num_layers: int, dtype) -> dict:
+    dh = d // num_heads
+    ks = jax.random.split(key, 12)
+    p = {}
+    for i, g in enumerate("ifzo"):
+        p[f"w{g}"] = truncated_normal(ks[i], (d, d), 0.02, dtype)
+        p[f"r{g}"] = truncated_normal(ks[4 + i], (num_heads, dh, dh), 0.02 , dtype)
+        p[f"b{g}"] = (jnp.full((d,), 3.0, dtype) if g == "f" else jnp.zeros((d,), dtype))
+    dff = (d * 4) // 3
+    p["ffn_wi"] = truncated_normal(ks[8], (d, dff), 0.02, dtype)
+    p["ffn_wg"] = truncated_normal(ks[9], (d, dff), 0.02, dtype)
+    p["ffn_wo"] = truncated_normal(ks[10], (dff, d), 0.02 / max(1.0, (2.0 * num_layers) ** 0.5), dtype)
+    return p
+
+
+def _slstm_scan(p, x, num_heads: int, state=None):
+    """x: (b, s, d). Sequential scan (sLSTM is not parallelizable)."""
+    b, s, d = x.shape
+    dh = d // num_heads
+    if state is None:
+        z = jnp.zeros((b, d), jnp.float32)
+        state = {"c": z, "n": z + 1e-6, "h": z, "m": jnp.zeros((b, d), jnp.float32)}
+
+    pre = {g: x @ p[f"w{g}"] + p[f"b{g}"] for g in "ifzo"}  # (b,s,d) each
+
+    def rmul(h, r):  # block-diagonal per-head recurrent matmul
+        hh = h.reshape(b, num_heads, dh)
+        return jnp.einsum("bhk,hkj->bhj", hh, r).reshape(b, d)
+
+    def step(st, xs):
+        xi, xf, xz, xo = xs
+        h_prev = st["h"].astype(x.dtype)
+        it = (xi + rmul(h_prev, p["ri"])).astype(jnp.float32)
+        ft = (xf + rmul(h_prev, p["rf"])).astype(jnp.float32)
+        zt = jnp.tanh((xz + rmul(h_prev, p["rz"])).astype(jnp.float32))
+        ot = jax.nn.sigmoid((xo + rmul(h_prev, p["ro"])).astype(jnp.float32))
+        logf = jax.nn.log_sigmoid(ft)
+        m2 = jnp.maximum(logf + st["m"], it)
+        i_ = jnp.exp(it - m2)
+        f_ = jnp.exp(logf + st["m"] - m2)
+        c2 = f_ * st["c"] + i_ * zt
+        n2 = f_ * st["n"] + i_
+        h2 = ot * c2 / jnp.maximum(n2, 1e-6)
+        return {"c": c2, "n": n2, "h": h2, "m": m2}, h2
+
+    sw = lambda t: t.swapaxes(0, 1)
+    state, hs = jax.lax.scan(step, state, (sw(pre["i"]), sw(pre["f"]), sw(pre["z"]), sw(pre["o"])))
+    return hs.swapaxes(0, 1).astype(x.dtype), state
+
+
+def apply_slstm(p: dict, x: jax.Array, num_heads: int, act: str = "gelu", state=None, decode: bool = False):
+    h, state = _slstm_scan(p, x, num_heads, state=state)
+    # post gated FFN (pf 4/3)
+    y = activation(act)(h @ p["ffn_wg"]) * (h @ p["ffn_wi"])
+    out = y @ p["ffn_wo"]
+    return (out, state) if decode else out
+
+
+def slstm_state_spec(batch: int, d: int, long_context=False):
+    sd = jax.ShapeDtypeStruct((batch, d), jnp.float32)
+    ax = "kv_long" if long_context else "model"
+    ps = (None if long_context else "dp_batch", ax)
+    return (
+        {"c": sd, "n": sd, "h": sd, "m": sd},
+        {"c": ps, "n": ps, "h": ps, "m": ps},
+    )
+
+
+def init_slstm_state(batch: int, d: int):
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z + 1e-6, "h": z, "m": z}

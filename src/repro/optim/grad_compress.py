@@ -1,0 +1,73 @@
+"""Gradient compression for the cross-pod (DCN) data-parallel reduction —
+the paper's §VIII 'periodic synchronization of compressed model deltas'
+applied to the gradient path.
+
+Two entry points:
+
+  compress_roundtrip(grads)
+      int8 quantize->dequantize round trip (per-256 block, kernels/quantize).
+      Numerically models the compression loss anywhere (pjit path); the
+      beyond-paper dry-run variant uses it inside shard_map so the DCN
+      all-reduce moves int8+scales instead of bf16 (4-8x fewer bytes).
+
+  crosspod_allgather_mean_int8(grads, axis_name='pod')
+      Inside shard_map over the pod axis: quantize local grads, all_gather
+      the int8 payload + scales across pods, dequantize and average.
+      DCN bytes per pod = (P-1)/P · size/4 of the bf16 ring all-reduce.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+
+BLOCK = 256
+
+
+def _quant_leaf(g: jax.Array):
+    flat = g.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    q, s = kops.quantize_int8(flat, block=BLOCK)
+    return q, s, n
+
+
+def _dequant_leaf(q, s, n, shape, dtype):
+    flat = kops.dequantize_int8(q, s, block=BLOCK)
+    return flat[:n].reshape(shape).astype(dtype)
+
+
+def compress_roundtrip(grads: Any) -> Any:
+    """Quantize->dequantize every floating leaf (models int8 DCN traffic)."""
+
+    def f(g):
+        if not jnp.issubdtype(g.dtype, jnp.floating) or g.size < BLOCK:
+            return g
+        q, s, n = _quant_leaf(g)
+        return _dequant_leaf(q, s, n, g.shape, g.dtype)
+
+    return jax.tree.map(f, grads)
+
+
+def crosspod_allgather_mean_int8(grads: Any, axis_name: str = "pod") -> Any:
+    """Per-pod int8 all-gather + local dequant/average. Call inside
+    shard_map(..., mesh axis `axis_name`)."""
+    npods = jax.lax.axis_size(axis_name)
+
+    def f(g):
+        if not jnp.issubdtype(g.dtype, jnp.floating) or g.size < BLOCK:
+            return jax.lax.pmean(g, axis_name)
+        q, s, n = _quant_leaf(g)
+        qs = jax.lax.all_gather(q, axis_name)  # (npods, n_padded) int8 on DCN
+        ss = jax.lax.all_gather(s, axis_name)
+        acc = jnp.zeros(g.size + (-g.size) % BLOCK, jnp.float32)
+        for p in range(npods):
+            acc = acc + kops.dequantize_int8(qs[p], ss[p], block=BLOCK)
+        return (acc[: g.size] / npods).reshape(g.shape).astype(g.dtype)
+
+    return jax.tree.map(f, grads)

@@ -1,0 +1,2 @@
+from repro.train.train_step import make_train_step, make_eval_step, TrainStepConfig  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

@@ -1,0 +1,73 @@
+"""jit-able train/eval steps: loss -> grads -> (optional int8 DCN
+compression) -> AdamW. Pure functions of (params, opt_state, batch)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.optim.adamw import AdamWConfig, apply_updates
+from repro.optim.grad_compress import compress_roundtrip
+from repro.optim.schedule import cosine_schedule
+
+
+@dataclass(frozen=True)
+class TrainStepConfig:
+    opt: AdamWConfig = AdamWConfig()
+    remat_policy: str = "full"
+    grad_compress: bool = False  # int8 round-trip on grads (cross-pod DCN model)
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    microbatch: int = 0  # >0: gradient accumulation over seq-of-microbatches
+
+
+def make_train_step(model: Model, cfg: TrainStepConfig) -> Callable:
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch, remat_policy=cfg.remat_policy)
+        return loss, metrics
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state, batch):
+        if cfg.microbatch and cfg.microbatch > 1:
+            n = cfg.microbatch
+
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n, b // n, *x.shape[1:])
+
+            micro = jax.tree.map(split, batch)
+
+            def acc_fn(carry, mb):
+                (l, m), g = grads_of(params, mb)
+                gsum, lsum = carry
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), m
+
+            zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), ms = jax.lax.scan(acc_fn, (zero, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            loss = lsum / n
+            metrics = jax.tree.map(lambda x: x[-1], ms)
+        else:
+            (loss, metrics), grads = grads_of(params, batch)
+        if cfg.grad_compress:
+            grads = compress_roundtrip(grads)
+        lr_scale = cosine_schedule(
+            opt_state["step"] + 1, warmup=cfg.warmup_steps, total=cfg.total_steps
+        )
+        params, opt_state, om = apply_updates(params, grads, opt_state, cfg.opt, lr_scale)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def make_eval_step(model: Model, remat_policy: str = "none") -> Callable:
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, remat_policy=remat_policy)
+        return {"loss": loss, **metrics}
+
+    return eval_step

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on the single real CPU device (the 512-device override is
+# dryrun.py-only, per the assignment).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,58 @@
+"""Dry-run machinery: HLO collective parsing unit tests + one real
+(arch × shape × 256-device mesh) lowering in a subprocess (the 512-device
+override must not leak into this test process, per the assignment)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.dryrun import _shape_bytes, collective_bytes
+
+HLO = """
+  %ag = bf16[16,4096,5120]{2,1,0} all-gather(bf16[1,4096,5120]{2,1,0} %p), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %x), to_apply=%add
+  %rs = f32[64,128]{1,0} reduce-scatter(f32[1024,128]{1,0} %y), dimensions={0}
+  %a2a = (f32[8,32]{1,0}, f32[8,32]{1,0}) all-to-all(f32[8,32]{1,0} %a, f32[8,32]{1,0} %b), dimensions={0}
+  %cp = u32[2]{0} collective-permute(u32[2]{0} %c), source_target_pairs={{0,1}}
+  %notacoll = f32[4]{0} add(f32[4]{0} %d, f32[4]{0} %e)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[16,4096,5120]") == 16 * 4096 * 5120 * 2
+    assert _shape_bytes("f32[1024]") == 4096
+    assert _shape_bytes("(f32[8,32], f32[8,32])") == 2 * 8 * 32 * 4
+
+
+def test_collective_bytes_parse():
+    got = collective_bytes(HLO)
+    assert got["all-gather"] == 16 * 4096 * 5120 * 2
+    assert got["all-reduce"] == 1024 * 4
+    assert got["reduce-scatter"] == 64 * 128 * 4
+    assert got["all-to-all"] == 2 * 8 * 32 * 4
+    assert got["collective-permute"] == 2 * 4
+    assert "add" not in got
+
+
+@pytest.mark.slow
+def test_one_cell_lowers_on_production_mesh(tmp_path):
+    """Deliverable (e) spot check: a real cell lowers+compiles on the
+    16x16 production mesh (full sweep lives in launch/dryrun.py --all)."""
+    code = (
+        "from repro.launch.dryrun import lower_cell\n"
+        "import json\n"
+        "r = lower_cell('qwen3-1.7b', 'decode_32k', multi_pod=False, save_artifact=False)\n"
+        "print(json.dumps({'status': r['status'], 'peak': r['memory']['peak_bytes']}))\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run(
+        [sys.executable, "-c", code], env=env, capture_output=True, text=True,
+        timeout=600,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["status"] == "OK"
+    assert rec["peak"] < 16 * 2 ** 30  # fits v5e HBM

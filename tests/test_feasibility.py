@@ -1,0 +1,149 @@
+"""Feasibility-domain model: unit values from the paper + hypothesis
+property tests."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import feasibility as fz
+
+GB = 1e9
+
+
+# ---------------------------------------------------------------------------
+# Paper-anchored unit values
+# ---------------------------------------------------------------------------
+
+
+def test_transfer_time_table_iii():
+    # Table III: checkpoint transfer times vs WAN speeds
+    cases = [
+        (1 * GB, 100e6, 80.0),  # 1m20s (paper rounds to 1m25s w/ overheads)
+        (1 * GB, 1e9, 8.0),  # 8.6 s in paper (8 S/B = 8.0 exact)
+        (1 * GB, 10e9, 0.8),
+        (16 * GB, 10e9, 12.8),  # paper: 13.8 s
+        (40 * GB, 10e9, 32.0),  # paper: 34 s
+        (100 * GB, 10e9, 80.0),  # paper: 86 s
+        (100 * GB, 100e9, 8.0),  # paper: 8.6 s
+    ]
+    for size, bw, want in cases:
+        got = float(fz.transfer_time_s(size, bw))
+        assert got == pytest.approx(want, rel=0.01)
+
+
+def test_breakeven_example_section_iv_d():
+    # §IV.D: 40 GB @ 10 Gbps -> E_cost = 0.016 kWh, T_BE ≈ 1.3 min
+    e = float(fz.migration_energy_kwh(40 * GB, 10e9))
+    assert e == pytest.approx(1.8 * (8 * 40 / 10) / 3600, rel=1e-6)
+    assert e == pytest.approx(0.016, rel=0.01)
+    t_be = float(fz.breakeven_time_s(40 * GB, 10e9))
+    assert t_be == pytest.approx(0.016 / 0.75 * 3600, rel=0.01)
+    assert 60 < t_be < 120  # "≈ 1.3 minutes"
+
+
+def test_classification_thresholds():
+    # §VI.D: A < 60 s, B < 300 s, C otherwise
+    assert int(fz.classify(1 * GB, 10e9)) == 0
+    assert int(fz.classify(70 * GB, 10e9)) == 0  # 56 s
+    assert int(fz.classify(80 * GB, 10e9)) == 1  # 64 s
+    assert int(fz.classify(300 * GB, 10e9)) == 1  # 240 s
+    assert int(fz.classify(400 * GB, 10e9)) == 2  # 320 s
+    # Table IV size bands (~1 Gbps equivalence)
+    assert int(fz.classify_by_size(5 * GB)) == 0
+    assert int(fz.classify_by_size(40 * GB)) == 1
+    assert int(fz.classify_by_size(200 * GB)) == 2
+
+
+def test_energy_always_feasible_within_caiso_windows():
+    """Critical Finding (§IV.D): breakeven ≪ even the shortest curtailment
+    window (2.5 h) for checkpoints up to 1 TB at 10 Gbps."""
+    sizes = np.array([1, 10, 40, 100, 300, 1000]) * GB
+    t_be = np.asarray(fz.breakeven_time_s(sizes, 10e9))
+    assert (t_be < 2.5 * 3600).all()
+    # and within minutes for the Fig. 1 range (1-100 GB)
+    assert (t_be[:4] < 5 * 60).all()
+
+
+def test_evaluate_paper_boundary_case():
+    # 40 GB, 10 Gbps, 2.5 h window: t_cost = 32+10.3+0.4 = 42.7 s < 900 s => ok
+    v = fz.evaluate(40 * GB, 10e9, 2.5 * 3600)
+    assert bool(v.feasible)
+    # same at 1 Gbps: T_transfer = 320 s -> class C -> never migrated
+    v = fz.evaluate(40 * GB, 1e9, 2.5 * 3600)
+    assert not bool(v.feasible)
+    assert int(v.workload_class) == 2
+
+
+def test_phase_diagram_shape_and_monotonicity():
+    sizes = np.logspace(0, 3, 13)  # 1 GB .. 1 TB
+    bws = np.array([0.1, 1.0, 10.0, 100.0])
+    d = fz.phase_diagram(sizes, bws)
+    assert d["class"].shape == (13, 4)
+    # class is monotone nondecreasing in size, nonincreasing in bandwidth
+    assert (np.diff(d["class"], axis=0) >= 0).all()
+    assert (np.diff(d["class"], axis=1) <= 0).all()
+    # Key Insight: sub-20 GB migrates efficiently at 10 Gbps
+    i20 = np.searchsorted(sizes, 20.0)
+    assert (d["class"][:i20, 2] == 0).all()
+
+
+# ---------------------------------------------------------------------------
+# Property-based invariants
+# ---------------------------------------------------------------------------
+
+sizes_st = st.floats(min_value=1e6, max_value=1e13)  # 1 MB .. 10 TB
+bw_st = st.floats(min_value=1e6, max_value=1e12)  # 1 Mbps .. 1 Tbps
+win_st = st.floats(min_value=60.0, max_value=24 * 3600.0)
+
+
+@settings(max_examples=200, deadline=None)
+@given(sizes_st, bw_st, win_st, sizes_st)
+def test_feasibility_monotone_in_size(size, bw, window, size2):
+    """A larger checkpoint is never *more* feasible (all else equal)."""
+    lo, hi = sorted([size, size2])
+    v_lo = fz.evaluate(lo, bw, window)
+    v_hi = fz.evaluate(hi, bw, window)
+    assert bool(v_hi.feasible) <= bool(v_lo.feasible)
+    assert int(v_hi.workload_class) >= int(v_lo.workload_class)
+
+
+@settings(max_examples=200, deadline=None)
+@given(sizes_st, bw_st, bw_st, win_st)
+def test_feasibility_monotone_in_bandwidth(size, bw, bw2, window):
+    lo, hi = sorted([bw, bw2])
+    v_lo = fz.evaluate(size, lo, window)
+    v_hi = fz.evaluate(size, hi, window)
+    assert bool(v_lo.feasible) <= bool(v_hi.feasible)
+
+
+@settings(max_examples=200, deadline=None)
+@given(sizes_st, bw_st, win_st)
+def test_feasible_implies_all_constraints(size, bw, window):
+    v = fz.evaluate(size, bw, window)
+    if bool(v.feasible):
+        assert float(v.t_cost_s) < fz.ALPHA * window
+        assert float(v.t_breakeven_s) < window
+        assert int(v.workload_class) != 2
+        # eq.(1) decomposition holds
+        assert float(v.t_cost_s) == pytest.approx(
+            float(v.t_transfer_s) + fz.T_LOAD_S + fz.T_DOWNTIME_S, rel=1e-6
+        )
+
+
+@settings(max_examples=100, deadline=None)
+@given(sizes_st, bw_st, win_st, st.floats(min_value=1.0, max_value=3600.0))
+def test_stochastic_tighter_than_deterministic(size, bw, window, sigma):
+    """ε-feasibility with ε<0.5 is strictly more conservative than the
+    deterministic check at the forecast mean (§VI.H)."""
+    stoch = bool(fz.stochastic_feasible(size, bw, window, sigma, eps=0.05))
+    det = float(fz.migration_cost_s(size, bw)) < fz.ALPHA * window
+    assert stoch <= det
+
+
+@settings(max_examples=100, deadline=None)
+@given(sizes_st, bw_st)
+def test_breakeven_ratio_is_power_ratio(size, bw):
+    """T_BE / T_transfer == P_sys / P_node exactly (§VI.B)."""
+    r = float(fz.breakeven_time_s(size, bw)) / float(fz.transfer_time_s(size, bw))
+    assert r == pytest.approx(fz.P_SYS_KW / fz.P_NODE_KW, rel=1e-6)

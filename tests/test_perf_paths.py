@@ -1,0 +1,104 @@
+"""The §Perf optimization paths: capacity MoE numerics, sharding
+strategies, shape-aware constraint pruning, decode partial-softmax flag."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import moe as moe_lib
+from repro.parallel.sharding import DEFAULT_RULES, force_mesh_axes, logical_spec
+from repro.parallel.strategies import STRATEGIES, get_strategy
+
+
+def test_capacity_moe_matches_dense_at_ample_capacity():
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), 32, 64, 8, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y_dense, aux_d = moe_lib.apply_moe(p, x, top_k=2, act="silu", impl="dense")
+    y_cap, aux_c = moe_lib.apply_moe_capacity(
+        p, x, top_k=2, act="silu", capacity_factor=32.0, block=16
+    )
+    np.testing.assert_allclose(np.asarray(y_dense), np.asarray(y_cap), atol=1e-6)
+    np.testing.assert_allclose(float(aux_d), float(aux_c), rtol=1e-6)
+
+
+def test_capacity_moe_drops_are_bounded():
+    """At cf=1.5 only a minority of outputs are affected by capacity drops
+    (Switch-style), and dropped-token outputs shrink, never explode."""
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), 32, 64, 8, 4, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 32))
+    y_dense, _ = moe_lib.apply_moe(p, x, top_k=2, act="silu", impl="dense")
+    y_cap, _ = moe_lib.apply_moe_capacity(p, x, top_k=2, act="silu",
+                                          capacity_factor=1.5, block=16)
+    touched = float(jnp.mean(jnp.any(jnp.abs(y_dense - y_cap) > 1e-6, axis=-1)))
+    assert touched < 0.5
+    assert float(jnp.max(jnp.abs(y_cap))) <= float(jnp.max(jnp.abs(y_dense))) * 2 + 1.0
+
+
+def test_moe_env_dispatch(monkeypatch):
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), 16, 32, 4, 2, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 16))
+    monkeypatch.setenv("REPRO_MOE_IMPL", "capacity")
+    y_env, _ = moe_lib.apply_moe(p, x, top_k=2, act="silu")
+    y_cap, _ = moe_lib.apply_moe_capacity(p, x, top_k=2, act="silu")
+    np.testing.assert_array_equal(np.asarray(y_env), np.asarray(y_cap))
+
+
+def test_all_strategies_resolve():
+    for name in ("baseline", "tp-ffn", "small-repl", "decode-tp", "moe-blocked", "seq-data"):
+        assert name in STRATEGIES
+        r = get_strategy(name)
+        assert r.get("batch") is not None or name in ("seq-data",)
+    with pytest.raises(KeyError):
+        get_strategy("nope")
+
+
+def test_decode_tp_strategy_avoids_weight_movement_axes():
+    r = get_strategy("decode-tp")
+    assert r.get("embed") is None  # d_model dims replicated
+    assert r.get("mlp") == "model"  # FFN column-parallel
+    assert r.get("head_dim") == "model"  # always divisible (128/16)
+
+
+def test_logical_spec_dedup_and_unconstrained():
+    from jax.sharding import PartitionSpec as P
+
+    with force_mesh_axes(("data", "model")):
+        # 'seq' and 'mlp_act' both -> model under tp-ffn-like overrides:
+        from repro.parallel.sharding import use_rules
+
+        with use_rules(DEFAULT_RULES.with_overrides(mlp_act="model")):
+            spec = logical_spec("batch", "seq", "mlp_act")
+        assert spec == P("data", "model", None)  # first claim wins
+        spec2 = logical_spec("*", "seq")
+        assert spec2[0] is P.UNCONSTRAINED
+
+
+def test_shd_shape_aware_pruning():
+    """A size-1 dim must never claim a mesh axis (the decode bug that caused
+    full-weight gathers — EXPERIMENTS.md §Perf decode-tp)."""
+    mesh = jax.make_mesh((1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.parallel.sharding import shd, use_rules
+
+    with mesh, use_rules(DEFAULT_RULES.with_overrides(seq="model", mlp_act="model")):
+        x = jnp.ones((2, 1, 8))
+        y = shd(x, "batch", "seq", "mlp_act")  # seq dim=1: 'model' must go to mlp_act
+        assert y.shape == x.shape
+
+
+def test_decode_sharded_softmax_flag_numerics(monkeypatch):
+    """REPRO_DECODE_SHARDED only adds sharding constraints — never changes
+    the math (single-device check)."""
+    from repro.configs import get_config
+    from repro.models import build_model
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = model.init_cache(2, 8)
+    batch = {"token": jnp.array([1, 2], jnp.int32), "index": jnp.int32(0)}
+    outs = {}
+    for flag in ("0", "1"):
+        monkeypatch.setenv("REPRO_DECODE_SHARDED", flag)
+        logits, _ = model.decode_step(params, cache, dict(batch))
+        outs[flag] = np.asarray(logits)
+    np.testing.assert_allclose(outs["0"], outs["1"], atol=1e-6)

@@ -1,0 +1,87 @@
+"""Sharding rules: divisibility pruning, mesh-axis pruning, duplicate-axis
+prevention, param pspecs on real models."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ASSIGNED, get_config
+from repro.models import build_model
+from repro.optim.adamw import init_opt_state
+from repro.parallel.sharding import (
+    DEFAULT_RULES, force_mesh_axes, logical_spec, param_pspecs, use_rules,
+)
+
+
+class FakeMesh:
+    """Carry axis names+sizes without devices (tests run on 1 CPU)."""
+
+    def __init__(self, names, shape):
+        self.axis_names = tuple(names)
+        self.devices = np.empty(shape)
+
+
+MESH = FakeMesh(("data", "model"), (16, 16))
+MESH3 = FakeMesh(("pod", "data", "model"), (2, 16, 16))
+
+
+@pytest.mark.parametrize("arch", list(ASSIGNED))
+def test_param_pspecs_valid_for_all_archs(arch):
+    """Every param leaf gets a spec with (a) rank == ndim, (b) no duplicate
+    mesh axis, (c) every sharded dim divisible by the axis size."""
+    cfg = get_config(arch)
+    model = build_model(cfg)
+    sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    for mesh in (MESH, MESH3):
+        specs = param_pspecs(sds, DEFAULT_RULES, mesh)
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        leaves = jax.tree_util.tree_leaves_with_path(
+            specs, is_leaf=lambda x: isinstance(x, P)
+        )
+        assert leaves
+        flat_sds = {
+            jax.tree_util.keystr(p): l
+            for p, l in jax.tree_util.tree_flatten_with_path(sds)[0]
+        }
+        for path, spec in leaves:
+            leaf = flat_sds[jax.tree_util.keystr(path)]
+            assert len(spec) <= len(leaf.shape)
+            used = []
+            for dim, ax in zip(leaf.shape, tuple(spec) + (None,) * (len(leaf.shape) - len(spec))):
+                if ax is None:
+                    continue
+                axes = ax if isinstance(ax, tuple) else (ax,)
+                n = int(np.prod([sizes[a] for a in axes]))
+                assert dim % n == 0, (arch, jax.tree_util.keystr(path), leaf.shape, spec)
+                used.extend(axes)
+            assert len(used) == len(set(used)), (arch, path, spec)
+
+
+def test_opt_state_mirrors_param_sharding():
+    cfg = get_config("qwen3-1.7b").reduced()
+    model = build_model(cfg)
+    sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    opt_sds = jax.eval_shape(init_opt_state, sds)
+    specs = param_pspecs(sds, DEFAULT_RULES, MESH)
+    opt_specs = param_pspecs(opt_sds, DEFAULT_RULES, MESH)
+    # m / v / master use the same spec tree as the params
+    assert opt_specs["m"] == specs
+    assert opt_specs["v"] == specs
+    assert opt_specs["master"] == specs
+    assert opt_specs["step"] == P()
+
+
+def test_logical_spec_prunes_missing_axes():
+    with force_mesh_axes(("data", "model")):
+        assert logical_spec("batch", "seq") == P("data", "model")  # pod pruned
+    with force_mesh_axes(("pod", "data", "model")):
+        assert logical_spec("batch", "seq") == P(("pod", "data"), "model")
+    with force_mesh_axes(()):
+        pass
+
+
+def test_rules_override():
+    rules = DEFAULT_RULES.with_overrides(seq=None, mlp_act="model")
+    with use_rules(rules), force_mesh_axes(("data", "model")):
+        assert logical_spec("seq") == P(None)
+        assert logical_spec("mlp_act") == P("model")
