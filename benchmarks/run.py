@@ -4,6 +4,8 @@ Each prints its table then a ``name,us_per_call,derived`` CSV line.
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run --fast     # smaller sims
   PYTHONPATH=src python -m benchmarks.run --only table6_policy
+  PYTHONPATH=src python -m benchmarks.run --quick    # CI perf smoke:
+      full 7-day/240-job paper-table6 sim, prints wall time + ticks/sec
 """
 from __future__ import annotations
 
@@ -12,11 +14,36 @@ import sys
 import traceback
 
 
+def quick_smoke() -> int:
+    """Perf gate for the orchestration hot loop: the headline 7-day/240-job
+    run under the ``paper-table6`` scenario, end to end, with ticks/sec."""
+    from repro.core import ClusterSimulator
+
+    print("name,us_per_call,derived")
+    ok = True
+    for policy in ("feasibility-aware", "energy-only"):
+        sim = ClusterSimulator.from_scenario("paper-table6", policy)
+        r = sim.run()
+        print(f"[quick] {policy}: {r.wall_time_s:.2f}s wall for {r.ticks} ticks "
+              f"({r.ticks_per_sec:.0f} ticks/sec) | grid={r.grid_kwh:.1f} kWh "
+              f"renew_frac={r.renewable_fraction:.2f} migrations={r.migrations} "
+              f"completed={r.completed}")
+        print(f"quick_{policy},{r.wall_time_s * 1e6:.0f},"
+              f"{r.ticks_per_sec:.0f} ticks/sec")
+        ok &= r.completed == len(r.jobs)
+    return 0 if ok else 1
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true", help="smaller trace-driven sims")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--quick", action="store_true",
+                    help="perf smoke only: 7-day/240-job sim + ticks/sec")
     args = ap.parse_args()
+
+    if args.quick:
+        sys.exit(quick_smoke())
 
     from benchmarks import (
         fig1_breakeven, fig2_phase, roofline, table1_hardware,

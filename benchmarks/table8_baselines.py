@@ -1,10 +1,9 @@
 """Paper Table VIII: comparison with baselines incl. the perfect-forecast
-Oracle. Shares the simulator runs with table6 (same trace, same jobs)."""
+Oracle. Consumes the ``paper-table6`` scenario (same trace, same jobs as
+table6) at 1 Gbps effective per-flow bandwidth."""
 from __future__ import annotations
 
-import dataclasses
-
-from repro.core import SimConfig, normalized_table, run_policy_comparison
+from repro.core import normalized_table, run_policy_comparison
 
 from benchmarks.common import emit, table, timed
 
@@ -19,11 +18,12 @@ PAPER = {
 def run(fast: bool = False):
     hold = {}
     with timed(hold):
-        cfg = SimConfig(dt_s=120.0 if fast else 60.0,
-                        n_jobs=120 if fast else 240,
-                        days=4 if fast else 7,
-                        wan_gbps=1.0)  # effective per-flow (see table6/EXPERIMENTS)
-        rows = normalized_table(run_policy_comparison(cfg))
+        overrides = dict(dt_s=120.0 if fast else 60.0,
+                         n_jobs=120 if fast else 240,
+                         days=4 if fast else 7,
+                         wan_gbps=1.0)  # effective per-flow (see table6/EXPERIMENTS)
+        rows = normalized_table(run_policy_comparison(
+            scenario="paper-table6", overrides=overrides))
         out = []
         for r in rows:
             red = 1.0 - r["nonrenew_energy"]

@@ -1,13 +1,15 @@
-"""7-day green-cluster simulation: renewable-window timeline + the paper's
-policy comparison (Table VI/VIII) on one shared trace.
+"""Green-cluster simulation driven by the scenario registry: renewable-
+window timeline + the paper's policy comparison (Table VI/VIII) on one
+shared trace, for any registered scenario.
 
-  PYTHONPATH=src python examples/green_cluster_sim.py [--days 7] [--wan 1.0]
+  PYTHONPATH=src python examples/green_cluster_sim.py
+  PYTHONPATH=src python examples/green_cluster_sim.py --scenario flaky-wan
+  PYTHONPATH=src python examples/green_cluster_sim.py --list
 """
 import argparse
 
 from repro.core import (
-    SimConfig, generate_trace, normalized_table, run_policy_comparison,
-    trace_stats,
+    available_scenarios, get_scenario, run_policy_comparison, trace_stats,
 )
 
 HOUR = 3600.0
@@ -27,20 +29,46 @@ def ascii_timeline(traces, days, width=96):
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--days", type=int, default=7)
-    ap.add_argument("--jobs", type=int, default=240)
-    ap.add_argument("--wan", type=float, default=1.0,
-                    help="effective per-flow WAN Gbps (see EXPERIMENTS.md)")
-    ap.add_argument("--dt", type=float, default=60.0)
-    ap.add_argument("--failures", type=float, default=0.0,
-                    help="node failures per slot-hour (beyond-paper fault injection)")
+    ap.add_argument("--scenario", default="paper-table6",
+                    help=f"one of: {', '.join(available_scenarios())}")
+    ap.add_argument("--list", action="store_true", help="list scenarios and exit")
+    ap.add_argument("--days", type=int, default=None)
+    ap.add_argument("--jobs", type=int, default=None)
+    ap.add_argument("--wan", type=float, default=None,
+                    help="override the scenario's per-NIC Gbps (tip: 1.0 on "
+                         "paper-table6 is the paper's sharpest ordering "
+                         "regime, see EXPERIMENTS.md)")
+    ap.add_argument("--dt", type=float, default=None)
+    ap.add_argument("--failures", type=float, default=None,
+                    help="node failures per slot-hour (overrides the scenario)")
     args = ap.parse_args()
 
-    cfg = SimConfig(days=args.days, n_jobs=args.jobs, wan_gbps=args.wan,
-                    dt_s=args.dt, failure_rate_per_slot_hour=args.failures)
-    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed)
+    if args.list:
+        for name in available_scenarios():
+            scn = get_scenario(name)
+            print(f"{name:<18} {scn.description}")
+        return
+
+    scn = get_scenario(args.scenario)
+    print(f"scenario {scn.name!r}: {scn.description}")
+    overrides = {}
+    if args.wan is not None:
+        overrides["wan_gbps"] = args.wan
+    if args.dt is not None:
+        overrides["dt_s"] = args.dt
+    if args.days is not None:
+        overrides["days"] = args.days
+    if args.jobs is not None:
+        overrides["n_jobs"] = args.jobs
+    if args.failures is not None:
+        overrides["failure_rate_per_slot_hour"] = args.failures
+    cfg = scn.sim_config(**overrides)
+
+    from repro.core import generate_trace
+
+    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed, profile=cfg.trace)
     print("renewable-surplus windows (# = surplus):")
-    print(ascii_timeline(traces, args.days))
+    print(ascii_timeline(traces, cfg.days))
     print("trace stats:", trace_stats(traces))
 
     print("\nrunning 4 policies on the shared trace ...")

@@ -1,11 +1,13 @@
-"""Quickstart: the feasibility-domain model + one orchestration decision.
+"""Quickstart: the feasibility-domain model + one orchestration decision
+through the typed Action / ClusterState API.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.core import feasibility as fz
-from repro.core.orchestrator import FeasibilityAwarePolicy, JobView, OrchestratorContext, SiteView
+from repro.core import (
+    ClusterState, FeasibilityAwarePolicy, JobView, SiteView, make_policy,
+    available_policies, available_scenarios,
+)
 
 GB = 1e9
 
@@ -19,20 +21,33 @@ for size_gb in (1, 6, 40, 280):
     )
 
 # --- 2. one Algorithm-1 decision -------------------------------------------
+# ClusterState.build is the one snapshot constructor shared by the
+# simulator, the dry-run planner and the serve router. With no in-flight
+# transfers the advertised bandwidth matrix is the full per-NIC rate.
 job = JobView(jid=0, site=0, ckpt_bytes=6 * GB, remaining_compute_s=4 * 3600)
 sites = [
     SiteView(0, slots=4, busy=3, queued=2, renewable_active=False, window_remaining_s=0),
     SiteView(1, slots=4, busy=1, queued=0, renewable_active=True, window_remaining_s=3 * 3600),
     SiteView(2, slots=4, busy=4, queued=3, renewable_active=True, window_remaining_s=8 * 3600),
 ]
-ctx = OrchestratorContext(t=0.0, jobs=[job], sites=sites,
-                          bandwidth_bps=np.full((3, 3), 10e9))
-decisions = FeasibilityAwarePolicy().decide(ctx)
-print("\nAlgorithm 1 decision:", decisions,
-      "-> migrate to the green, *uncongested* site (site 1), not the greener"
+state = ClusterState.build(t=0.0, jobs=[job], sites=sites, nic_bps=10e9)
+actions = FeasibilityAwarePolicy().decide(state)
+print("\nAlgorithm 1 decision:", actions,
+      "-> Migrate to the green, *uncongested* site (site 1), not the greener"
       " but congested site 2")
 
-# --- 3. stochastic feasibility (§VI.H) -------------------------------------
+# --- 3. the policy & scenario registries -----------------------------------
+print("\nregistered policies: ", ", ".join(available_policies()))
+print("registered scenarios:", ", ".join(available_scenarios()))
+throttle = make_policy("grid-throttle", power_frac=0.4)
+print("grid-throttle on a dark site:",
+      throttle.decide(ClusterState.build(
+          t=0.0,
+          jobs=[JobView(7, 0, 2 * GB, 3600.0, state="running")],
+          sites=[SiteView(0, 4, 1, 0, False, 0.0)],
+          nic_bps=10e9)))
+
+# --- 4. stochastic feasibility (§VI.H) -------------------------------------
 for eps in (0.5, 0.05, 0.01):
     ok = bool(fz.stochastic_feasible(40 * GB, 1e9, window_forecast_s=3600,
                                      window_sigma_s=900, eps=eps))

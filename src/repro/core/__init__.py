@@ -1,6 +1,7 @@
 """The paper's contribution: feasibility-domain model (§IV/§VI),
-feasibility-aware orchestration (§V, Algorithm 1), CAISO-calibrated traces
-and the trace-driven multi-site simulator (§VII)."""
+feasibility-aware orchestration (§V, Algorithm 1) behind a typed
+Action/ClusterState API, CAISO-calibrated traces, a scenario registry and
+the trace-driven multi-site simulator (§VII)."""
 from repro.core import feasibility  # noqa: F401
 from repro.core.feasibility import (  # noqa: F401
     ALPHA, CLASS_A_MAX_S, CLASS_B_MAX_S, P_NODE_KW, P_SYS_KW,
@@ -8,12 +9,26 @@ from repro.core.feasibility import (  # noqa: F401
     evaluate, migration_cost_s, migration_energy_kwh, phase_diagram,
     stochastic_feasible, transfer_time_s,
 )
+from repro.core.actions import (  # noqa: F401
+    Action, Defer, Migrate, Pause, Resume, Throttle,
+)
+from repro.core.state import (  # noqa: F401
+    ClusterState, JobView, SiteView, advertised_bandwidth, nic_share_counts,
+)
 from repro.core.orchestrator import (  # noqa: F401
-    EnergyOnlyPolicy, FeasibilityAwarePolicy, OrchestratorContext, Policy,
-    StaticPolicy, make_policy,
+    DeferConfig, DeferToWindowPolicy, EnergyOnlyPolicy, FeasibilityAwarePolicy,
+    FeasibilityConfig, GridThrottlePolicy, OraclePolicy, OrchestratorContext,
+    Policy, PolicyConfig, StaticPolicy, ThrottleConfig, available_policies,
+    make_policy, register_policy,
+)
+from repro.core.scenarios import (  # noqa: F401
+    FailureRegime, ForecastNoise, JobMix, Scenario, WanProfile,
+    available_scenarios, get_scenario, register_scenario,
 )
 from repro.core.simulator import (  # noqa: F401
     ClusterSimulator, SimConfig, SimJob, SimResult, generate_jobs,
     normalized_table, run_policy_comparison,
 )
-from repro.core.traces import Forecaster, SiteTrace, Window, generate_trace, trace_stats  # noqa: F401
+from repro.core.traces import (  # noqa: F401
+    Forecaster, SiteTrace, TraceProfile, Window, generate_trace, trace_stats,
+)

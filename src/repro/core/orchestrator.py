@@ -1,100 +1,178 @@
 """Migration policies, including the paper's feasibility-aware scheduler
-(Algorithm 1).
+(Algorithm 1), behind a typed event-driven control API.
 
-All policies share one interface: ``decide(ctx) -> [(job_id, dest_site)]``
-evaluated at every orchestrator tick (Δt).  The simulator provides the
-context: running jobs (with *measured* checkpoint sizes), per-site
-renewable forecasts, effective inter-site bandwidths, and site load.
+Contract: ``Policy.decide(state: ClusterState) -> list[Action]`` evaluated
+at every orchestrator tick (Δt).  The :class:`~repro.core.state.ClusterState`
+snapshot carries live jobs (with *measured* checkpoint sizes), per-site
+renewable forecasts, the advertised WAN bandwidth matrix (per-NIC fair
+share), and site load; actions are the typed verbs of
+:mod:`repro.core.actions` (``Migrate``/``Defer``/``Pause``/``Resume``/
+``Throttle``).
 
-  Static            never migrates (Table VI row 1)
-  EnergyOnly        chases renewable windows, no feasibility filter (row 2)
-  FeasibilityAware  Algorithm 1: hard feasibility filter, then utility
+Policies live in a registry: decorate a class with
+``@register_policy("name", aliases=(...), config=SomePolicyConfig)`` and it
+becomes constructible via ``make_policy(name, config=..., **overrides)`` and
+usable from ``run_policy_comparison``, benchmarks and examples.  Structured
+``PolicyConfig`` dataclasses carry per-policy knobs (e.g. stochastic
+feasibility ``eps``/``forecast_sigma_s``) through every entry point.
+
+Built-ins:
+
+  static            never migrates (Table VI row 1)
+  energy-only       chases renewable windows, no feasibility filter (row 2)
+  feasibility-aware Algorithm 1: hard feasibility filter, then utility
                     maximization within the feasible set (row 3)
-  Oracle            FeasibilityAware with σ=0 forecasts (Table VIII row 4)
+  oracle            feasibility-aware with σ=0 forecasts (Table VIII row 4)
+  grid-throttle     beyond-paper demand response: Throttle jobs on grid
+                    power, restore full power inside renewable windows
+  defer-to-window   beyond-paper: Defer queued jobs at dark sites until the
+                    site's next forecast window start
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
-
-import numpy as np
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Type
 
 from repro.core import feasibility as fz
+from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
+from repro.core.state import ClusterState, JobView, SiteView
+
+# Backwards-looking alias: the pre-redesign name for the snapshot type.
+OrchestratorContext = ClusterState
 
 
-@dataclass
-class JobView:
-    jid: int
-    site: int
-    ckpt_bytes: float
-    remaining_compute_s: float
-    t_load_s: float = fz.T_LOAD_S
+# ---------------------------------------------------------------------------
+# Policy configs
+# ---------------------------------------------------------------------------
 
 
-@dataclass
-class SiteView:
-    sid: int
-    slots: int
-    busy: int  # running jobs
-    queued: int
-    renewable_active: bool
-    window_remaining_s: float  # forecast
-    incoming: int = 0  # in-flight migrations committed to this site
-
-    @property
-    def load(self) -> float:
-        return (self.busy + self.queued + self.incoming) / max(self.slots, 1)
-
-    @property
-    def free_slots(self) -> int:
-        return max(0, self.slots - self.busy - self.incoming)
+@dataclass(frozen=True)
+class PolicyConfig:
+    """Base for structured per-policy parameters (empty for static/energy)."""
 
 
-@dataclass
-class OrchestratorContext:
-    t: float
-    jobs: List[JobView]
-    sites: List[SiteView]
-    bandwidth_bps: np.ndarray  # (n_sites, n_sites) effective measured WAN bw
+@dataclass(frozen=True)
+class FeasibilityConfig(PolicyConfig):
+    """Algorithm 1 knobs (§V.B, §VI.H)."""
 
-    def site(self, sid: int) -> SiteView:
-        return self.sites[sid]
+    alpha: float = fz.ALPHA
+    gamma: float = 1.0  # renewable weight (benefit term)
+    beta: float = 1.0  # congestion weight
+    queue_penalty_s: float = 7200.0  # expected wait per unit load
+    min_benefit_s: float = 1500.0  # hysteresis: don't move for marginal wins
+    eps: float = 0.0  # >0 enables stochastic feasibility (§VI.H)
+    forecast_sigma_s: float = 0.0
 
 
-Decision = Tuple[int, int]  # (job_id, destination site)
+@dataclass(frozen=True)
+class ThrottleConfig(PolicyConfig):
+    power_frac: float = 0.5  # demand-response level on grid power
+
+
+@dataclass(frozen=True)
+class DeferConfig(PolicyConfig):
+    max_wait_s: float = 4 * 3600.0  # never hold a queued job longer than this
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY: Dict[str, Type["Policy"]] = {}
+_ALIASES: Dict[str, str] = {}
+_CONFIGS: Dict[str, Type[PolicyConfig]] = {}
+
+
+def register_policy(name: str, *, aliases: Tuple[str, ...] = (),
+                    config: Type[PolicyConfig] = PolicyConfig):
+    """Class decorator: add a Policy to the registry under ``name``
+    (stored normalized — lowercase, dashes — so lookups always hit)."""
+
+    key = _norm(name)
+
+    def deco(cls: Type["Policy"]) -> Type["Policy"]:
+        cls.name = key
+        _REGISTRY[key] = cls
+        _CONFIGS[key] = config
+        for a in aliases:
+            _ALIASES[_norm(a)] = key
+        return cls
+
+    return deco
+
+
+def _norm(name: str) -> str:
+    return name.lower().replace("_", "-")
+
+
+def available_policies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def policy_config_cls(name: str) -> Type[PolicyConfig]:
+    return _CONFIGS[_resolve(name)]
+
+
+def _resolve(name: str) -> str:
+    key = _norm(name)
+    key = _ALIASES.get(key, key)
+    if key not in _REGISTRY:
+        raise KeyError(
+            f"unknown policy {name!r}; available: {', '.join(available_policies())}"
+        )
+    return key
+
+
+def make_policy(name: str, config: Optional[PolicyConfig] = None, **kw) -> "Policy":
+    """Instantiate a registered policy.
+
+    ``config`` is a :class:`PolicyConfig` matching the policy (its fields are
+    splatted into the constructor); ``**kw`` overrides individual fields.
+    """
+    key = _resolve(name)
+    if config is not None:
+        kw = {**dataclasses.asdict(config), **kw}
+    return _REGISTRY[key](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Policies
+# ---------------------------------------------------------------------------
 
 
 class Policy:
     name = "base"
 
-    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
+    def decide(self, state: ClusterState) -> List[Action]:
         raise NotImplementedError
 
+    # Comparison harnesses use this instead of string-matching on the name.
+    wants_oracle_forecast = False
 
+
+@register_policy("static")
 class StaticPolicy(Policy):
     """Fixed placement, no inter-site coordination (§VII.E baseline 1)."""
 
-    name = "static"
-
-    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
+    def decide(self, state: ClusterState) -> List[Action]:
         return []
 
 
+@register_policy("energy-only", aliases=("energyonly",))
 class EnergyOnlyPolicy(Policy):
     """Migrate whenever renewable energy is available elsewhere, without
     feasibility constraints (§VII.E baseline 2). Herds onto the greenest
     site; initiates transfers that cannot finish inside windows."""
 
-    name = "energy-only"
-
-    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
-        out: List[Decision] = []
-        for job in ctx.jobs:
-            cur = ctx.site(job.site)
+    def decide(self, state: ClusterState) -> List[Action]:
+        out: List[Action] = []
+        for job in state.migratable():
+            cur = state.site(job.site)
             if cur.renewable_active:
                 continue  # already green
             greens = [
-                s for s in ctx.sites
+                s for s in state.sites
                 if s.renewable_active and s.sid != job.site
                 and (s.slots - s.busy) > 0  # STALE capacity: ignores in-flight
             ]
@@ -106,10 +184,12 @@ class EnergyOnlyPolicy(Policy):
             # transfers near window end, Class C checkpoints and transient
             # over-subscription all happen.
             dest = greens[job.jid % len(greens)]
-            out.append((job.jid, dest.sid))
+            out.append(Migrate(job.jid, dest.sid))
         return out
 
 
+@register_policy("feasibility-aware", aliases=("feasibility", "ours"),
+                 config=FeasibilityConfig)
 @dataclass
 class FeasibilityAwarePolicy(Policy):
     """Paper Algorithm 1 (§V.B).
@@ -124,45 +204,59 @@ class FeasibilityAwarePolicy(Policy):
         migrate to argmax benefit iff benefit > T_cost, ties by T_transfer.
     """
 
-    name = "feasibility-aware"
     alpha: float = fz.ALPHA
-    gamma: float = 1.0  # renewable weight (benefit term)
-    beta: float = 1.0  # congestion weight
-    queue_penalty_s: float = 7200.0  # expected wait per unit load
-    min_benefit_s: float = 1500.0  # hysteresis: don't move for marginal wins
-    eps: float = 0.0  # >0 enables stochastic feasibility (§VI.H)
+    gamma: float = 1.0
+    beta: float = 1.0
+    queue_penalty_s: float = 7200.0
+    min_benefit_s: float = 1500.0
+    eps: float = 0.0
     forecast_sigma_s: float = 0.0
 
-    def decide(self, ctx: OrchestratorContext) -> List[Decision]:
-        out: List[Decision] = []
+    def decide(self, state: ClusterState) -> List[Action]:
+        import numpy as np
+
+        candidates = state.migratable()
+        if not candidates:
+            return []
+        # ---- Stage 1, vectorized: one feasibility evaluation over the whole
+        # (job × destination) grid per tick, using the snapshot's advertised
+        # bandwidth matrix (per-NIC fair share).
+        sizes = np.array([j.ckpt_bytes for j in candidates])[:, None]
+        t_loads = np.array([j.t_load_s for j in candidates])[:, None]
+        bw_grid = np.asarray(state.bandwidth_bps)[
+            np.array([j.site for j in candidates], dtype=np.int64), :
+        ]  # (n_jobs, n_sites)
+        windows = state.site_window_s[None, :]
+        v = fz.evaluate(sizes, bw_grid, windows, alpha=self.alpha,
+                        t_load_s=t_loads)
+        if self.eps > 0.0 and self.forecast_sigma_s > 0.0:
+            ok_grid = (
+                np.asarray(
+                    fz.stochastic_feasible(
+                        sizes, bw_grid, windows, self.forecast_sigma_s,
+                        eps=self.eps, alpha=self.alpha, t_load_s=t_loads,
+                    )
+                )
+                & np.asarray(v.energy_ok)
+                & (np.asarray(v.workload_class) != 2)
+            )
+        else:
+            ok_grid = np.asarray(v.feasible)
+        t_transfer_grid = np.asarray(v.t_transfer_s)
+
+        out: List[Action] = []
         # Track slot reservations within this tick so we do not herd.
-        reserved: Dict[int, int] = {s.sid: 0 for s in ctx.sites}
-        for job in ctx.jobs:
-            cur = ctx.site(job.site)
+        reserved: Dict[int, int] = {s.sid: 0 for s in state.sites}
+        for i, job in enumerate(candidates):
+            cur = state.site(job.site)
             best: Optional[Tuple[float, float, int]] = None  # (-benefit, t_transfer, sid)
-            for dest in ctx.sites:
+            for dest in state.sites:
                 if dest.sid == job.site:
                     continue
-                bw = float(ctx.bandwidth_bps[job.site, dest.sid])
-                window = dest.window_remaining_s
-                # ---- Stage 1: feasibility filter ----
-                if self.eps > 0.0 and self.forecast_sigma_s > 0.0:
-                    ok = bool(
-                        fz.stochastic_feasible(
-                            job.ckpt_bytes, bw, window, self.forecast_sigma_s,
-                            eps=self.eps, alpha=self.alpha, t_load_s=job.t_load_s,
-                        )
-                    )
-                    v = fz.evaluate(job.ckpt_bytes, bw, window, alpha=self.alpha,
-                                    t_load_s=job.t_load_s)
-                    ok = ok and bool(v.energy_ok) and int(v.workload_class) != 2
-                else:
-                    v = fz.evaluate(job.ckpt_bytes, bw, window, alpha=self.alpha,
-                                    t_load_s=job.t_load_s)
-                    ok = bool(v.feasible)
-                if not ok:
+                if not ok_grid[i, dest.sid]:
                     continue
-                t_transfer = float(fz.transfer_time_s(job.ckpt_bytes, bw))
+                window = dest.window_remaining_s
+                t_transfer = float(t_transfer_grid[i, dest.sid])
                 t_cost = t_transfer + job.t_load_s + fz.T_DOWNTIME_S
                 # ---- Stage 2: benefit inside the feasible set ----
                 cur_green_s = cur.window_remaining_s if cur.renewable_active else 0.0
@@ -183,21 +277,66 @@ class FeasibilityAwarePolicy(Policy):
                 if best is None or key < best:
                     best = key
             if best is not None:
-                out.append((job.jid, best[2]))
+                out.append(Migrate(job.jid, best[2]))
                 reserved[best[2]] += 1
         return out
 
 
-def make_policy(name: str, **kw) -> Policy:
-    name = name.lower()
-    if name == "static":
-        return StaticPolicy()
-    if name in ("energy-only", "energy_only", "energyonly"):
-        return EnergyOnlyPolicy()
-    if name in ("feasibility-aware", "feasibility", "ours"):
-        return FeasibilityAwarePolicy(**kw)
-    if name == "oracle":
-        p = FeasibilityAwarePolicy(**kw)
-        p.name = "oracle"
-        return p
-    raise KeyError(name)
+@register_policy("oracle", config=FeasibilityConfig)
+@dataclass
+class OraclePolicy(FeasibilityAwarePolicy):
+    """Feasibility-aware under perfect (σ=0) forecasts (Table VIII row 4).
+    The zero-noise forecaster is selected by the harness via
+    ``wants_oracle_forecast``."""
+
+    wants_oracle_forecast = True
+
+
+@register_policy("grid-throttle", config=ThrottleConfig)
+@dataclass
+class GridThrottlePolicy(Policy):
+    """Beyond-paper demand response: run at reduced power whenever a site is
+    on grid electricity, full power inside renewable windows.  Exercises the
+    ``Throttle`` action; never migrates."""
+
+    power_frac: float = 0.5
+
+    def decide(self, state: ClusterState) -> List[Action]:
+        out: List[Action] = []
+        for job in state.running():
+            green = state.site(job.site).renewable_active
+            want = 1.0 if green else self.power_frac
+            if abs(job.power_frac - want) > 1e-9:
+                out.append(Throttle(job.jid, want))
+        return out
+
+
+@register_policy("defer-to-window", config=DeferConfig)
+@dataclass
+class DeferToWindowPolicy(Policy):
+    """Beyond-paper: hold queued jobs at dark sites until the site's next
+    forecast window start (bounded by ``max_wait_s``), so they begin on
+    renewable power.  Exercises the ``Defer`` action."""
+
+    max_wait_s: float = 4 * 3600.0
+
+    def decide(self, state: ClusterState) -> List[Action]:
+        out: List[Action] = []
+        for job in state.queued():
+            site = state.site(job.site)
+            if site.renewable_active:
+                continue
+            start = site.next_window_start_s
+            if state.t < start <= state.t + self.max_wait_s:
+                out.append(Defer(job.jid, start))
+        return out
+
+
+__all__ = [
+    "Action", "ClusterState", "DeferConfig", "DeferToWindowPolicy",
+    "EnergyOnlyPolicy", "FeasibilityAwarePolicy", "FeasibilityConfig",
+    "GridThrottlePolicy", "JobView", "OraclePolicy", "OrchestratorContext",
+    "Policy", "PolicyConfig", "SiteView", "StaticPolicy", "ThrottleConfig",
+    "available_policies", "make_policy", "policy_config_cls",
+    "register_policy",
+]

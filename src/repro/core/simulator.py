@@ -2,35 +2,60 @@
 micro-datacenters (paper §VII: 5 sites, 10 Gbps WAN, 7-day CAISO-calibrated
 trace, job mix A:70% 1–6 GB / B:20% 10–40 GB / C:10% 100–300 GB).
 
+Control flow is event-driven and typed: every ``orch_dt_s`` the simulator
+builds an immutable :class:`~repro.core.state.ClusterState` snapshot (one
+shared constructor with the dry-run planner and the serve router) and hands
+it to ``Policy.decide``, which returns :mod:`repro.core.actions` —
+``Migrate``, ``Defer(until)``, ``Pause``/``Resume`` and
+``Throttle(power_frac)``.  Invalid or stale actions are counted in
+``SimResult.rejected_actions``, never applied.
+
 Models:
-  * per-site GPU slots with FIFO queues,
+  * per-site GPU slots with FIFO queues (``Defer`` holds a queued job out
+    of scheduling; ``Pause`` frees a slot until ``Resume``),
   * renewable windows from core/traces.py; grid vs. renewable kWh accounting
-    (P_node = 0.75 kW compute, P_sys = 1.8 kW during transfer),
+    (P_node = 0.75 kW compute — scaled by the job's ``Throttle`` fraction —
+    P_sys = 1.8 kW during transfer),
   * WAN transfers with per-site NIC contention (concurrent transfers share
-    the 10 Gbps uplink — this is what stalls the energy-only policy),
+    the uplink — this is what stalls the energy-only policy), plus an
+    optional flaky-WAN regime (hourly brownouts, see scenarios.py),
   * migration = pause → transfer → load (10.3 s) → downtime (0.4 s) →
     resume (possibly queued on arrival),
-  * optional node failures with checkpoint/restart (beyond-paper: the
-    fault-tolerance path of the framework, §VIII.F of the paper lists this
-    as unmodeled future work).
+  * optional node failures with checkpoint/restart (beyond-paper).
+
+Jobs are indexed incrementally by (site, state) bucket — the hot loop only
+touches jobs whose state can change this tick, never the full job list —
+which is what makes the 7-day/240-job run fast (see
+``benchmarks/run.py --quick`` for the ticks/sec gate).
+
+Scenarios: construct via ``ClusterSimulator.from_scenario("flaky-wan",
+"feasibility-aware")`` or ``run_policy_comparison(scenario="paper-table6")``
+— see :mod:`repro.core.scenarios` for the registry.
 
 Deterministic for a given seed.
 """
 from __future__ import annotations
 
+import dataclasses
+import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.core import feasibility as fz
-from repro.core.orchestrator import (
-    JobView, OrchestratorContext, Policy, SiteView, StaticPolicy,
-)
-from repro.core.traces import Forecaster, SiteTrace, generate_trace
+from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
+from repro.core.orchestrator import Policy, PolicyConfig, make_policy
+from repro.core.state import ClusterState, JobView, SiteView, nic_share_counts
+from repro.core.traces import Forecaster, SiteTrace, TraceProfile, generate_trace
 
 HOUR = 3600.0
 GB = 1e9
+
+# Job lifecycle. "paused" is policy-initiated (Pause action); "migrating"
+# and "loading" are the two legs of a migration.
+JOB_STATES = ("pending", "queued", "running", "migrating", "loading",
+              "paused", "done")
 
 
 @dataclass
@@ -43,7 +68,7 @@ class SimJob:
     home_site: int
 
     site: int = -1
-    state: str = "pending"  # pending|queued|running|migrating|loading|done
+    state: str = "pending"
     progress_s: float = 0.0
     done_s: float = -1.0
     started_s: float = -1.0
@@ -63,6 +88,10 @@ class SimJob:
     post_migration_wait: bool = False  # queue time after arrival counts as
     # migration-induced pause (the paper's 'stall/congestion' mode)
     last_migration_end_s: float = -1e18
+    # typed-action state
+    power_frac: float = 1.0  # Throttle level while running
+    defer_until_s: float = -1e18  # Defer: not schedulable before this time
+    paused_policy_s: float = 0.0  # time spent in policy-initiated Pause
 
     @property
     def jct_s(self) -> float:
@@ -86,6 +115,11 @@ class SimConfig:
     t_downtime_s: float = fz.T_DOWNTIME_S
     forecast_sigma_s: float = 900.0
     migration_cooldown_s: float = 900.0  # orchestrator debounce per job
+    # renewable-window process (scenario-composable)
+    trace: TraceProfile = field(default_factory=TraceProfile)
+    # flaky-WAN regime: hourly brownouts to wan_degraded_gbps
+    wan_degrade_prob: float = 0.0
+    wan_degraded_gbps: float = 1.0
     # job mix (paper §VII)
     frac_a: float = 0.70
     frac_b: float = 0.20
@@ -108,6 +142,9 @@ class SimResult:
     migrations: int
     failed_migrations: int
     failures: int
+    rejected_actions: int = 0
+    ticks: int = 0
+    wall_time_s: float = 0.0
 
     @property
     def mean_jct_s(self) -> float:
@@ -140,6 +177,10 @@ class SimResult:
     def renewable_fraction(self) -> float:
         tot = self.grid_kwh + self.renewable_kwh
         return self.renewable_kwh / tot if tot else 0.0
+
+    @property
+    def ticks_per_sec(self) -> float:
+        return self.ticks / self.wall_time_s if self.wall_time_s else 0.0
 
     def summary(self) -> dict:
         return {
@@ -192,7 +233,9 @@ class ClusterSimulator:
     ):
         self.cfg = cfg
         self.policy = policy
-        self.traces = traces or generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed)
+        self.traces = traces or generate_trace(
+            cfg.n_sites, cfg.days, seed=cfg.seed, profile=cfg.trace
+        )
         self.jobs = jobs if jobs is not None else generate_jobs(cfg)
         sigma = 0.0 if oracle_forecast else cfg.forecast_sigma_s
         self.forecaster = Forecaster(self.traces, sigma_s=sigma, seed=cfg.seed + 7)
@@ -203,121 +246,246 @@ class ClusterSimulator:
         self.migrations = 0
         self.failed_migrations = 0
         self.failures = 0
+        self.rejected_actions = 0
+        self.ticks = 0
+        # flaky-WAN brownout calendar (deterministic per seed)
+        if cfg.wan_degrade_prob > 0.0:
+            n_hours = int(cfg.days * 24 * 2) + 1
+            rng = np.random.default_rng(cfg.seed + 31)
+            self._wan_bad = rng.random(n_hours) < cfg.wan_degrade_prob
+        else:
+            self._wan_bad = None
+        # incremental (site, state) job index: jid-keyed dicts give
+        # deterministic (insertion-ordered) iteration and O(1) moves
+        self._by_state: Dict[str, Dict[int, SimJob]] = {s: {} for s in JOB_STATES}
+        self._site_jobs: Dict[Tuple[int, str], Dict[int, SimJob]] = {}
+        self._jobs_by_id: Dict[int, SimJob] = {}
+        for j in self.jobs:
+            self._jobs_by_id[j.jid] = j
+            self._index_add(j)
+        self._arrivals = sorted(self._by_state["pending"].values(),
+                                key=lambda j: (j.arrival_s, j.jid))
+        self._arrival_ptr = 0
 
-    # -- helpers ------------------------------------------------------------
-    def _running(self, sid: int) -> List[SimJob]:
-        return [j for j in self.jobs if j.site == sid and j.state == "running"]
+    # -- (site, state) bucket maintenance -----------------------------------
+    _SITE_STATES = ("queued", "running")
 
-    def _queued(self, sid: int) -> List[SimJob]:
-        return [j for j in self.jobs if j.site == sid and j.state == "queued"]
+    def _index_add(self, j: SimJob) -> None:
+        self._by_state[j.state][j.jid] = j
+        if j.state in self._SITE_STATES:
+            self._site_jobs.setdefault((j.site, j.state), {})[j.jid] = j
 
-    def _transfers(self) -> List[SimJob]:
-        return [j for j in self.jobs if j.state == "migrating"]
+    def _index_remove(self, j: SimJob) -> None:
+        self._by_state[j.state].pop(j.jid, None)
+        if j.state in self._SITE_STATES:
+            bucket = self._site_jobs.get((j.site, j.state))
+            if bucket is not None:
+                bucket.pop(j.jid, None)
 
-    def _effective_bw(self, transfers: List[SimJob]) -> Dict[int, float]:
-        """Per-transfer effective bps under per-site NIC sharing."""
-        nic = self.cfg.wan_gbps * 1e9
-        src_count: Dict[int, int] = {}
-        dst_count: Dict[int, int] = {}
-        for j in transfers:
-            src_count[j.site] = src_count.get(j.site, 0) + 1
-            dst_count[j.transfer_dest] = dst_count.get(j.transfer_dest, 0) + 1
+    def _move(self, j: SimJob, state: Optional[str] = None,
+              site: Optional[int] = None) -> None:
+        self._index_remove(j)
+        if state is not None:
+            j.state = state
+        if site is not None:
+            j.site = site
+        self._index_add(j)
+
+    def _running_count(self, sid: int) -> int:
+        return len(self._site_jobs.get((sid, "running"), ()))
+
+    def _queued_count(self, sid: int) -> int:
+        return len(self._site_jobs.get((sid, "queued"), ()))
+
+    # -- WAN model -----------------------------------------------------------
+    def _nic_bps(self, t: float) -> float:
+        if self._wan_bad is not None:
+            hr = min(int(t // HOUR), len(self._wan_bad) - 1)
+            if self._wan_bad[hr]:
+                return self.cfg.wan_degraded_gbps * 1e9
+        return self.cfg.wan_gbps * 1e9
+
+    def _effective_bw(self, transfers: List[SimJob], t: float) -> Dict[int, float]:
+        """Per-transfer effective bps under per-site NIC sharing — the same
+        share model the snapshot advertises (state.nic_share_counts)."""
+        nic = self._nic_bps(t)
+        src_count, dst_count = nic_share_counts(
+            [(j.site, j.transfer_dest) for j in transfers])
         return {
             j.jid: min(nic / src_count[j.site], nic / dst_count[j.transfer_dest])
             for j in transfers
         }
 
-    def _ctx(self, t: float) -> OrchestratorContext:
-        incoming: Dict[int, int] = {s: 0 for s in range(self.cfg.n_sites)}
-        for j in self.jobs:
-            if j.state == "migrating":
-                incoming[j.transfer_dest] += 1
-            elif j.state == "loading":
-                incoming[j.site] += 1
+    # -- snapshot ------------------------------------------------------------
+    def snapshot(self, t: float) -> ClusterState:
+        """Build the policy-facing ClusterState via the shared constructor.
+        The advertised bandwidth matrix uses the same per-NIC share counts
+        as the transfer loop (``_effective_bw``)."""
+        cfg = self.cfg
+        incoming = [0] * cfg.n_sites
+        transfers: List[Tuple[int, int]] = []
+        for j in self._by_state["migrating"].values():
+            incoming[j.transfer_dest] += 1
+            transfers.append((j.site, j.transfer_dest))
+        for j in self._by_state["loading"].values():
+            incoming[j.site] += 1
         sites = []
-        for s in range(self.cfg.n_sites):
+        for s in range(cfg.n_sites):
+            tr = self.traces[s]
             sites.append(
                 SiteView(
                     sid=s,
-                    slots=self.cfg.slots_per_site,
-                    busy=len(self._running(s)),
-                    queued=len(self._queued(s)),
-                    renewable_active=self.traces[s].active(t),
+                    slots=cfg.slots_per_site,
+                    busy=self._running_count(s),
+                    queued=self._queued_count(s),
+                    renewable_active=tr.active(t),
                     window_remaining_s=self.forecaster.remaining(s, t),
                     incoming=incoming[s],
+                    next_window_start_s=self.forecaster.next_window_start(s, t),
                 )
             )
-        # measured bandwidth: current NIC contention applied symmetrically
-        n = self.cfg.n_sites
-        bw = np.full((n, n), self.cfg.wan_gbps * 1e9)
-        active = self._transfers()
-        for j in active:
-            bw[j.site, :] /= 2.0
-            bw[:, j.transfer_dest] /= 2.0
-        jobs = [
-            JobView(j.jid, j.site, j.ckpt_bytes, j.compute_s - j.progress_s, self.cfg.t_load_s)
-            for j in self.jobs
-            if j.state == "running"
-            and t - j.last_migration_end_s >= self.cfg.migration_cooldown_s
-        ]
-        return OrchestratorContext(t=t, jobs=jobs, sites=sites, bandwidth_bps=bw)
+        views = []
+        for state_name in ("queued", "running", "paused"):
+            for j in self._by_state[state_name].values():
+                views.append(
+                    JobView(
+                        j.jid, j.site, j.ckpt_bytes, j.compute_s - j.progress_s,
+                        cfg.t_load_s, state=state_name,
+                        eligible=(t - j.last_migration_end_s
+                                  >= cfg.migration_cooldown_s),
+                        power_frac=j.power_frac,
+                    )
+                )
+        views.sort(key=lambda v: v.jid)
+        return ClusterState.build(t, views, sites, nic_bps=self._nic_bps(t),
+                                  transfers=transfers)
+
+    # -- action application --------------------------------------------------
+    def _apply_action(self, action: Action, t: float, state: ClusterState,
+                      horizon: float) -> None:
+        if not isinstance(action, Action):
+            # e.g. a legacy (jid, dest) tuple from a pre-redesign policy
+            self.rejected_actions += 1
+            return
+        j = self._jobs_by_id.get(action.jid)
+        if j is None:
+            self.rejected_actions += 1
+            return
+        if isinstance(action, Migrate):
+            dest = action.dest
+            if (j.state != "running" or dest == j.site
+                    or not 0 <= dest < self.cfg.n_sites
+                    or t - j.last_migration_end_s < self.cfg.migration_cooldown_s):
+                self.rejected_actions += 1
+                return
+            j.transfer_dest = dest
+            j.transfer_remaining_bits = 8.0 * j.ckpt_bytes
+            j.migrations += 1
+            self.migrations += 1
+            # a migration whose destination window closes before the
+            # transfer ends is counted as failed (it still completes,
+            # but arrives onto grid power — the paper's stall mode)
+            bw_now = float(state.bandwidth_bps[j.site, dest])
+            t_arrive = t + 8.0 * j.ckpt_bytes / bw_now
+            if not self.traces[dest].active(min(t_arrive, horizon - 1)):
+                self.failed_migrations += 1
+            self._move(j, state="migrating")
+        elif isinstance(action, Defer):
+            if j.state != "queued":
+                self.rejected_actions += 1
+                return
+            j.defer_until_s = max(t, float(action.until_s))
+        elif isinstance(action, Pause):
+            if j.state != "running":
+                self.rejected_actions += 1
+                return
+            self._move(j, state="paused")
+        elif isinstance(action, Resume):
+            if j.state != "paused":
+                self.rejected_actions += 1
+                return
+            self._move(j, state="queued")
+        elif isinstance(action, Throttle):
+            if j.state != "running":
+                self.rejected_actions += 1
+                return
+            j.power_frac = float(min(1.0, max(0.0, action.power_frac)))
+        else:
+            self.rejected_actions += 1
 
     # -- main loop ----------------------------------------------------------
     def run(self) -> SimResult:
         cfg = self.cfg
+        wall_t0 = time.perf_counter()
         horizon = cfg.days * 24 * HOUR
         # allow the tail of late jobs to finish
         t, t_end = 0.0, horizon * 2.0
         next_orch = 0.0
-        jobs_by_id = {j.jid: j for j in self.jobs}
+        n_jobs = len(self.jobs)
+        by_state = self._by_state
+        site_jobs = self._site_jobs
         while t < t_end:
             dt = cfg.dt_s
-            # 1) arrivals
-            for j in self.jobs:
-                if j.state == "pending" and j.arrival_s <= t:
-                    j.state = "queued"
+            self.ticks += 1
+            # 1) arrivals (pending jobs, in arrival order)
+            while (self._arrival_ptr < len(self._arrivals)
+                   and self._arrivals[self._arrival_ptr].arrival_s <= t):
+                j = self._arrivals[self._arrival_ptr]
+                self._arrival_ptr += 1
+                if j.state == "pending":
+                    self._move(j, state="queued")
             # 2) transfers progress
-            transfers = self._transfers()
-            if transfers:
-                eff = self._effective_bw(transfers)
+            if by_state["migrating"]:
+                transfers = list(by_state["migrating"].values())
+                eff = self._effective_bw(transfers, t)
                 for j in transfers:
                     rate = eff[j.jid]
                     j.transfer_remaining_bits -= rate * dt
                     j.pause_s += dt
                     j.pause_transfer_s += dt
-                    e = self.cfg.p_sys_kw * dt / HOUR
+                    e = cfg.p_sys_kw * dt / HOUR
                     self.migration_kwh += e
                     self.grid_kwh += e  # transfer power billed to grid
                     if j.transfer_remaining_bits <= 0:
-                        j.site = j.transfer_dest
+                        dest = j.transfer_dest
                         j.transfer_dest = -1
-                        j.state = "loading"
                         j.load_remaining_s = cfg.t_load_s + cfg.t_downtime_s
+                        self._move(j, state="loading", site=dest)
             # 3) checkpoint loads
-            for j in self.jobs:
-                if j.state == "loading":
+            if by_state["loading"]:
+                for j in list(by_state["loading"].values()):
                     j.load_remaining_s -= dt
                     j.pause_s += dt
                     j.pause_transfer_s += dt
                     if j.load_remaining_s <= 0:
-                        j.state = "queued"
                         j.post_migration_wait = True
                         j.last_migration_end_s = t
-            # 4) scheduling: fill free slots FIFO
+                        self._move(j, state="queued")
+            # 4) scheduling: fill free slots FIFO (Defer holds jobs back)
             for s in range(cfg.n_sites):
-                free = cfg.slots_per_site - len(self._running(s))
-                if free > 0:
-                    for j in sorted(self._queued(s), key=lambda x: x.arrival_s)[:free]:
-                        j.state = "running"
-                        j.post_migration_wait = False
-                        if j.started_s < 0:
-                            j.started_s = t
+                q = site_jobs.get((s, "queued"))
+                if not q:
+                    continue
+                free = cfg.slots_per_site - self._running_count(s)
+                if free <= 0:
+                    continue
+                ready = [j for j in q.values() if j.defer_until_s <= t]
+                ready.sort(key=lambda x: (x.arrival_s, x.jid))
+                for j in ready[:free]:
+                    j.post_migration_wait = False
+                    if j.started_s < 0:
+                        j.started_s = t
+                    self._move(j, state="running")
             # 5) compute progress + energy + failures
             for s in range(cfg.n_sites):
+                running = site_jobs.get((s, "running"))
+                if not running:
+                    continue
                 green = self.traces[s].active(t)
-                for j in self._running(s):
-                    j.progress_s += dt
-                    e = cfg.p_node_kw * dt / HOUR
+                for j in list(running.values()):
+                    frac = j.power_frac
+                    j.progress_s += dt * frac
+                    e = cfg.p_node_kw * frac * dt / HOUR
                     if green:
                         j.renewable_kwh += e
                         self.renewable_kwh += e
@@ -334,36 +502,23 @@ class ClusterSimulator:
                             j.pause_s += lost
                             self.failures += 1
                     if j.progress_s >= j.compute_s:
-                        j.state = "done"
                         j.done_s = t
-            # queue-time accounting
-            for j in self.jobs:
-                if j.state == "queued":
-                    j.queue_s += dt
-                    if j.post_migration_wait:
-                        j.pause_s += dt  # stalled by its own migration
-                        j.pause_wait_s += dt
-            # 6) orchestrator tick
+                        self._move(j, state="done")
+            # queue / pause time accounting
+            for j in by_state["queued"].values():
+                j.queue_s += dt
+                if j.post_migration_wait:
+                    j.pause_s += dt  # stalled by its own migration
+                    j.pause_wait_s += dt
+            for j in by_state["paused"].values():
+                j.paused_policy_s += dt
+            # 6) orchestrator tick: snapshot -> typed actions -> apply
             if t >= next_orch:
                 next_orch = t + cfg.orch_dt_s
-                ctx = self._ctx(t)
-                for jid, dest in self.policy.decide(ctx):
-                    j = jobs_by_id[jid]
-                    if j.state != "running" or dest == j.site:
-                        continue
-                    j.state = "migrating"
-                    j.transfer_dest = dest
-                    j.transfer_remaining_bits = 8.0 * j.ckpt_bytes
-                    j.migrations += 1
-                    self.migrations += 1
-                    # a migration whose destination window closes before the
-                    # transfer ends is counted as failed (it still completes,
-                    # but arrives onto grid power — the paper's stall mode)
-                    bw_now = float(ctx.bandwidth_bps[j.site, dest])
-                    t_arrive = t + 8.0 * j.ckpt_bytes / bw_now
-                    if not self.traces[dest].active(min(t_arrive, horizon - 1)):
-                        self.failed_migrations += 1
-            if all(j.state == "done" for j in self.jobs):
+                state = self.snapshot(t)
+                for action in self.policy.decide(state):
+                    self._apply_action(action, t, state, horizon)
+            if len(by_state["done"]) == n_jobs:
                 break
             t += dt
         return SimResult(
@@ -375,26 +530,75 @@ class ClusterSimulator:
             migrations=self.migrations,
             failed_migrations=self.failed_migrations,
             failures=self.failures,
+            rejected_actions=self.rejected_actions,
+            ticks=self.ticks,
+            wall_time_s=time.perf_counter() - wall_t0,
         )
+
+    # -- scenario entry point ------------------------------------------------
+    @classmethod
+    def from_scenario(
+        cls,
+        scenario,
+        policy: Union[str, Policy],
+        *,
+        overrides: Optional[dict] = None,
+        jobs: Optional[List[SimJob]] = None,
+        traces: Optional[List[SiteTrace]] = None,
+    ) -> "ClusterSimulator":
+        """Build a simulator from a registered scenario name (or Scenario)
+        and a registered policy name (or Policy instance)."""
+        from repro.core.scenarios import get_scenario
+
+        scn = get_scenario(scenario)
+        cfg = scn.sim_config(**(overrides or {}))
+        pol = make_policy(policy) if isinstance(policy, str) else policy
+        return cls(cfg, pol, jobs=jobs, traces=traces,
+                   oracle_forecast=getattr(pol, "wants_oracle_forecast", False))
 
 
 def run_policy_comparison(
     cfg: Optional[SimConfig] = None,
     policies: Sequence[str] = ("static", "energy-only", "feasibility-aware", "oracle"),
+    *,
+    scenario=None,
+    overrides: Optional[dict] = None,
+    policy_configs: Optional[Dict[str, Union[PolicyConfig, dict]]] = None,
 ) -> Dict[str, SimResult]:
-    """Table VI / VIII: same trace + same jobs, one run per policy."""
-    from repro.core.orchestrator import make_policy
+    """Table VI / VIII: same trace + same jobs, one run per policy.
+
+    ``scenario`` names a registered scenario (or passes a ``Scenario``);
+    ``overrides`` tweaks individual ``SimConfig`` fields on top of it;
+    ``policy_configs`` maps policy name -> ``PolicyConfig`` (or kwargs dict),
+    so per-policy knobs like stochastic feasibility ``eps`` /
+    ``forecast_sigma_s`` reach the comparison path.
+    """
     import copy
 
+    if scenario is not None:
+        if cfg is not None:
+            raise ValueError(
+                "pass either cfg or scenario (+overrides), not both")
+        from repro.core.scenarios import get_scenario
+
+        cfg = get_scenario(scenario).sim_config(**(overrides or {}))
+    elif overrides:
+        cfg = dataclasses.replace(cfg or SimConfig(), **overrides)
     cfg = cfg or SimConfig()
-    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed)
+    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed, profile=cfg.trace)
     base_jobs = generate_jobs(cfg)
+    policy_configs = policy_configs or {}
     out: Dict[str, SimResult] = {}
     for name in policies:
         jobs = copy.deepcopy(base_jobs)
-        pol = make_policy(name)
+        pconf = policy_configs.get(name)
+        if isinstance(pconf, dict):
+            pol = make_policy(name, **pconf)
+        else:
+            pol = make_policy(name, config=pconf)
         sim = ClusterSimulator(
-            cfg, pol, traces=traces, jobs=jobs, oracle_forecast=(name == "oracle")
+            cfg, pol, traces=traces, jobs=jobs,
+            oracle_forecast=pol.wants_oracle_forecast,
         )
         out[name] = sim.run()
     return out

@@ -1,0 +1,209 @@
+"""ClusterState: the one snapshot type every control surface shares.
+
+``ClusterSimulator`` (per orchestrator tick), the ``launch.dryrun`` plan
+preview and the ``launch.serve`` green router all build their view of the
+cluster through :meth:`ClusterState.build` instead of hand-rolling context
+objects.  The snapshot is immutable; policies read it and return typed
+:mod:`repro.core.actions`.
+
+The advertised bandwidth matrix is derived from the *same* per-NIC share
+counts the simulator's transfer loop uses (``min(nic/src_flows,
+nic/dst_flows)`` per link with the *current* in-flight flows), so the
+policy's view agrees with what the transfer loop is granting right now —
+the seed implementation halved rows/columns once per in-flight transfer,
+under-advertising a doubly-loaded uplink as bw/4 when the transfer loop
+actually grants bw/2. Note the advertisement is of current shares, not the
+post-admission share a new transfer would dilute to (nic/(flows+1)); the
+alpha safety margin in Algorithm 1 absorbs that optimism.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import feasibility as fz
+
+
+@dataclass
+class JobView:
+    """Policy-visible job facts (checkpoint size is the *measured* bytes)."""
+
+    jid: int
+    site: int
+    ckpt_bytes: float
+    remaining_compute_s: float
+    t_load_s: float = fz.T_LOAD_S
+    state: str = "running"  # queued|running|paused
+    eligible: bool = True  # migration cooldown has elapsed
+    power_frac: float = 1.0  # current Throttle level
+
+
+@dataclass
+class SiteView:
+    sid: int
+    slots: int
+    busy: int  # running jobs
+    queued: int
+    renewable_active: bool
+    window_remaining_s: float  # forecast
+    incoming: int = 0  # in-flight migrations committed to this site
+    next_window_start_s: float = float("inf")  # start of the next window
+
+    @property
+    def load(self) -> float:
+        return (self.busy + self.queued + self.incoming) / max(self.slots, 1)
+
+    @property
+    def free_slots(self) -> int:
+        return max(0, self.slots - self.busy - self.incoming)
+
+
+@dataclass(frozen=True)
+class ClusterState:
+    """Immutable cluster snapshot handed to ``Policy.decide``.
+
+    ``jobs`` holds every live (queued/running/paused) job; policies that only
+    migrate should iterate :meth:`migratable`, which reproduces the classic
+    "running jobs whose cooldown elapsed" view.  Vectorized numpy views over
+    jobs and sites are materialized lazily and cached on first access.
+    """
+
+    t: float
+    jobs: Tuple[JobView, ...]
+    sites: Tuple[SiteView, ...]
+    bandwidth_bps: np.ndarray  # (n_sites, n_sites) advertised effective bw
+
+    def site(self, sid: int) -> SiteView:
+        return self.sites[sid]
+
+    @property
+    def n_sites(self) -> int:
+        return len(self.sites)
+
+    def migratable(self) -> List[JobView]:
+        """Running jobs past their migration cooldown, in jid order."""
+        return [j for j in self.jobs if j.state == "running" and j.eligible]
+
+    def running(self) -> List[JobView]:
+        return [j for j in self.jobs if j.state == "running"]
+
+    def queued(self) -> List[JobView]:
+        return [j for j in self.jobs if j.state == "queued"]
+
+    def paused(self) -> List[JobView]:
+        return [j for j in self.jobs if j.state == "paused"]
+
+    # ---- vectorized views (lazy, cached) ----------------------------------
+    @cached_property
+    def job_sites(self) -> np.ndarray:
+        return np.array([j.site for j in self.jobs], dtype=np.int64)
+
+    @cached_property
+    def job_ckpt_bytes(self) -> np.ndarray:
+        return np.array([j.ckpt_bytes for j in self.jobs], dtype=np.float64)
+
+    @cached_property
+    def job_remaining_s(self) -> np.ndarray:
+        return np.array([j.remaining_compute_s for j in self.jobs], dtype=np.float64)
+
+    @cached_property
+    def site_window_s(self) -> np.ndarray:
+        return np.array([s.window_remaining_s for s in self.sites], dtype=np.float64)
+
+    @cached_property
+    def site_renewable(self) -> np.ndarray:
+        return np.array([s.renewable_active for s in self.sites], dtype=bool)
+
+    @cached_property
+    def site_load(self) -> np.ndarray:
+        return np.array([s.load for s in self.sites], dtype=np.float64)
+
+    @cached_property
+    def site_free_slots(self) -> np.ndarray:
+        return np.array([s.free_slots for s in self.sites], dtype=np.int64)
+
+    # ---- the one constructor ----------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        t: float,
+        jobs: Iterable[JobView],
+        sites: Sequence[SiteView],
+        *,
+        nic_bps: Optional[float] = None,
+        transfers: Sequence[Tuple[int, int]] = (),
+        bandwidth_bps: Optional[np.ndarray] = None,
+    ) -> "ClusterState":
+        """Assemble a snapshot.
+
+        Either pass an explicit ``bandwidth_bps`` matrix (tests, replay), or
+        pass the per-site NIC rate ``nic_bps`` plus the in-flight
+        ``transfers`` as ``(src, dst)`` pairs and the advertised matrix is
+        computed from per-NIC share counts.
+        """
+        sites = tuple(sites)
+        if bandwidth_bps is None:
+            if nic_bps is None:
+                raise ValueError("need nic_bps (with transfers) or bandwidth_bps")
+            bandwidth_bps = advertised_bandwidth(len(sites), nic_bps, transfers)
+        return cls(t=t, jobs=tuple(jobs), sites=sites,
+                   bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64))
+
+
+def site_views_from_traces(
+    traces, t: float, *, slots: int, busy: Optional[Sequence[int]] = None,
+    queued: Optional[Sequence[int]] = None,
+) -> List[SiteView]:
+    """SiteViews for a point-in-time look at a set of traces (no noise, no
+    in-flight state) — the assembly shared by the dry-run planner and the
+    serve router. The simulator builds richer views itself (forecast noise,
+    incoming transfers)."""
+    views = []
+    for s, tr in enumerate(traces):
+        nw = tr.next_window(t)
+        views.append(SiteView(
+            sid=s,
+            slots=slots,
+            busy=busy[s] if busy is not None else 0,
+            queued=queued[s] if queued is not None else 0,
+            renewable_active=tr.active(t),
+            window_remaining_s=tr.remaining(t),
+            next_window_start_s=nw.start_s if nw else float("inf"),
+        ))
+    return views
+
+
+def nic_share_counts(
+    transfers: Sequence[Tuple[int, int]],
+) -> Tuple[Dict[int, int], Dict[int, int]]:
+    """Flows per source / destination NIC — the transfer loop's share model."""
+    src: Dict[int, int] = {}
+    dst: Dict[int, int] = {}
+    for s, d in transfers:
+        src[s] = src.get(s, 0) + 1
+        dst[d] = dst.get(d, 0) + 1
+    return src, dst
+
+
+def advertised_bandwidth(
+    n_sites: int, nic_bps: float, transfers: Sequence[Tuple[int, int]] = ()
+) -> np.ndarray:
+    """Effective (src, dst) bandwidth matrix under per-NIC fair sharing:
+    ``min(nic/flows(src), nic/flows(dst))`` with idle NICs at full rate."""
+    bw = np.full((n_sites, n_sites), nic_bps, dtype=np.float64)
+    if transfers:
+        src, dst = nic_share_counts(transfers)
+        for s, k in src.items():
+            bw[s, :] = np.minimum(bw[s, :], nic_bps / k)
+        for d, k in dst.items():
+            bw[:, d] = np.minimum(bw[:, d], nic_bps / k)
+    return bw
+
+
+__all__ = [
+    "ClusterState", "JobView", "SiteView", "advertised_bandwidth",
+    "nic_share_counts", "site_views_from_traces",
+]

@@ -13,8 +13,9 @@ noise on the remaining duration (σ configurable); the Oracle policy gets
 """
 from __future__ import annotations
 
+import bisect
 from dataclasses import dataclass, field
-from typing import List, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -33,25 +34,55 @@ class Window:
 
 
 @dataclass
+class TraceProfile:
+    """Shape of the renewable-surplus process a trace is drawn from.
+    Scenario dataclasses compose one of these; ``generate_trace`` consumes
+    it. Defaults reproduce the paper's CAISO calibration (§VII, fn. 1)."""
+
+    mean_window_h: float = 4.25
+    max_window_h: float = 9.5
+    min_window_h: float = 1.5
+    p_window: float = 1.0
+    noon_h: float = 12.5
+    phase_spread_h: float = 9.0
+    p_wind: float = 0.5
+    wind_mean_h: float = 2.5
+
+
+@dataclass
 class SiteTrace:
     site: int
     windows: List[Window]
+    # bisect cache over the (sorted, non-overlapping) window bounds; rebuilt
+    # whenever the window count changes
+    _starts: List[float] = field(default=None, repr=False, compare=False)
+    _ends: List[float] = field(default=None, repr=False, compare=False)
+    _n_cached: int = field(default=-1, repr=False, compare=False)
+
+    def _index(self, t: float) -> int:
+        """Index of the window containing t, or -1."""
+        if self._n_cached != len(self.windows):
+            self.windows.sort(key=lambda w: w.start_s)
+            self._starts = [w.start_s for w in self.windows]
+            self._ends = [w.end_s for w in self.windows]
+            self._n_cached = len(self.windows)
+        i = bisect.bisect_right(self._starts, t) - 1
+        if i >= 0 and t < self._ends[i]:
+            return i
+        return -1
 
     def active(self, t: float) -> bool:
-        return any(w.start_s <= t < w.end_s for w in self.windows)
+        return self._index(t) >= 0
 
     def remaining(self, t: float) -> float:
         """Remaining surplus seconds at time t (0 if not in a window)."""
-        for w in self.windows:
-            if w.start_s <= t < w.end_s:
-                return w.end_s - t
-        return 0.0
+        i = self._index(t)
+        return self._ends[i] - t if i >= 0 else 0.0
 
-    def next_window(self, t: float):
-        for w in self.windows:
-            if w.start_s > t:
-                return w
-        return None
+    def next_window(self, t: float) -> Optional[Window]:
+        self._index(t)  # refresh cache / sort
+        i = bisect.bisect_right(self._starts, t)
+        return self.windows[i] if i < len(self.windows) else None
 
     def renewable_seconds(self, t0: float, t1: float) -> float:
         tot = 0.0
@@ -65,18 +96,23 @@ def generate_trace(
     days: int = 7,
     *,
     seed: int = 0,
-    mean_window_h: float = 4.25,
-    max_window_h: float = 9.5,
-    min_window_h: float = 1.5,
-    p_window: float = 1.0,
-    noon_h: float = 12.5,
-    phase_spread_h: float = 9.0,
-    p_wind: float = 0.5,
-    wind_mean_h: float = 2.5,
+    profile: Optional[TraceProfile] = None,
+    **overrides,
 ) -> List[SiteTrace]:
     """CAISO-calibrated per-site renewable windows over `days`:
     one solar-curtailment window per day (midday, site-phase-shifted) plus
-    an optional night wind-curtailment window."""
+    an optional night wind-curtailment window.  The window process is
+    parameterized by a :class:`TraceProfile` (scenario-composable); keyword
+    overrides adjust individual fields."""
+    import dataclasses as _dc
+
+    prof = profile or TraceProfile()
+    if overrides:
+        prof = _dc.replace(prof, **overrides)
+    mean_window_h, max_window_h, min_window_h = (
+        prof.mean_window_h, prof.max_window_h, prof.min_window_h)
+    p_window, noon_h, phase_spread_h = prof.p_window, prof.noon_h, prof.phase_spread_h
+    p_wind, wind_mean_h = prof.p_wind, prof.wind_mean_h
     rng = np.random.default_rng(seed)
     # lognormal with mean mean_window_h: mu = ln(mean) - sigma^2/2
     sigma = 0.55
@@ -118,6 +154,9 @@ class Forecaster:
 
     def __post_init__(self):
         self._rng = np.random.default_rng(self.seed)
+        # separate stream for next-window noise so adding/removing those
+        # queries never perturbs the remaining-window noise sequence
+        self._rng_next = np.random.default_rng(self.seed + 1)
 
     def remaining(self, site: int, t: float) -> float:
         true = self.traces[site].remaining(t)
@@ -126,6 +165,16 @@ class Forecaster:
         if true <= 0:
             return 0.0
         return max(0.0, true + float(self._rng.normal(0, self.sigma_s)))
+
+    def next_window_start(self, site: int, t: float) -> float:
+        """Forecast start of the next surplus window (inf if none); subject
+        to the same sigma noise as remaining-window forecasts."""
+        nw = self.traces[site].next_window(t)
+        if nw is None:
+            return float("inf")
+        if self.sigma_s <= 0:
+            return nw.start_s
+        return max(t, nw.start_s + float(self._rng_next.normal(0, self.sigma_s)))
 
     def active(self, site: int, t: float) -> bool:
         return self.traces[site].active(t)

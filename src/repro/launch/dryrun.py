@@ -2,7 +2,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 os.environ.setdefault("REPRO_UNROLL_SCAN", "1")  # full-cost accounting (see
 # models/transformer.scan_or_unroll): XLA counts While bodies once.
-"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN item 3).
+"""Multi-pod dry-run (assignment §MULTI-POD DRY-RUN item 3) plus the
+orchestration plan preview.
 
 For every (architecture × assigned shape × mesh) cell:
   jax.jit(step).lower(**ShapeDtypeStructs).compile()
@@ -12,9 +13,17 @@ bytes for §Roofline) and the collective bytes parsed from the compiled HLO
 (all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute)
 into a JSON artifact per cell that benchmarks/roofline.py consumes.
 
+``--plan`` is the *orchestration* dry-run: it materializes a registered
+scenario at a chosen sim-time, builds the same ClusterState snapshot the
+simulator hands to policies (one shared constructor,
+``repro.core.state.ClusterState.build``) and prints the typed actions a
+policy would emit — a what-would-happen preview without running the sim.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-1.7b --shape train_4k
   PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  PYTHONPATH=src python -m repro.launch.dryrun --plan --scenario flaky-wan \
+      --policy feasibility-aware --at-hour 36
 """
 import argparse
 import json
@@ -269,6 +278,42 @@ def lower_cell(
     return record
 
 
+def plan_orchestration(
+    scenario: str = "paper-table6",
+    policy: str = "feasibility-aware",
+    at_hour: float = 36.0,
+    fill: float = 0.5,
+):
+    """Orchestration dry-run: scenario state at sim-time ``at_hour`` ->
+    ClusterState (via the shared constructor) -> the policy's typed actions.
+
+    Placement is synthetic but scenario-faithful: the earliest-arrived jobs
+    run at their home sites, up to ``fill`` of each site's slots. Returns
+    (state, actions)."""
+    from repro.core.orchestrator import make_policy
+    from repro.core.scenarios import get_scenario
+    from repro.core.simulator import generate_jobs
+    from repro.core.state import ClusterState, JobView, site_views_from_traces
+
+    scn = get_scenario(scenario)
+    cfg = scn.sim_config()
+    traces = scn.build_traces()
+    t = at_hour * 3600.0
+    cap = max(1, int(round(cfg.slots_per_site * fill)))
+    per_site = [0] * cfg.n_sites
+    views = []
+    for j in generate_jobs(cfg):
+        if j.arrival_s > t or per_site[j.home_site] >= cap:
+            continue
+        views.append(JobView(j.jid, j.home_site, j.ckpt_bytes, j.compute_s))
+        per_site[j.home_site] += 1
+    sites = site_views_from_traces(traces, t, slots=cfg.slots_per_site,
+                                   busy=per_site)
+    state = ClusterState.build(t, views, sites, nic_bps=cfg.wan_gbps * 1e9)
+    actions = make_policy(policy).decide(state)
+    return state, actions
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, help="arch id (default: all assigned)")
@@ -281,7 +326,26 @@ def main():
                     help="sharding strategy (parallel/strategies.py)")
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--out", default=None)
+    ap.add_argument("--plan", action="store_true",
+                    help="orchestration plan preview instead of HLO lowering")
+    ap.add_argument("--scenario", default="paper-table6")
+    ap.add_argument("--policy", default="feasibility-aware")
+    ap.add_argument("--at-hour", type=float, default=36.0)
     args = ap.parse_args()
+
+    if args.plan:
+        state, actions = plan_orchestration(args.scenario, args.policy, args.at_hour)
+        print(f"[plan] scenario={args.scenario} policy={args.policy} "
+              f"t={args.at_hour:.1f}h jobs={len(state.jobs)}")
+        for s in state.sites:
+            print(f"[plan]   site{s.sid}: busy={s.busy} "
+                  f"{'GREEN' if s.renewable_active else 'grid '} "
+                  f"window={s.window_remaining_s / 3600:.2f}h")
+        if not actions:
+            print("[plan] no actions")
+        for a in actions:
+            print(f"[plan]   {a}")
+        return 0
 
     archs = [args.arch] if args.arch else list(ASSIGNED)
     meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]

@@ -1,17 +1,65 @@
-"""Serving launcher: batched greedy decode with a KV cache / SSM state.
+"""Serving launcher: batched greedy decode with a KV cache / SSM state,
+plus a green request router over the shared ClusterState snapshot.
+
+The router is the serving-side analogue of the training orchestrator (cf.
+Heron's renewable-aware routing in *AI Greenferencing*): inference batches
+are steered toward sites inside renewable windows, load-balanced across
+free slots, using the same ``ClusterState.build`` constructor the simulator
+and the dry-run planner use.
 
   PYTHONPATH=src python -m repro.launch.serve --arch micro-lm --tokens 32
+  PYTHONPATH=src python -m repro.launch.serve --green-route 64 \
+      --scenario solar-heavy --at-hour 12
 """
 from __future__ import annotations
 
 import argparse
 import time
+from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.models.model import build_model
+
+
+def build_serving_state(scenario: str = "paper-table6", at_hour: float = 12.0,
+                        busy: Tuple[int, ...] = ()):
+    """Snapshot of the serving fleet at sim-time ``at_hour`` for a
+    registered scenario, through the shared ClusterState constructor."""
+    from repro.core.scenarios import get_scenario
+    from repro.core.state import ClusterState, site_views_from_traces
+
+    scn = get_scenario(scenario)
+    cfg = scn.sim_config()
+    traces = scn.build_traces()
+    t = at_hour * 3600.0
+    busy_full = [busy[s] if s < len(busy) else 0 for s in range(cfg.n_sites)]
+    sites = site_views_from_traces(traces, t, slots=cfg.slots_per_site,
+                                   busy=busy_full)
+    return ClusterState.build(t, [], sites, nic_bps=cfg.wan_gbps * 1e9)
+
+
+def green_route(state, n_requests: int) -> List[int]:
+    """Assign each request to the greenest feasible site: renewable sites
+    with free slots first (longest remaining window wins), then spill by
+    least relative load once renewable capacity is exhausted."""
+    load = {s.sid: s.busy for s in state.sites}
+    out: List[int] = []
+    for _ in range(n_requests):
+        free_green = [s for s in state.sites
+                      if s.renewable_active and load[s.sid] < s.slots]
+        if free_green:
+            best = max(free_green,
+                       key=lambda s: (s.window_remaining_s, -load[s.sid], -s.sid))
+        else:
+            best = min(state.sites,
+                       key=lambda s: (load[s.sid] / max(s.slots, 1),
+                                      not s.renewable_active, s.sid))
+        load[best.sid] += 1
+        out.append(best.sid)
+    return out
 
 
 def greedy_decode(model, params, prompt_tokens, max_new: int, cache_len: int):
@@ -37,7 +85,25 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=8)
     ap.add_argument("--tokens", type=int, default=24)
+    ap.add_argument("--green-route", type=int, default=0, metavar="N",
+                    help="route N inference requests across the scenario's "
+                         "sites and exit")
+    ap.add_argument("--scenario", default="paper-table6")
+    ap.add_argument("--at-hour", type=float, default=12.0)
     args = ap.parse_args(argv)
+
+    if args.green_route > 0:
+        state = build_serving_state(args.scenario, args.at_hour)
+        routes = green_route(state, args.green_route)
+        counts = {s.sid: routes.count(s.sid) for s in state.sites}
+        print(f"[serve] green routing {args.green_route} requests "
+              f"({args.scenario} @ t={args.at_hour:.1f}h):")
+        for s in state.sites:
+            tag = "GREEN" if s.renewable_active else "grid "
+            print(f"[serve]   site{s.sid} {tag} "
+                  f"window={s.window_remaining_s / 3600:.2f}h "
+                  f"-> {counts[s.sid]} requests")
+        return 0
 
     cfg = get_config(args.arch)
     if args.smoke:

@@ -45,6 +45,9 @@ def main(argv=None):
     ap.add_argument("--grad-compress", action="store_true")
     ap.add_argument("--preempt-with-trace", action="store_true",
                     help="preempt when the site's renewable window closes")
+    ap.add_argument("--scenario", default=None,
+                    help="drive the preemption trace from a registered "
+                         "scenario (see repro.core.scenarios)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -56,9 +59,18 @@ def main(argv=None):
     ckpt = CheckpointManager(root, job=cfg.name, mode=args.ckpt_mode)
 
     preempt = None
-    if args.preempt_with_trace:
+    if args.scenario:
+        from repro.core.scenarios import get_scenario
+
+        scn = get_scenario(args.scenario)
+        trace = scn.build_traces()[0]
+        print(f"[train] scenario {scn.name!r}: {scn.description}")
+        # 1 training step ~ 1 simulated minute, clocked from the site's
+        # first surplus window so the demo trains until it closes
+        t0 = trace.windows[0].start_s if trace.windows else 0.0
+        preempt = lambda step: not trace.active(t0 + step * 60.0)
+    elif args.preempt_with_trace:
         trace = generate_trace(1, days=1, seed=0)[0]
-        # 1 training step ~ 1 simulated minute for the demo
         preempt = lambda step: not trace.active(step * 60.0)
 
     trainer = Trainer(

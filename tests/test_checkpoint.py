@@ -123,7 +123,9 @@ def test_elastic_restore_with_shardings(tmp_path):
     slice)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     mgr = CheckpointManager(str(tmp_path), job="j4")
     tree = make_tree()
     mgr.save(1, tree)

@@ -4,7 +4,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # clean environments: deterministic sweeps still run
+    HAS_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -81,19 +86,24 @@ def test_quantize_matches_oracle(n, dtype):
     np.testing.assert_allclose(np.asarray(x_p), np.asarray(x_r), atol=1e-6)
 
 
-@settings(max_examples=30, deadline=None)
-@given(st.integers(1, 64), st.floats(0.01, 100.0))
-def test_quantize_error_bound(blocks, scale_mag):
-    """|x - dq(q(x))| <= amax/254 per block — the int8 quantization error
-    bound that makes checkpoint compression training-safe."""
-    n = 256 * blocks
-    x = jax.random.normal(jax.random.PRNGKey(blocks), (n,), jnp.float32) * scale_mag
-    q, s = ref.quantize_int8_ref(x)
-    xd = ref.dequantize_int8_ref(q, s)
-    err = np.abs(np.asarray(xd - x)).reshape(blocks, 256)
-    amax = np.abs(np.asarray(x)).reshape(blocks, 256).max(axis=1)
-    bound = amax / 254 + 1e-7
-    assert (err.max(axis=1) <= bound + 1e-6 * amax).all()
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(st.integers(1, 64), st.floats(0.01, 100.0))
+    def test_quantize_error_bound(blocks, scale_mag):
+        """|x - dq(q(x))| <= amax/254 per block — the int8 quantization error
+        bound that makes checkpoint compression training-safe."""
+        n = 256 * blocks
+        x = jax.random.normal(jax.random.PRNGKey(blocks), (n,), jnp.float32) * scale_mag
+        q, s = ref.quantize_int8_ref(x)
+        xd = ref.dequantize_int8_ref(q, s)
+        err = np.abs(np.asarray(xd - x)).reshape(blocks, 256)
+        amax = np.abs(np.asarray(x)).reshape(blocks, 256).max(axis=1)
+        bound = amax / 254 + 1e-7
+        assert (err.max(axis=1) <= bound + 1e-6 * amax).all()
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; property tests inactive")
+    def test_quantize_error_bound():
+        pass
 
 
 def test_quantize_zero_block():

@@ -1,23 +1,31 @@
-"""Algorithm 1 invariants: the feasibility filter is a hard safety boundary."""
+"""Algorithm 1 invariants on the typed Action/ClusterState API: the
+feasibility filter is a hard safety boundary, the policy registry resolves
+names/aliases/configs, and the advertised bandwidth matrix matches the
+per-NIC share model."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # clean environments: deterministic tests still run
+    HAS_HYPOTHESIS = False
 
 from repro.core import feasibility as fz
+from repro.core.actions import Migrate, Throttle
 from repro.core.orchestrator import (
-    EnergyOnlyPolicy, FeasibilityAwarePolicy, JobView, OrchestratorContext,
-    SiteView, StaticPolicy, make_policy,
+    EnergyOnlyPolicy, FeasibilityAwarePolicy, FeasibilityConfig,
+    GridThrottlePolicy, OraclePolicy, StaticPolicy, available_policies,
+    make_policy,
 )
+from repro.core.state import ClusterState, JobView, SiteView, advertised_bandwidth
 
 GB = 1e9
 
 
-def make_ctx(jobs, sites, bw_gbps=10.0):
-    n = len(sites)
-    return OrchestratorContext(
-        t=0.0, jobs=jobs, sites=sites,
-        bandwidth_bps=np.full((n, n), bw_gbps * 1e9),
-    )
+def make_state(jobs, sites, bw_gbps=10.0):
+    return ClusterState.build(t=0.0, jobs=jobs, sites=sites,
+                              nic_bps=bw_gbps * 1e9)
 
 
 def green_site(sid, window_h=2.5, slots=4, busy=0, queued=0):
@@ -30,15 +38,15 @@ def dark_site(sid, slots=4, busy=0, queued=0):
 
 def test_static_never_migrates():
     jobs = [JobView(0, 0, 1 * GB, 3600.0)]
-    ctx = make_ctx(jobs, [dark_site(0), green_site(1)])
-    assert StaticPolicy().decide(ctx) == []
+    state = make_state(jobs, [dark_site(0), green_site(1)])
+    assert StaticPolicy().decide(state) == []
 
 
 def test_feasibility_never_migrates_class_c():
     """Class C (T_transfer >= 300 s) jobs are NEVER migrated (§VI.D)."""
     jobs = [JobView(0, 0, 400 * GB, 50 * 3600.0)]  # 320 s @ 10 Gbps
-    ctx = make_ctx(jobs, [dark_site(0), green_site(1, window_h=9.5)])
-    assert FeasibilityAwarePolicy().decide(ctx) == []
+    state = make_state(jobs, [dark_site(0), green_site(1, window_h=9.5)])
+    assert FeasibilityAwarePolicy().decide(state) == []
 
 
 def test_feasibility_respects_alpha_window():
@@ -47,11 +55,11 @@ def test_feasibility_respects_alpha_window():
     jobs = [JobView(0, 0, 30 * GB, 50 * 3600.0)]  # t_cost ≈ 34.7 s
     # α=0.1: need window > 347 s; give 300 s
     sites = [dark_site(0), SiteView(1, 4, 0, 0, True, 300.0)]
-    assert FeasibilityAwarePolicy().decide(make_ctx(jobs, sites)) == []
+    assert FeasibilityAwarePolicy().decide(make_state(jobs, sites)) == []
     # with a 2.5 h window it migrates
     sites = [dark_site(0), green_site(1)]
-    dec = FeasibilityAwarePolicy().decide(make_ctx(jobs, sites))
-    assert dec == [(0, 1)]
+    actions = FeasibilityAwarePolicy().decide(make_state(jobs, sites))
+    assert actions == [Migrate(0, 1)]
 
 
 def test_feasibility_prefers_less_loaded_feasible_site():
@@ -61,68 +69,219 @@ def test_feasibility_prefers_less_loaded_feasible_site():
         green_site(1, window_h=3.0, busy=4, queued=6),  # congested
         green_site(2, window_h=3.0, busy=0),
     ]
-    dec = FeasibilityAwarePolicy().decide(make_ctx(jobs, sites))
-    assert dec == [(0, 2)]
+    actions = FeasibilityAwarePolicy().decide(make_state(jobs, sites))
+    assert actions == [Migrate(0, 2)]
+
+
+def test_feasibility_skips_non_migratable_jobs():
+    """Queued/paused jobs and jobs inside the cooldown are never migrated."""
+    jobs = [
+        JobView(0, 0, 2 * GB, 10 * 3600.0, state="queued"),
+        JobView(1, 0, 2 * GB, 10 * 3600.0, state="paused"),
+        JobView(2, 0, 2 * GB, 10 * 3600.0, state="running", eligible=False),
+        JobView(3, 0, 2 * GB, 10 * 3600.0, state="running"),
+    ]
+    actions = FeasibilityAwarePolicy().decide(
+        make_state(jobs, [dark_site(0), green_site(1)]))
+    assert actions == [Migrate(3, 1)]
 
 
 def test_energy_only_ignores_feasibility():
     """The baseline launches Class C transfers — that's its failure mode."""
     jobs = [JobView(0, 0, 400 * GB, 50 * 3600.0)]
-    ctx = make_ctx(jobs, [dark_site(0), green_site(1)])
-    assert EnergyOnlyPolicy().decide(ctx) == [(0, 1)]
+    state = make_state(jobs, [dark_site(0), green_site(1)])
+    assert EnergyOnlyPolicy().decide(state) == [Migrate(0, 1)]
+
+
+def test_grid_throttle_only_on_dark_sites():
+    jobs = [
+        JobView(0, 0, 1 * GB, 3600.0),  # dark site -> throttle
+        JobView(1, 1, 1 * GB, 3600.0),  # green site at full power -> nothing
+        JobView(2, 1, 1 * GB, 3600.0, power_frac=0.5),  # green -> restore
+    ]
+    actions = GridThrottlePolicy(power_frac=0.5).decide(
+        make_state(jobs, [dark_site(0), green_site(1)]))
+    assert actions == [Throttle(0, 0.5), Throttle(2, 1.0)]
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
 
 
 def test_oracle_is_feasibility_aware():
     p = make_policy("oracle")
     assert isinstance(p, FeasibilityAwarePolicy)
+    assert isinstance(p, OraclePolicy)
     assert p.name == "oracle"
+    assert p.wants_oracle_forecast
+
+
+def test_registry_lists_all_builtins():
+    names = available_policies()
+    for want in ("static", "energy-only", "feasibility-aware", "oracle",
+                 "grid-throttle", "defer-to-window"):
+        assert want in names
+
+
+def test_registry_aliases_and_normalization():
+    assert isinstance(make_policy("energy_only"), EnergyOnlyPolicy)
+    assert isinstance(make_policy("energyonly"), EnergyOnlyPolicy)
+    assert isinstance(make_policy("ours"), FeasibilityAwarePolicy)
+    assert isinstance(make_policy("Feasibility"), FeasibilityAwarePolicy)
+
+
+def test_registered_names_are_normalized_and_resolvable():
+    """Names registered with underscores/uppercase must round-trip through
+    make_policy (keys are stored normalized)."""
+    from repro.core.orchestrator import (
+        _ALIASES, _CONFIGS, _REGISTRY, Policy, register_policy,
+    )
+
+    @register_policy("My_Custom_Policy", aliases=("MCP",))
+    class MyCustomPolicy(Policy):
+        def decide(self, state):
+            return []
+
+    try:
+        assert MyCustomPolicy.name == "my-custom-policy"
+        assert isinstance(make_policy("My_Custom_Policy"), MyCustomPolicy)
+        assert isinstance(make_policy("my-custom-policy"), MyCustomPolicy)
+        assert isinstance(make_policy("mcp"), MyCustomPolicy)
+        assert "my-custom-policy" in available_policies()
+    finally:
+        _REGISTRY.pop("my-custom-policy", None)
+        _CONFIGS.pop("my-custom-policy", None)
+        _ALIASES.pop("mcp", None)
+
+
+def test_unknown_policy_lists_available_names():
+    with pytest.raises(KeyError) as ei:
+        make_policy("does-not-exist")
+    msg = str(ei.value)
+    assert "does-not-exist" in msg
+    for name in available_policies():
+        assert name in msg
+
+
+def test_config_fields_stay_in_sync_with_policies():
+    """The config dataclasses mirror their policy's fields; this guards the
+    two-place knob lists against drifting apart (a missing mirror makes
+    make_policy raise TypeError on the asdict splat)."""
+    import dataclasses
+
+    from repro.core.orchestrator import (
+        DeferConfig, DeferToWindowPolicy, GridThrottlePolicy, ThrottleConfig,
+    )
+
+    for config_cls, policy_cls in [
+        (FeasibilityConfig, FeasibilityAwarePolicy),
+        (ThrottleConfig, GridThrottlePolicy),
+        (DeferConfig, DeferToWindowPolicy),
+    ]:
+        cfg_fields = {f.name for f in dataclasses.fields(config_cls)}
+        pol_fields = {f.name for f in dataclasses.fields(policy_cls)}
+        assert cfg_fields == pol_fields, (config_cls, policy_cls)
+
+
+def test_policy_config_dataclass_reaches_policy():
+    cfgd = FeasibilityConfig(eps=0.05, forecast_sigma_s=900.0, alpha=0.2)
+    p = make_policy("feasibility-aware", config=cfgd)
+    assert p.eps == 0.05 and p.forecast_sigma_s == 900.0 and p.alpha == 0.2
+    # kwargs override config fields
+    p2 = make_policy("feasibility-aware", config=cfgd, alpha=0.3)
+    assert p2.alpha == 0.3 and p2.eps == 0.05
+
+
+def test_stochastic_feasibility_tightens_decisions():
+    """eps>0 + sigma>0 rejects migrations the deterministic gate accepts
+    when the window barely clears T_cost/α."""
+    jobs = [JobView(0, 0, 30 * GB, 50 * 3600.0)]  # t_cost ≈ 34.7 s -> need 347 s
+    sites = [dark_site(0), SiteView(1, 4, 0, 0, True, 420.0)]
+    state = make_state(jobs, sites)
+    det = FeasibilityAwarePolicy(min_benefit_s=0.0)
+    assert det.decide(state) == [Migrate(0, 1)]
+    stoch = FeasibilityAwarePolicy(min_benefit_s=0.0, eps=0.05,
+                                   forecast_sigma_s=900.0)
+    assert stoch.decide(state) == []
+
+
+# ---------------------------------------------------------------------------
+# ClusterState bandwidth advertisement (per-NIC share counts)
+# ---------------------------------------------------------------------------
+
+
+def test_advertised_bandwidth_matches_nic_shares():
+    nic = 10e9
+    # two transfers out of site 0, one into site 2
+    bw = advertised_bandwidth(4, nic, transfers=[(0, 2), (0, 3)])
+    assert bw[0, 1] == pytest.approx(nic / 2)  # src shared 2-way, dst idle
+    assert bw[0, 2] == pytest.approx(nic / 2)  # min(nic/2, nic/1)
+    assert bw[1, 2] == pytest.approx(nic)  # dst has 1 flow: full rate...
+    assert bw[1, 3] == pytest.approx(nic)
+    assert bw[1, 0] == pytest.approx(nic)  # inbound to 0 is free
+
+
+def test_advertised_bandwidth_min_of_both_nics():
+    nic = 10e9
+    bw = advertised_bandwidth(3, nic, transfers=[(0, 1), (0, 1), (2, 1)])
+    # site0 src 2 flows; site1 dst 3 flows -> min(nic/2, nic/3)
+    assert bw[0, 1] == pytest.approx(nic / 3)
+    assert bw[2, 1] == pytest.approx(nic / 3)
+    assert bw[2, 0] == pytest.approx(nic)
 
 
 # ---------------------------------------------------------------------------
 # Property: every decision satisfies the formal feasibility domain (§VI.E)
 # ---------------------------------------------------------------------------
 
-job_st = st.builds(
-    JobView,
-    jid=st.integers(0, 63),
-    site=st.integers(0, 4),
-    ckpt_bytes=st.floats(min_value=0.1 * GB, max_value=500 * GB),
-    remaining_compute_s=st.floats(min_value=600, max_value=24 * 3600),
-)
+if HAS_HYPOTHESIS:
+    job_st = st.builds(
+        JobView,
+        jid=st.integers(0, 63),
+        site=st.integers(0, 4),
+        ckpt_bytes=st.floats(min_value=0.1 * GB, max_value=500 * GB),
+        remaining_compute_s=st.floats(min_value=600, max_value=24 * 3600),
+    )
 
-site_st = st.builds(
-    SiteView,
-    sid=st.integers(0, 0),  # replaced below
-    slots=st.just(4),
-    busy=st.integers(0, 4),
-    queued=st.integers(0, 6),
-    renewable_active=st.booleans(),
-    window_remaining_s=st.floats(min_value=0, max_value=9.5 * 3600),
-)
+    site_st = st.builds(
+        SiteView,
+        sid=st.integers(0, 0),  # replaced below
+        slots=st.just(4),
+        busy=st.integers(0, 4),
+        queued=st.integers(0, 6),
+        renewable_active=st.booleans(),
+        window_remaining_s=st.floats(min_value=0, max_value=9.5 * 3600),
+    )
 
-
-@settings(max_examples=100, deadline=None)
-@given(st.lists(job_st, min_size=1, max_size=8), st.lists(site_st, min_size=5, max_size=5),
-       st.floats(min_value=0.5, max_value=100.0))
-def test_decisions_always_in_feasible_domain(jobs, sites, bw_gbps):
-    for i, s in enumerate(sites):
-        s.sid = i
-        if not s.renewable_active:
-            s.window_remaining_s = 0.0
-    # deduplicate jids (the simulator guarantees uniqueness)
-    jobs_by_id = {}
-    for j in jobs:
-        j.site = j.site % 5
-        jobs_by_id.setdefault(j.jid, j)
-    jobs = list(jobs_by_id.values())
-    ctx = make_ctx(jobs, sites, bw_gbps)
-    for jid, dest in FeasibilityAwarePolicy().decide(ctx):
-        j = jobs_by_id[jid]
-        assert dest != j.site
-        v = fz.evaluate(
-            j.ckpt_bytes, bw_gbps * 1e9, sites[dest].window_remaining_s
-        )
-        assert bool(v.feasible), (
-            f"infeasible migration chosen: {j.ckpt_bytes/GB:.1f} GB "
-            f"@ {bw_gbps} Gbps window={sites[dest].window_remaining_s}s"
-        )
+    @settings(max_examples=100, deadline=None)
+    @given(st.lists(job_st, min_size=1, max_size=8),
+           st.lists(site_st, min_size=5, max_size=5),
+           st.floats(min_value=0.5, max_value=100.0))
+    def test_decisions_always_in_feasible_domain(jobs, sites, bw_gbps):
+        for i, s in enumerate(sites):
+            s.sid = i
+            if not s.renewable_active:
+                s.window_remaining_s = 0.0
+        # deduplicate jids (the simulator guarantees uniqueness)
+        jobs_by_id = {}
+        for j in jobs:
+            j.site = j.site % 5
+            jobs_by_id.setdefault(j.jid, j)
+        jobs = list(jobs_by_id.values())
+        state = make_state(jobs, sites, bw_gbps)
+        for action in FeasibilityAwarePolicy().decide(state):
+            assert isinstance(action, Migrate)
+            j = jobs_by_id[action.jid]
+            assert action.dest != j.site
+            v = fz.evaluate(
+                j.ckpt_bytes, bw_gbps * 1e9, sites[action.dest].window_remaining_s
+            )
+            assert bool(v.feasible), (
+                f"infeasible migration chosen: {j.ckpt_bytes/GB:.1f} GB "
+                f"@ {bw_gbps} Gbps window={sites[action.dest].window_remaining_s}s"
+            )
+else:
+    @pytest.mark.skip(reason="hypothesis not installed; property tests inactive")
+    def test_decisions_always_in_feasible_domain():
+        pass

@@ -76,7 +76,9 @@ def test_logical_spec_dedup_and_unconstrained():
 def test_shd_shape_aware_pruning():
     """A size-1 dim must never claim a mesh axis (the decode bug that caused
     full-weight gathers — EXPERIMENTS.md §Perf decode-tp)."""
-    mesh = jax.make_mesh((1,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("model",))
     from repro.parallel.sharding import shd, use_rules
 
     with mesh, use_rules(DEFAULT_RULES.with_overrides(seq="model", mlp_act="model")):

@@ -1,0 +1,101 @@
+"""Scenario registry: built-ins, resolution errors, composability, and
+that each scenario actually changes what the simulator sees."""
+import dataclasses
+
+import pytest
+
+from repro.core import ClusterSimulator, make_policy
+from repro.core.scenarios import (
+    JobMix, Scenario, WanProfile, available_scenarios, get_scenario,
+    register_scenario,
+)
+from repro.core.simulator import generate_jobs
+from repro.core.traces import TraceProfile
+
+BUILTINS = ("paper-table6", "flaky-wan", "solar-heavy", "large-ckpt-classC",
+            "failure-storm")
+
+
+def test_all_builtins_registered():
+    names = available_scenarios()
+    for b in BUILTINS:
+        assert b in names
+    for b in BUILTINS:
+        scn = get_scenario(b)
+        assert scn.name == b
+        assert scn.description
+
+
+def test_unknown_scenario_lists_available():
+    with pytest.raises(KeyError) as ei:
+        get_scenario("no-such-scenario")
+    msg = str(ei.value)
+    assert "no-such-scenario" in msg
+    for b in BUILTINS:
+        assert b in msg
+
+
+def test_get_scenario_passthrough_and_registration():
+    scn = Scenario(name="test-tmp", description="x", wan=WanProfile(gbps=2.0))
+    assert get_scenario(scn) is scn
+    register_scenario(scn)
+    try:
+        assert get_scenario("test-tmp").wan.gbps == 2.0
+    finally:
+        from repro.core import scenarios as _m
+        _m._REGISTRY.pop("test-tmp", None)
+
+
+def test_paper_table6_matches_paper_defaults():
+    cfg = get_scenario("paper-table6").sim_config()
+    assert cfg.n_sites == 5 and cfg.slots_per_site == 4
+    assert cfg.wan_gbps == 10.0 and cfg.days == 7 and cfg.n_jobs == 240
+    assert cfg.frac_a == 0.70 and cfg.frac_b == 0.20
+
+
+def test_sim_config_overrides_win():
+    cfg = get_scenario("paper-table6").sim_config(wan_gbps=1.0, dt_s=120.0)
+    assert cfg.wan_gbps == 1.0 and cfg.dt_s == 120.0
+    assert cfg.n_jobs == 240  # untouched fields keep scenario values
+
+
+def test_scenarios_compose_with_replace():
+    base = get_scenario("flaky-wan")
+    harsher = dataclasses.replace(
+        base, name="flaky-wan-1g", wan=dataclasses.replace(base.wan, gbps=1.0))
+    assert harsher.wan.hourly_degrade_prob == base.wan.hourly_degrade_prob
+    assert harsher.sim_config().wan_gbps == 1.0
+    assert base.sim_config().wan_gbps == 10.0  # original untouched
+
+
+def test_large_ckpt_scenario_skews_job_mix():
+    cfg = get_scenario("large-ckpt-classC").sim_config(n_jobs=200)
+    jobs = generate_jobs(cfg)
+    frac_c = sum(1 for j in jobs if j.size_class == "C") / len(jobs)
+    assert frac_c > 0.35  # nominal 50%
+
+
+def test_solar_heavy_trace_profile_flows_to_traces():
+    scn = get_scenario("solar-heavy")
+    assert scn.trace.mean_window_h == 6.5
+    traces = scn.build_traces()
+    from repro.core import trace_stats
+    st = trace_stats(traces)
+    base = trace_stats(get_scenario("paper-table6").build_traces())
+    assert st["mean_h"] > base["mean_h"]
+
+
+def test_failure_storm_produces_failures():
+    sim = ClusterSimulator.from_scenario(
+        "failure-storm", "static",
+        overrides=dict(days=2, n_jobs=30, dt_s=120.0))
+    r = sim.run()
+    assert r.failures > 0
+    assert r.completed == 30
+
+
+def test_flaky_wan_has_degraded_hours():
+    sim = ClusterSimulator.from_scenario(
+        "flaky-wan", "static", overrides=dict(days=2, n_jobs=5, dt_s=120.0))
+    rates = {sim._nic_bps(h * 3600.0) for h in range(48)}
+    assert rates == {0.5e9, 10e9}  # both degraded and nominal hours occur

@@ -139,3 +139,33 @@ def test_serve_decode_runs():
     prompt = jax.random.randint(jax.random.PRNGKey(1), (2, 4), 0, cfg.vocab_size)
     seqs = greedy_decode(model, params, prompt, max_new=6, cache_len=10)
     assert seqs.shape == (2, 10)
+
+
+def test_serve_green_routing_uses_shared_state():
+    """Serve-layer routing builds the same ClusterState snapshot as the
+    simulator and fills renewable capacity before spilling to grid sites."""
+    from repro.launch.serve import build_serving_state, green_route
+
+    state = build_serving_state("solar-heavy", at_hour=13.0)
+    assert len(state.sites) == 5
+    routes = green_route(state, 16)
+    assert len(routes) == 16
+    green = {s.sid for s in state.sites if s.renewable_active}
+    free_green_slots = sum(s.slots - s.busy for s in state.sites
+                           if s.renewable_active)
+    head = routes[:min(16, free_green_slots)]
+    assert green, "solar-heavy at 13:00 must have at least one green site"
+    assert all(sid in green for sid in head)
+
+
+def test_orchestration_plan_preview():
+    """The dry-run planner produces typed actions from a scenario snapshot
+    without running the simulator."""
+    from repro.core.actions import Action
+    from repro.launch.dryrun import plan_orchestration
+
+    state, actions = plan_orchestration("paper-table6", "feasibility-aware",
+                                        at_hour=36.0)
+    assert len(state.sites) == 5
+    assert len(state.jobs) > 0
+    assert all(isinstance(a, Action) for a in actions)
