@@ -1,0 +1,76 @@
+"""CI regression gate for the orchestration hot loop.
+
+Compares the ``BENCH_quick.latest.json`` written by ``benchmarks/run.py
+--quick`` against the committed ``BENCH_quick.json`` baseline and fails
+(exit 1) if any policy's ticks/sec regressed more than ``--threshold``
+(default 30%).
+
+Raw ticks/sec is machine-dependent, so both records carry ``calib_s`` —
+wall time of a fixed python+numpy workload (``benchmarks.run.calibrate``)
+— and the comparison normalizes by relative machine speed:
+
+    normalized_tps = latest_tps * (latest_calib_s / baseline_calib_s)
+
+i.e. a runner that executes the calibration loop 2x slower is forgiven a
+2x lower raw ticks/sec before the threshold applies.
+
+  PYTHONPATH=src python -m benchmarks.check_quick
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks.run import QUICK_BASELINE, QUICK_LATEST
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=QUICK_BASELINE)
+    ap.add_argument("--latest", default=QUICK_LATEST)
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max allowed fractional ticks/sec regression")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.latest) as f:
+        latest = json.load(f)
+
+    speed = latest["calib_s"] / base["calib_s"]  # >1: this machine is slower
+    print(f"[check_quick] machine-speed factor {speed:.2f} "
+          f"(baseline calib {base['calib_s']}s, here {latest['calib_s']}s)")
+    failed = False
+    for policy, b in base["policies"].items():
+        cur = latest["policies"].get(policy)
+        if cur is None:
+            print(f"[check_quick] FAIL {policy}: missing from latest record")
+            failed = True
+            continue
+        norm_tps = cur["ticks_per_sec"] * speed
+        floor = b["ticks_per_sec"] * (1.0 - args.threshold)
+        # escape hatch: ticks count *events*, so a change that legitimately
+        # removes events lowers ticks/sec without being a regression — let
+        # machine-normalized wall time (what the gate actually protects)
+        # override the verdict when it did not get worse
+        norm_wall = cur["wall_s"] / speed
+        wall_ok = norm_wall <= b["wall_s"] * (1.0 + args.threshold)
+        ok = norm_tps >= floor or wall_ok
+        verdict = "ok" if ok else "FAIL"
+        print(f"[check_quick] {verdict} {policy}: {cur['ticks_per_sec']:.0f} "
+              f"ticks/sec raw, {norm_tps:.0f} normalized vs baseline "
+              f"{b['ticks_per_sec']:.0f} (floor {floor:.0f}); wall "
+              f"{cur['wall_s']:.2f}s raw, {norm_wall:.2f}s normalized vs "
+              f"baseline {b['wall_s']:.2f}s")
+        if not ok:
+            failed = True
+        if cur["completed"] != b["completed"]:
+            print(f"[check_quick] FAIL {policy}: completed "
+                  f"{cur['completed']} != baseline {b['completed']}")
+            failed = True
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,32 +5,90 @@ Each prints its table then a ``name,us_per_call,derived`` CSV line.
   PYTHONPATH=src python -m benchmarks.run --fast     # smaller sims
   PYTHONPATH=src python -m benchmarks.run --only table6_policy
   PYTHONPATH=src python -m benchmarks.run --quick    # CI perf smoke:
-      full 7-day/240-job paper-table6 sim, prints wall time + ticks/sec
+      full 7-day/240-job paper-table6 sim; prints wall time + ticks/sec
+      and writes BENCH_quick.latest.json next to the committed
+      BENCH_quick.json baseline (see benchmarks/check_quick.py for the
+      CI regression gate)
 """
 from __future__ import annotations
 
 import argparse
+import heapq
+import json
+import os
 import sys
+import time
 import traceback
 
+QUICK_BASELINE = os.path.join(os.path.dirname(__file__), "BENCH_quick.json")
+QUICK_LATEST = os.path.join(os.path.dirname(__file__), "BENCH_quick.latest.json")
 
-def quick_smoke() -> int:
+
+def calibrate() -> float:
+    """Wall seconds for a fixed python+numpy workload shaped like the sim
+    hot loop (heap churn + small-array numpy).  Stored alongside ticks/sec
+    so check_quick.py can normalize away machine-speed differences between
+    the committed baseline and the CI runner.  Best-of-3, matching the
+    best-of-N treatment the sim runs themselves get."""
+    import numpy as np
+
+    def once() -> float:
+        t0 = time.perf_counter()
+        rng = np.random.default_rng(0)
+        x = rng.random(512)
+        acc = 0.0
+        for _ in range(400):
+            acc += float(np.minimum(x, 0.5).sum())
+            h: list = []
+            for i in range(512):
+                heapq.heappush(h, (float(x[i]) + i, i))
+            while h:
+                heapq.heappop(h)
+        assert acc > 0
+        return time.perf_counter() - t0
+
+    return min(once() for _ in range(3))
+
+
+def quick_smoke(json_path: str = QUICK_LATEST) -> int:
     """Perf gate for the orchestration hot loop: the headline 7-day/240-job
-    run under the ``paper-table6`` scenario, end to end, with ticks/sec."""
+    run under the ``paper-table6`` scenario, end to end, with ticks/sec
+    (one tick = one processed event under the next-event engine)."""
     from repro.core import ClusterSimulator
 
     print("name,us_per_call,derived")
     ok = True
+    record = {"engine": None, "calib_s": round(calibrate(), 4), "policies": {}}
     for policy in ("feasibility-aware", "energy-only"):
-        sim = ClusterSimulator.from_scenario("paper-table6", policy)
-        r = sim.run()
+        best = None
+        for _ in range(2):  # best-of-2: shave scheduler noise off the gate
+            sim = ClusterSimulator.from_scenario("paper-table6", policy)
+            r = sim.run()
+            if best is None or r.wall_time_s < best.wall_time_s:
+                best = r
+        r = best
+        record["engine"] = r.engine
         print(f"[quick] {policy}: {r.wall_time_s:.2f}s wall for {r.ticks} ticks "
               f"({r.ticks_per_sec:.0f} ticks/sec) | grid={r.grid_kwh:.1f} kWh "
               f"renew_frac={r.renewable_fraction:.2f} migrations={r.migrations} "
-              f"completed={r.completed}")
+              f"completed={r.completed} rejected={r.rejected_actions}")
         print(f"quick_{policy},{r.wall_time_s * 1e6:.0f},"
               f"{r.ticks_per_sec:.0f} ticks/sec")
+        record["policies"][policy] = {
+            "wall_s": round(r.wall_time_s, 4),
+            "ticks": r.ticks,
+            "ticks_per_sec": round(r.ticks_per_sec, 1),
+            "grid_kwh": round(r.grid_kwh, 1),
+            "renewable_kwh": round(r.renewable_kwh, 1),
+            "migrations": r.migrations,
+            "completed": r.completed,
+            "rejected_actions": r.rejected_actions,
+        }
         ok &= r.completed == len(r.jobs)
+    with open(json_path, "w") as f:
+        json.dump(record, f, indent=1)
+        f.write("\n")
+    print(f"[quick] wrote {json_path} (calib {record['calib_s']}s)")
     return 0 if ok else 1
 
 
@@ -40,10 +98,12 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--quick", action="store_true",
                     help="perf smoke only: 7-day/240-job sim + ticks/sec")
+    ap.add_argument("--quick-json", default=QUICK_LATEST,
+                    help="where --quick writes its JSON record")
     args = ap.parse_args()
 
     if args.quick:
-        sys.exit(quick_smoke())
+        sys.exit(quick_smoke(args.quick_json))
 
     from benchmarks import (
         fig1_breakeven, fig2_phase, roofline, table1_hardware,

@@ -38,7 +38,10 @@ def main():
                     help="override the scenario's per-NIC Gbps (tip: 1.0 on "
                          "paper-table6 is the paper's sharpest ordering "
                          "regime, see EXPERIMENTS.md)")
-    ap.add_argument("--dt", type=float, default=None)
+    ap.add_argument("--dt", type=float, default=None,
+                    help="fixed-dt engine step (only with --engine fixed-dt)")
+    ap.add_argument("--engine", default=None, choices=["event", "fixed-dt"],
+                    help="time stepping: next-event (default) or legacy fixed-dt")
     ap.add_argument("--failures", type=float, default=None,
                     help="node failures per slot-hour (overrides the scenario)")
     args = ap.parse_args()
@@ -56,6 +59,8 @@ def main():
         overrides["wan_gbps"] = args.wan
     if args.dt is not None:
         overrides["dt_s"] = args.dt
+    if args.engine is not None:
+        overrides["engine"] = args.engine
     if args.days is not None:
         overrides["days"] = args.days
     if args.jobs is not None:

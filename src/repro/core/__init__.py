@@ -21,8 +21,11 @@ from repro.core.orchestrator import (  # noqa: F401
     Policy, PolicyConfig, StaticPolicy, ThrottleConfig, available_policies,
     make_policy, register_policy,
 )
+from repro.core.wan import (  # noqa: F401
+    WanProfile, WanTopology, hub_spoke_links, partitioned_links,
+)
 from repro.core.scenarios import (  # noqa: F401
-    FailureRegime, ForecastNoise, JobMix, Scenario, WanProfile,
+    FailureRegime, ForecastNoise, JobMix, Scenario,
     available_scenarios, get_scenario, register_scenario,
 )
 from repro.core.simulator import (  # noqa: F401

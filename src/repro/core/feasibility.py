@@ -12,8 +12,13 @@ with T_transfer = 8·S / B  (S bytes, B bits/s).  Classification (§VI.D):
   class B:  60 s ≤ T_transfer < 300 s  (conditional: needs α-window check)
   class C:  T_transfer ≥ 300 s     (never migrated)
 
-Everything is vectorized jnp (grids for the Fig. 2 phase diagram lower to a
-single fused kernel) but accepts plain floats transparently.
+Everything is vectorized and backend-dispatched: jax inputs keep the jnp
+path (grids for the Fig. 2 phase diagram lower to a single fused kernel);
+plain floats / numpy arrays take a pure-numpy path, because the
+orchestrator evaluates a small (jobs × sites) grid *every tick* and jnp
+dispatch plus shape-driven recompiles dominated the whole simulation there
+(≈6.5 s of a 6.6 s 7-day run before the split).  Zero bandwidth (no link)
+yields an infinite transfer time, i.e. infeasible, without warnings.
 """
 from __future__ import annotations
 
@@ -48,9 +53,18 @@ class FeasibilityVerdict(NamedTuple):
     workload_class: ArrayLike  # 0=A, 1=B, 2=C
 
 
+def _use_jax(*xs) -> bool:
+    return any(isinstance(x, jax.Array) for x in xs)
+
+
 def transfer_time_s(size_bytes: ArrayLike, bandwidth_bps: ArrayLike) -> ArrayLike:
-    """T_transfer = 8 S / B  (paper §V)."""
-    return 8.0 * size_bytes / bandwidth_bps
+    """T_transfer = 8 S / B  (paper §V).  B = 0 (no link) -> inf."""
+    if _use_jax(size_bytes, bandwidth_bps):
+        return 8.0 * size_bytes / bandwidth_bps
+    size = np.asarray(size_bytes, dtype=np.float64)
+    bw = np.asarray(bandwidth_bps, dtype=np.float64)
+    with np.errstate(divide="ignore"):
+        return 8.0 * size / bw
 
 
 def migration_cost_s(
@@ -80,11 +94,17 @@ def breakeven_time_s(
     return (p_sys_kw / p_node_kw) * transfer_time_s(size_bytes, bandwidth_bps)
 
 
+def _classify_from_time(t_transfer: ArrayLike, xp) -> ArrayLike:
+    """§VI.D class from a precomputed T_transfer (0=A, 1=B, 2=C)."""
+    return xp.where(t_transfer < CLASS_A_MAX_S, 0,
+                    xp.where(t_transfer < CLASS_B_MAX_S, 1, 2)).astype(xp.int32)
+
+
 def classify(size_bytes: ArrayLike, bandwidth_bps: ArrayLike) -> ArrayLike:
     """0=A, 1=B, 2=C per the §VI.D T_transfer thresholds."""
     t = transfer_time_s(size_bytes, bandwidth_bps)
-    t = jnp.asarray(t)
-    return jnp.where(t < CLASS_A_MAX_S, 0, jnp.where(t < CLASS_B_MAX_S, 1, 2)).astype(jnp.int32)
+    xp = jnp if isinstance(t, jax.Array) else np
+    return _classify_from_time(xp.asarray(t), xp)
 
 
 def classify_by_size(size_bytes: ArrayLike) -> ArrayLike:
@@ -105,15 +125,21 @@ def evaluate(
     p_sys_kw: float = P_SYS_KW,
     p_node_kw: float = P_NODE_KW,
 ) -> FeasibilityVerdict:
-    """Full feasibility verdict for (w, s→d) triples. Broadcasts."""
+    """Full feasibility verdict for (w, s→d) triples. Broadcasts.
+    ``transfer_time_s`` picks the backend (numpy for numpy/python inputs —
+    this runs once per orchestrator tick on the whole (jobs x sites) grid,
+    where jnp dispatch used to dominate the simulation); everything else
+    derives from T_transfer in that same backend."""
     t_transfer = transfer_time_s(size_bytes, bandwidth_bps)
+    xp = jnp if _use_jax(t_transfer, window_s, t_load_s) else np
     t_cost = t_transfer + t_load_s + t_downtime_s
-    t_be = breakeven_time_s(size_bytes, bandwidth_bps, p_sys_kw, p_node_kw)
-    cls = classify(size_bytes, bandwidth_bps)
-    time_ok = t_cost < alpha * window_s
+    t_be = (p_sys_kw / p_node_kw) * t_transfer  # = breakeven_time_s
+    cls = _classify_from_time(t_transfer, xp)
+    time_ok = t_cost < alpha * xp.asarray(window_s)
     energy_ok = t_be < window_s
-    feasible = jnp.logical_and(jnp.logical_and(time_ok, energy_ok), cls != 2)
-    return FeasibilityVerdict(feasible, time_ok, energy_ok, t_transfer, t_cost, t_be, cls)
+    feasible = xp.logical_and(xp.logical_and(time_ok, energy_ok), cls != 2)
+    return FeasibilityVerdict(feasible, time_ok, energy_ok, t_transfer,
+                              t_cost, t_be, cls)
 
 
 # ---------------------------------------------------------------------------
@@ -141,8 +167,15 @@ def stochastic_feasible(
     forecast-error model T̃ ~ N(T̂, σ²): equivalent to checking the
     deterministic condition against the lower ε-quantile of the window."""
     t_cost = migration_cost_s(size_bytes, bandwidth_bps, t_load_s, t_downtime_s)
-    window_lo = window_forecast_s + _norm_ppf(eps) * window_sigma_s  # ε-quantile
-    return t_cost < alpha * jnp.maximum(window_lo, 0.0)
+    if _use_jax(t_cost, window_forecast_s, window_sigma_s):
+        window_lo = window_forecast_s + _norm_ppf(eps) * window_sigma_s  # ε-quantile
+        return t_cost < alpha * jnp.maximum(window_lo, 0.0)
+    import statistics
+
+    ppf = statistics.NormalDist().inv_cdf(eps)
+    window_lo = (np.asarray(window_forecast_s, dtype=np.float64)
+                 + ppf * np.asarray(window_sigma_s, dtype=np.float64))
+    return t_cost < alpha * np.maximum(window_lo, 0.0)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,15 @@ Built-ins:
   solar-heavy        long midday surplus windows, little night wind
   large-ckpt-classC  half the jobs carry 100–300 GB (class C) checkpoints
   failure-storm      aggressive node failures + checkpoint/restart churn
+  hub-spoke-wan      40 Gbps hub at site 0, 1 Gbps direct spoke-to-spoke
+  asymmetric-uplink  2.5 Gbps egress / 10 Gbps ingress NICs everywhere
+  partitioned-wan    two island fabrics joined by thin 0.25 Gbps links
+
+The WAN half of a scenario is a :class:`repro.core.wan.WanProfile`
+(per-site NIC rates, per-link capacity matrix, fabric- or per-link-scoped
+brownouts); ``Scenario.build_wan()`` materializes the
+:class:`~repro.core.wan.WanTopology` that the simulator, the dry-run
+planner and the serve router all consume.
 
 Register your own:
 
@@ -34,6 +43,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
 from repro.core.traces import SiteTrace, TraceProfile, generate_trace
+from repro.core.wan import (  # noqa: F401  (WanProfile re-exported)
+    WanProfile, WanTopology, hub_spoke_links, partitioned_links,
+)
 
 
 @dataclass(frozen=True)
@@ -47,17 +59,6 @@ class JobMix:
     size_b_gb: tuple = (10.0, 40.0)
     size_c_gb: tuple = (100.0, 300.0)
     mean_compute_h: float = 3.5
-
-
-@dataclass(frozen=True)
-class WanProfile:
-    """Per-site NIC rate plus an optional flaky-link regime: each hour,
-    with probability ``hourly_degrade_prob``, the whole WAN fabric runs at
-    ``degraded_gbps`` for that hour (shared-backbone brownout)."""
-
-    gbps: float = 10.0
-    hourly_degrade_prob: float = 0.0
-    degraded_gbps: float = 1.0
 
 
 @dataclass(frozen=True)
@@ -79,6 +80,7 @@ class Scenario:
     slots_per_site: int = 4
     days: int = 7
     dt_s: float = 30.0
+    engine: str = "event"  # "event" (next-event) or "fixed-dt" (legacy)
     seed: int = 0
     trace: TraceProfile = field(default_factory=TraceProfile)
     jobs: JobMix = field(default_factory=JobMix)
@@ -87,7 +89,13 @@ class Scenario:
     forecast: ForecastNoise = field(default_factory=ForecastNoise)
 
     def sim_config(self, **overrides):
-        """Materialize a ``SimConfig`` for this scenario (overrides win)."""
+        """Materialize a ``SimConfig`` for this scenario (overrides win).
+
+        The legacy scalar WAN overrides (``wan_gbps``, ``wan_degrade_prob``,
+        ``wan_degraded_gbps``) are folded back into the scenario's
+        :class:`WanProfile` so the materialized topology honours them;
+        pass ``wan=WanProfile(...)`` to replace the profile wholesale.
+        """
         from repro.core.simulator import SimConfig
 
         kw = dict(
@@ -95,8 +103,10 @@ class Scenario:
             slots_per_site=self.slots_per_site,
             days=self.days,
             dt_s=self.dt_s,
+            engine=self.engine,
             seed=self.seed,
             trace=self.trace,
+            wan=self.wan,
             wan_gbps=self.wan.gbps,
             wan_degrade_prob=self.wan.hourly_degrade_prob,
             wan_degraded_gbps=self.wan.degraded_gbps,
@@ -112,12 +122,31 @@ class Scenario:
             forecast_sigma_s=self.forecast.sigma_s,
         )
         kw.update(overrides)
+        if "wan" not in overrides:
+            if "wan_gbps" in overrides and self.wan.nic_gbps is not None:
+                raise ValueError(
+                    f"scenario {self.name!r} sets per-site nic_gbps, which "
+                    "shadows the uniform wan_gbps override — override "
+                    "wan=dataclasses.replace(scenario.wan, nic_gbps=...) "
+                    "instead")
+            kw["wan"] = dataclasses.replace(
+                kw["wan"],
+                gbps=kw["wan_gbps"],
+                hourly_degrade_prob=kw["wan_degrade_prob"],
+                degraded_gbps=kw["wan_degraded_gbps"],
+            )
         return SimConfig(**kw)
 
     def build_traces(self, seed: Optional[int] = None) -> List[SiteTrace]:
         return generate_trace(self.n_sites, self.days,
                               seed=self.seed if seed is None else seed,
                               profile=self.trace)
+
+    def build_wan(self, seed: Optional[int] = None) -> WanTopology:
+        """Materialize the scenario's WAN topology — the one object the
+        simulator, ``dryrun --plan`` and ``serve --green-route`` share."""
+        return self.wan.build_topology(
+            self.n_sites, self.days, self.seed if seed is None else seed)
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -197,8 +226,44 @@ register_scenario(Scenario(
     failures=FailureRegime(rate_per_slot_hour=0.2, checkpoint_interval_s=900.0),
 ))
 
+register_scenario(Scenario(
+    name="hub-spoke-wan",
+    description="Hub-and-spoke fabric: site 0 is a 40 Gbps exchange hub; "
+                "direct spoke-to-spoke links are capped at 1 Gbps, so "
+                "hub-adjacent moves stay cheap while a direct spoke hop "
+                "only fits class-A checkpoints.",
+    wan=WanProfile(gbps=10.0,
+                   nic_gbps=(40.0, 10.0, 10.0, 10.0, 10.0),
+                   link_gbps=hub_spoke_links(5, hub=0, spoke_gbps=1.0)),
+))
+
+register_scenario(Scenario(
+    name="asymmetric-uplink",
+    description="Consumer-grade uplinks at renewable micro-sites: every "
+                "site ingests at 10 Gbps but egresses at only 2.5 Gbps — "
+                "the *source* NIC, not the destination, is the migration "
+                "bottleneck, and concurrent evacuations of one dark site "
+                "quarter each other.",
+    wan=WanProfile(gbps=10.0,
+                   nic_gbps=(2.5,) * 5,  # egress
+                   nic_in_gbps=(10.0,) * 5),
+))
+
+register_scenario(Scenario(
+    name="partitioned-wan",
+    description="Two island fabrics ({0,1,2} and {3,4}) joined by thin "
+                "0.25 Gbps links: intra-partition moves run at the full "
+                "10 Gbps NIC while cross-partition migration is class-A "
+                "only (a 6 GB checkpoint already takes 192 s) — renewable "
+                "windows on the far island are mostly unreachable.",
+    wan=WanProfile(gbps=10.0,
+                   link_gbps=partitioned_links(((0, 1, 2), (3, 4)),
+                                               inter_gbps=0.25)),
+))
+
 
 __all__ = [
     "FailureRegime", "ForecastNoise", "JobMix", "Scenario", "TraceProfile",
-    "WanProfile", "available_scenarios", "get_scenario", "register_scenario",
+    "WanProfile", "WanTopology", "available_scenarios", "get_scenario",
+    "hub_spoke_links", "partitioned_links", "register_scenario",
 ]

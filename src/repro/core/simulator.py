@@ -1,6 +1,6 @@
-"""Trace-driven discrete-time simulator of renewable-powered
-micro-datacenters (paper §VII: 5 sites, 10 Gbps WAN, 7-day CAISO-calibrated
-trace, job mix A:70% 1–6 GB / B:20% 10–40 GB / C:10% 100–300 GB).
+"""Trace-driven simulator of renewable-powered micro-datacenters
+(paper §VII: 5 sites, 10 Gbps WAN, 7-day CAISO-calibrated trace, job mix
+A:70% 1–6 GB / B:20% 10–40 GB / C:10% 100–300 GB).
 
 Control flow is event-driven and typed: every ``orch_dt_s`` the simulator
 builds an immutable :class:`~repro.core.state.ClusterState` snapshot (one
@@ -16,27 +16,48 @@ Models:
   * renewable windows from core/traces.py; grid vs. renewable kWh accounting
     (P_node = 0.75 kW compute — scaled by the job's ``Throttle`` fraction —
     P_sys = 1.8 kW during transfer),
-  * WAN transfers with per-site NIC contention (concurrent transfers share
-    the uplink — this is what stalls the energy-only policy), plus an
-    optional flaky-WAN regime (hourly brownouts, see scenarios.py),
+  * WAN transfers over a :class:`~repro.core.wan.WanTopology` — per-site
+    (possibly asymmetric) NIC rates, a per-link capacity matrix and fabric-
+    or per-link-scoped brownout calendars; concurrent transfers get the
+    fair share of every resource they traverse (this is what stalls the
+    energy-only policy),
   * migration = pause → transfer → load (10.3 s) → downtime (0.4 s) →
     resume (possibly queued on arrival),
   * optional node failures with checkpoint/restart (beyond-paper).
 
+Two time-stepping engines share all state, indexing and action code
+(``SimConfig.engine``):
+
+  * ``"event"`` (default) — next-event stepping: time jumps straight to
+    the next arrival, transfer/load/job completion, window edge, brownout
+    edge, defer expiry, failure or orchestrator tick.  Job accounting is
+    integrated *analytically* over each inter-event span (renewable vs.
+    grid kWh by exact window overlap, transfer bits at the current share
+    rate), and in-flight transfer rates are re-split only when the flow
+    set or the link state actually changes.
+  * ``"fixed-dt"`` — the legacy fixed ``dt_s`` loop, kept as the parity
+    reference (see tests/test_event_engine.py).
+
 Jobs are indexed incrementally by (site, state) bucket — the hot loop only
-touches jobs whose state can change this tick, never the full job list —
-which is what makes the 7-day/240-job run fast (see
-``benchmarks/run.py --quick`` for the ticks/sec gate).
+touches jobs whose state can change at the current event, never the full
+job list.  ``benchmarks/run.py --quick`` prints wall time and ticks/sec
+(one tick = one processed event) and gates them in CI against
+``benchmarks/BENCH_quick.json``.
 
 Scenarios: construct via ``ClusterSimulator.from_scenario("flaky-wan",
 "feasibility-aware")`` or ``run_policy_comparison(scenario="paper-table6")``
-— see :mod:`repro.core.scenarios` for the registry.
+— see :mod:`repro.core.scenarios` for the registry (including the
+WAN-topology scenarios ``hub-spoke-wan``, ``asymmetric-uplink``,
+``partitioned-wan``).
 
-Deterministic for a given seed.
+Deterministic for a given seed (each engine separately; the two engines
+agree within tolerance, not bit-for-bit — completions are exact events
+rather than rounded up to the next tick).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
@@ -46,8 +67,9 @@ import numpy as np
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
 from repro.core.orchestrator import Policy, PolicyConfig, make_policy
-from repro.core.state import ClusterState, JobView, SiteView, nic_share_counts
+from repro.core.state import ClusterState, JobView, SiteView
 from repro.core.traces import Forecaster, SiteTrace, TraceProfile, generate_trace
+from repro.core.wan import WanProfile, WanTopology
 
 HOUR = 3600.0
 GB = 1e9
@@ -92,6 +114,10 @@ class SimJob:
     power_frac: float = 1.0  # Throttle level while running
     defer_until_s: float = -1e18  # Defer: not schedulable before this time
     paused_policy_s: float = 0.0  # time spent in policy-initiated Pause
+    # next-event engine bookkeeping
+    anchor_s: float = 0.0  # sim-time the job's accounting was last flushed
+    rate_bps: float = 0.0  # current transfer share (migrating only)
+    ver: int = 0  # bumped on any change that invalidates a queued event
 
     @property
     def jct_s(self) -> float:
@@ -104,7 +130,8 @@ class SimConfig:
     slots_per_site: int = 4
     wan_gbps: float = 10.0
     days: int = 7
-    dt_s: float = 30.0
+    dt_s: float = 30.0  # fixed-dt engine step
+    engine: str = "event"  # "event" (next-event) or "fixed-dt" (legacy)
     orch_dt_s: float = 300.0
     seed: int = 0
     n_jobs: int = 240
@@ -117,6 +144,8 @@ class SimConfig:
     migration_cooldown_s: float = 900.0  # orchestrator debounce per job
     # renewable-window process (scenario-composable)
     trace: TraceProfile = field(default_factory=TraceProfile)
+    # WAN: a full WanProfile wins over the legacy uniform scalars below
+    wan: Optional[WanProfile] = None
     # flaky-WAN regime: hourly brownouts to wan_degraded_gbps
     wan_degrade_prob: float = 0.0
     wan_degraded_gbps: float = 1.0
@@ -130,6 +159,15 @@ class SimConfig:
     # beyond-paper fault injection
     failure_rate_per_slot_hour: float = 0.0
     checkpoint_interval_s: float = 1800.0
+
+    def wan_profile(self) -> WanProfile:
+        """The authoritative WAN spec: ``wan`` if set, else the legacy
+        uniform scalars."""
+        if self.wan is not None:
+            return self.wan
+        return WanProfile(gbps=self.wan_gbps,
+                          hourly_degrade_prob=self.wan_degrade_prob,
+                          degraded_gbps=self.wan_degraded_gbps)
 
 
 @dataclass
@@ -145,6 +183,7 @@ class SimResult:
     rejected_actions: int = 0
     ticks: int = 0
     wall_time_s: float = 0.0
+    engine: str = "event"
 
     @property
     def mean_jct_s(self) -> float:
@@ -180,6 +219,7 @@ class SimResult:
 
     @property
     def ticks_per_sec(self) -> float:
+        """Events (fixed-dt: ticks) processed per wall-clock second."""
         return self.ticks / self.wall_time_s if self.wall_time_s else 0.0
 
     def summary(self) -> dict:
@@ -195,6 +235,8 @@ class SimResult:
             "failed_migrations": self.failed_migrations,
             "completed": self.completed,
             "failures": self.failures,
+            "rejected_actions": self.rejected_actions,
+            "ticks_per_sec": round(self.ticks_per_sec, 1),
         }
 
 
@@ -248,13 +290,10 @@ class ClusterSimulator:
         self.failures = 0
         self.rejected_actions = 0
         self.ticks = 0
-        # flaky-WAN brownout calendar (deterministic per seed)
-        if cfg.wan_degrade_prob > 0.0:
-            n_hours = int(cfg.days * 24 * 2) + 1
-            rng = np.random.default_rng(cfg.seed + 31)
-            self._wan_bad = rng.random(n_hours) < cfg.wan_degrade_prob
-        else:
-            self._wan_bad = None
+        # the one WAN object every consumer shares (transfer loop, snapshot
+        # advertisement, and — via scenarios — dryrun --plan / serve)
+        self.wan_topology = cfg.wan_profile().build_topology(
+            cfg.n_sites, cfg.days, cfg.seed)
         # incremental (site, state) job index: jid-keyed dicts give
         # deterministic (insertion-ordered) iteration and O(1) moves
         self._by_state: Dict[str, Dict[int, SimJob]] = {s: {} for s in JOB_STATES}
@@ -299,28 +338,21 @@ class ClusterSimulator:
 
     # -- WAN model -----------------------------------------------------------
     def _nic_bps(self, t: float) -> float:
-        if self._wan_bad is not None:
-            hr = min(int(t // HOUR), len(self._wan_bad) - 1)
-            if self._wan_bad[hr]:
-                return self.cfg.wan_degraded_gbps * 1e9
-        return self.cfg.wan_gbps * 1e9
+        """Legacy scalar view (uniform fabrics): the NIC rate at time t."""
+        return self.wan_topology.nic_bps_at(t)
 
     def _effective_bw(self, transfers: List[SimJob], t: float) -> Dict[int, float]:
-        """Per-transfer effective bps under per-site NIC sharing — the same
-        share model the snapshot advertises (state.nic_share_counts)."""
-        nic = self._nic_bps(t)
-        src_count, dst_count = nic_share_counts(
-            [(j.site, j.transfer_dest) for j in transfers])
-        return {
-            j.jid: min(nic / src_count[j.site], nic / dst_count[j.transfer_dest])
-            for j in transfers
-        }
+        """Per-transfer effective bps — the topology's fair share over the
+        current flow set (the same model the snapshot advertises)."""
+        rates = self.wan_topology.shared_rates(
+            [(j.site, j.transfer_dest) for j in transfers], t)
+        return {j.jid: float(r) for j, r in zip(transfers, rates)}
 
     # -- snapshot ------------------------------------------------------------
     def snapshot(self, t: float) -> ClusterState:
         """Build the policy-facing ClusterState via the shared constructor.
-        The advertised bandwidth matrix uses the same per-NIC share counts
-        as the transfer loop (``_effective_bw``)."""
+        The advertised bandwidth matrix comes from the same WanTopology
+        (and flow set) the transfer loop grants from."""
         cfg = self.cfg
         incoming = [0] * cfg.n_sites
         transfers: List[Tuple[int, int]] = []
@@ -357,8 +389,12 @@ class ClusterSimulator:
                     )
                 )
         views.sort(key=lambda v: v.jid)
-        return ClusterState.build(t, views, sites, nic_bps=self._nic_bps(t),
+        return ClusterState.build(t, views, sites, wan=self.wan_topology,
                                   transfers=transfers)
+
+    def _has_live_jobs(self) -> bool:
+        by = self._by_state
+        return bool(by["queued"] or by["running"] or by["paused"])
 
     # -- action application --------------------------------------------------
     def _apply_action(self, action: Action, t: float, state: ClusterState,
@@ -375,21 +411,33 @@ class ClusterSimulator:
             dest = action.dest
             if (j.state != "running" or dest == j.site
                     or not 0 <= dest < self.cfg.n_sites
-                    or t - j.last_migration_end_s < self.cfg.migration_cooldown_s):
+                    or t - j.last_migration_end_s < self.cfg.migration_cooldown_s
+                    # a 0-capacity (partitioned) path can never complete the
+                    # transfer — admitting it would strand the job forever
+                    or not self.wan_topology.reachable(j.site, dest)):
                 self.rejected_actions += 1
                 return
             j.transfer_dest = dest
             j.transfer_remaining_bits = 8.0 * j.ckpt_bytes
             j.migrations += 1
             self.migrations += 1
+            self._move(j, state="migrating")
             # a migration whose destination window closes before the
             # transfer ends is counted as failed (it still completes,
-            # but arrives onto grid power — the paper's stall mode)
-            bw_now = float(state.bandwidth_bps[j.site, dest])
-            t_arrive = t + 8.0 * j.ckpt_bytes / bw_now
+            # but arrives onto grid power — the paper's stall mode).
+            # The arrival estimate uses the POST-admission share: this
+            # flow itself dilutes every resource it traverses (flows+1),
+            # so ask the topology for the rate with the flow included —
+            # the snapshot's pre-admission matrix is systematically
+            # optimistic for exactly this query.
+            mig = list(self._by_state["migrating"].values())
+            rates = self.wan_topology.shared_rates(
+                [(x.site, x.transfer_dest) for x in mig], t)
+            rate = next(float(r) for x, r in zip(mig, rates) if x.jid == j.jid)
+            t_arrive = (t + j.transfer_remaining_bits / rate if rate > 0.0
+                        else float("inf"))
             if not self.traces[dest].active(min(t_arrive, horizon - 1)):
                 self.failed_migrations += 1
-            self._move(j, state="migrating")
         elif isinstance(action, Defer):
             if j.state != "queued":
                 self.rejected_actions += 1
@@ -413,8 +461,324 @@ class ClusterSimulator:
         else:
             self.rejected_actions += 1
 
-    # -- main loop ----------------------------------------------------------
+    # -- engine dispatch -----------------------------------------------------
     def run(self) -> SimResult:
+        if self.cfg.engine == "event":
+            return self._run_event()
+        if self.cfg.engine == "fixed-dt":
+            return self._run_fixed_dt()
+        raise ValueError(
+            f"unknown engine {self.cfg.engine!r}; use 'event' or 'fixed-dt'")
+
+    def _result(self, wall_t0: float) -> SimResult:
+        return SimResult(
+            policy=self.policy.name,
+            jobs=self.jobs,
+            grid_kwh=self.grid_kwh,
+            renewable_kwh=self.renewable_kwh,
+            migration_kwh=self.migration_kwh,
+            migrations=self.migrations,
+            failed_migrations=self.failed_migrations,
+            failures=self.failures,
+            rejected_actions=self.rejected_actions,
+            ticks=self.ticks,
+            wall_time_s=time.perf_counter() - wall_t0,
+            engine=self.cfg.engine,
+        )
+
+    # -- next-event engine ---------------------------------------------------
+    def _run_event(self) -> SimResult:
+        """Next-event time stepping.
+
+        Every candidate next event is the min of: next job arrival, the
+        earliest transfer completion at current share rates, the earliest
+        checkpoint-load completion, the earliest running-job completion,
+        the next renewable-window edge, the next WAN brownout edge, the
+        next defer expiry, the next node failure, and the next orchestrator
+        tick.  Per-job accounting (progress, grid/renewable kWh, queue and
+        pause time) is integrated analytically over each inter-event span
+        from a per-job ``anchor_s``; transfer rates are re-split only when
+        the flow set or the link state changes.  Completion heaps use lazy
+        invalidation: entries carry the job's ``ver`` at push time and are
+        discarded on pop if the job changed since.
+        """
+        cfg = self.cfg
+        wall_t0 = time.perf_counter()
+        horizon = cfg.days * 24 * HOUR
+        t_end = horizon * 2.0  # allow the tail of late jobs to finish
+        INF = float("inf")
+        EPS = 1e-6
+        by_state = self._by_state
+        jobs_by_id = self._jobs_by_id
+        topo = self.wan_topology
+        traces = self.traces
+        n_jobs = len(self.jobs)
+        p_node, p_sys = cfg.p_node_kw, cfg.p_sys_kw
+
+        done_heap: List[Tuple[float, int, int]] = []  # running completions
+        transfer_heap: List[Tuple[float, int, int]] = []
+        load_heap: List[Tuple[float, int]] = []
+        defer_heap: List[Tuple[float, int]] = []
+        edges = sorted({e for tr in traces for w in tr.windows
+                        for e in (w.start_s, w.end_s) if 0.0 < e < t_end})
+        eptr = 0
+        next_orch = 0.0
+        next_brownout = topo.next_transition(0.0)
+        next_failure = INF
+        fail_enabled = cfg.failure_rate_per_slot_hour > 0.0
+
+        def resample_failure(t: float) -> None:
+            nonlocal next_failure
+            n_run = len(by_state["running"])
+            if not fail_enabled or n_run == 0:
+                next_failure = INF
+                return
+            lam = cfg.failure_rate_per_slot_hour * n_run / HOUR
+            next_failure = t + float(self._fail_rng.exponential(1.0 / lam))
+
+        def flush(j: SimJob, t: float) -> None:
+            span = t - j.anchor_s
+            if span <= 0.0:
+                j.anchor_s = t
+                return
+            st = j.state
+            if st == "running":
+                frac = j.power_frac
+                j.progress_s += span * frac
+                g = traces[j.site].renewable_seconds(j.anchor_s, t)
+                e_g = p_node * frac * g / HOUR
+                e_b = p_node * frac * (span - g) / HOUR
+                j.renewable_kwh += e_g
+                j.grid_kwh += e_b
+                self.renewable_kwh += e_g
+                self.grid_kwh += e_b
+            elif st == "migrating":
+                j.transfer_remaining_bits -= j.rate_bps * span
+                j.pause_s += span
+                j.pause_transfer_s += span
+                e = p_sys * span / HOUR
+                self.migration_kwh += e
+                self.grid_kwh += e  # transfer power billed to grid
+            elif st == "loading":
+                j.load_remaining_s -= span
+                j.pause_s += span
+                j.pause_transfer_s += span
+            elif st == "queued":
+                j.queue_s += span
+                if j.post_migration_wait:
+                    j.pause_s += span  # stalled by its own migration
+                    j.pause_wait_s += span
+            elif st == "paused":
+                j.paused_policy_s += span
+            j.anchor_s = t
+
+        def flush_live(t: float) -> None:
+            for name in ("running", "queued", "paused", "migrating", "loading"):
+                for j in by_state[name].values():
+                    flush(j, t)
+
+        def flush_running(t: float) -> None:
+            # the snapshot only reads *running* progress; every other
+            # state's accounting is flushed at its own transitions
+            for j in by_state["running"].values():
+                flush(j, t)
+
+        def refresh_transfers(t: float) -> None:
+            """Re-split in-flight transfer rates (flow set / link state
+            changed) and requeue their completion events."""
+            mig = list(by_state["migrating"].values())
+            if not mig:
+                return
+            rates = topo.shared_rates(
+                [(j.site, j.transfer_dest) for j in mig], t)
+            for j, r in zip(mig, rates):
+                flush(j, t)
+                j.rate_bps = float(r)
+                j.ver += 1
+                if j.rate_bps > 0.0:
+                    heapq.heappush(
+                        transfer_heap,
+                        (t + j.transfer_remaining_bits / j.rate_bps,
+                         j.jid, j.ver))
+                # rate 0 (no link / browned out to zero): no completion
+                # until a link-state change re-rates the flow
+
+        def push_run_completion(j: SimJob, t: float) -> None:
+            j.ver += 1
+            if j.power_frac > 0.0:
+                heapq.heappush(
+                    done_heap,
+                    (t + (j.compute_s - j.progress_s) / j.power_frac,
+                     j.jid, j.ver))
+
+        def schedule_site(s: int, t: float) -> None:
+            q = self._site_jobs.get((s, "queued"))
+            if not q:
+                return
+            free = cfg.slots_per_site - self._running_count(s)
+            if free <= 0:
+                return
+            ready = [j for j in q.values() if j.defer_until_s <= t]
+            if not ready:
+                return
+            ready.sort(key=lambda x: (x.arrival_s, x.jid))
+            for j in ready[:free]:
+                flush(j, t)
+                j.post_migration_wait = False
+                if j.started_s < 0:
+                    j.started_s = t
+                self._move(j, state="running")
+                j.anchor_s = t
+                push_run_completion(j, t)
+
+        def peek(heap: List[Tuple[float, int, int]], want_state: str) -> float:
+            while heap:
+                tt, jid, ver = heap[0]
+                j = jobs_by_id[jid]
+                if j.state == want_state and j.ver == ver:
+                    return tt
+                heapq.heappop(heap)
+            return INF
+
+        arrivals = self._arrivals
+        t = 0.0
+        while len(by_state["done"]) < n_jobs:
+            t_arr = (arrivals[self._arrival_ptr].arrival_s
+                     if self._arrival_ptr < len(arrivals) else INF)
+            t_ld = load_heap[0][0] if load_heap else INF
+            t_df = defer_heap[0][0] if defer_heap else INF
+            t_ed = edges[eptr] if eptr < len(edges) else INF
+            t_next = min(t_arr, peek(transfer_heap, "migrating"), t_ld, t_df,
+                         peek(done_heap, "running"), t_ed, next_brownout,
+                         next_failure, next_orch)
+            if t_next > t_end:
+                flush_live(t_end)  # account the unfinished tail to horizon
+                break
+            t = t_next
+            self.ticks += 1
+            dirty: set = set()
+            transfers_dirty = False
+            n_run_before = len(by_state["running"])
+
+            # 1) arrivals
+            while (self._arrival_ptr < len(arrivals)
+                   and arrivals[self._arrival_ptr].arrival_s <= t + EPS):
+                j = arrivals[self._arrival_ptr]
+                self._arrival_ptr += 1
+                if j.state == "pending":
+                    self._move(j, state="queued")
+                    j.anchor_s = t
+                    dirty.add(j.site)
+            # 2) WAN brownout edge: link capacities changed
+            if next_brownout <= t + EPS:
+                transfers_dirty = True
+                next_brownout = topo.next_transition(t + EPS)
+            # 3) transfer completions (at current share rates)
+            while peek(transfer_heap, "migrating") <= t + EPS:
+                _, jid, _ = heapq.heappop(transfer_heap)
+                j = jobs_by_id[jid]
+                flush(j, t)
+                j.transfer_remaining_bits = 0.0
+                dest = j.transfer_dest
+                j.transfer_dest = -1
+                j.rate_bps = 0.0
+                j.load_remaining_s = cfg.t_load_s + cfg.t_downtime_s
+                self._move(j, state="loading", site=dest)
+                j.anchor_s = t
+                heapq.heappush(load_heap, (t + j.load_remaining_s, jid))
+                transfers_dirty = True
+            # 4) checkpoint-load completions
+            while load_heap and load_heap[0][0] <= t + EPS:
+                _, jid = heapq.heappop(load_heap)
+                j = jobs_by_id[jid]
+                flush(j, t)
+                j.load_remaining_s = 0.0
+                j.post_migration_wait = True
+                j.last_migration_end_s = t
+                self._move(j, state="queued")
+                j.anchor_s = t
+                dirty.add(j.site)
+            # 5) defer expiries: the held job becomes schedulable
+            while defer_heap and defer_heap[0][0] <= t + EPS:
+                _, jid = heapq.heappop(defer_heap)
+                j = jobs_by_id[jid]
+                if j.state == "queued":
+                    dirty.add(j.site)
+            # 6) running-job completions
+            while peek(done_heap, "running") <= t + EPS:
+                _, jid, _ = heapq.heappop(done_heap)
+                j = jobs_by_id[jid]
+                flush(j, t)
+                j.progress_s = j.compute_s
+                j.done_s = t
+                dirty.add(j.site)
+                self._move(j, state="done")
+            # 7) node failure: roll back to the last checkpoint
+            if next_failure <= t + EPS:
+                running = by_state["running"]
+                if running:
+                    jids = sorted(running)
+                    jid = jids[int(self._fail_rng.integers(len(jids)))]
+                    j = running[jid]
+                    flush(j, t)
+                    interval = cfg.checkpoint_interval_s
+                    ckpt = (j.progress_s // interval) * interval
+                    lost = j.progress_s - ckpt
+                    j.progress_s = ckpt
+                    j.last_ckpt_progress_s = ckpt
+                    j.pause_s += lost
+                    self.failures += 1
+                    push_run_completion(j, t)
+                resample_failure(t)
+            # 8) renewable-window edges: pure span boundaries (energy is
+            #    integrated analytically, so only the pointer advances)
+            while eptr < len(edges) and edges[eptr] <= t + EPS:
+                eptr += 1
+            if transfers_dirty:
+                refresh_transfers(t)
+                transfers_dirty = False
+            # 9) scheduling: fill freed slots at touched sites, FIFO
+            for s in sorted(dirty):
+                schedule_site(s, t)
+            dirty.clear()
+            # 10) orchestrator tick: snapshot -> typed actions -> apply
+            if next_orch <= t + EPS:
+                next_orch = t + cfg.orch_dt_s
+                if self._has_live_jobs():
+                    flush_running(t)
+                    state = self.snapshot(t)
+                    for action in self.policy.decide(state):
+                        j = (jobs_by_id.get(action.jid)
+                             if isinstance(action, Action) else None)
+                        pre = ((j.state, j.power_frac, j.defer_until_s)
+                               if j is not None else None)
+                        if j is not None:
+                            flush(j, t)  # account up to t before any move
+                        self._apply_action(action, t, state, horizon)
+                        if j is None:
+                            continue
+                        st0, frac0, defer0 = pre
+                        if j.state != st0:
+                            dirty.add(j.site)  # slot freed / job re-queued
+                            if j.state == "migrating":
+                                transfers_dirty = True
+                        if j.power_frac != frac0:
+                            push_run_completion(j, t)  # throttle re-rates
+                        if j.defer_until_s != defer0:
+                            dirty.add(j.site)
+                            if j.defer_until_s > t:
+                                heapq.heappush(
+                                    defer_heap, (j.defer_until_s, j.jid))
+                    if transfers_dirty:
+                        refresh_transfers(t)
+                    for s in sorted(dirty):
+                        schedule_site(s, t)
+            if fail_enabled and len(by_state["running"]) != n_run_before:
+                resample_failure(t)
+        return self._result(wall_t0)
+
+    # -- legacy fixed-dt engine (parity reference) ---------------------------
+    def _run_fixed_dt(self) -> SimResult:
         cfg = self.cfg
         wall_t0 = time.perf_counter()
         horizon = cfg.days * 24 * HOUR
@@ -515,25 +879,14 @@ class ClusterSimulator:
             # 6) orchestrator tick: snapshot -> typed actions -> apply
             if t >= next_orch:
                 next_orch = t + cfg.orch_dt_s
-                state = self.snapshot(t)
-                for action in self.policy.decide(state):
-                    self._apply_action(action, t, state, horizon)
+                if self._has_live_jobs():
+                    state = self.snapshot(t)
+                    for action in self.policy.decide(state):
+                        self._apply_action(action, t, state, horizon)
             if len(by_state["done"]) == n_jobs:
                 break
             t += dt
-        return SimResult(
-            policy=self.policy.name,
-            jobs=self.jobs,
-            grid_kwh=self.grid_kwh,
-            renewable_kwh=self.renewable_kwh,
-            migration_kwh=self.migration_kwh,
-            migrations=self.migrations,
-            failed_migrations=self.failed_migrations,
-            failures=self.failures,
-            rejected_actions=self.rejected_actions,
-            ticks=self.ticks,
-            wall_time_s=time.perf_counter() - wall_t0,
-        )
+        return self._result(wall_t0)
 
     # -- scenario entry point ------------------------------------------------
     @classmethod
@@ -605,7 +958,8 @@ def run_policy_comparison(
 
 
 def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
-    """Paper Table VI/VIII format: normalized to the static baseline."""
+    """Paper Table VI/VIII format: normalized to the static baseline, plus
+    the action-validity and engine-throughput columns benchmarks surface."""
     base = results["static"]
     rows = []
     for name, r in results.items():
@@ -617,6 +971,8 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
                 "migration_overhead": round(r.migration_overhead, 3),
                 "stall_overhead": round(r.stall_overhead, 3),
                 "renewable_frac": round(r.renewable_fraction, 3),
+                "rejected_actions": r.rejected_actions,
+                "ticks_per_sec": round(r.ticks_per_sec, 1),
             }
         )
     return rows

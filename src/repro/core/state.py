@@ -25,9 +25,10 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import feasibility as fz
+from repro.core.wan import WanTopology
 
 
-@dataclass
+@dataclass(slots=True)
 class JobView:
     """Policy-visible job facts (checkpoint size is the *measured* bytes)."""
 
@@ -41,7 +42,7 @@ class JobView:
     power_frac: float = 1.0  # current Throttle level
 
 
-@dataclass
+@dataclass(slots=True)
 class SiteView:
     sid: int
     slots: int
@@ -75,6 +76,9 @@ class ClusterState:
     jobs: Tuple[JobView, ...]
     sites: Tuple[SiteView, ...]
     bandwidth_bps: np.ndarray  # (n_sites, n_sites) advertised effective bw
+    # the topology the matrix was derived from (None when an explicit
+    # matrix or the legacy uniform nic_bps path was used)
+    wan: Optional["WanTopology"] = None
 
     def site(self, sid: int) -> SiteView:
         return self.sites[sid]
@@ -133,24 +137,32 @@ class ClusterState:
         jobs: Iterable[JobView],
         sites: Sequence[SiteView],
         *,
+        wan: Optional["WanTopology"] = None,
         nic_bps: Optional[float] = None,
         transfers: Sequence[Tuple[int, int]] = (),
         bandwidth_bps: Optional[np.ndarray] = None,
     ) -> "ClusterState":
         """Assemble a snapshot.
 
-        Either pass an explicit ``bandwidth_bps`` matrix (tests, replay), or
-        pass the per-site NIC rate ``nic_bps`` plus the in-flight
+        Pass a :class:`~repro.core.wan.WanTopology` plus the in-flight
         ``transfers`` as ``(src, dst)`` pairs and the advertised matrix is
-        computed from per-NIC share counts.
+        its per-resource fair share under the current flow set; or the
+        legacy uniform per-site NIC rate ``nic_bps`` (same share model,
+        uncapped links); or an explicit ``bandwidth_bps`` matrix (tests,
+        replay).
         """
         sites = tuple(sites)
         if bandwidth_bps is None:
-            if nic_bps is None:
-                raise ValueError("need nic_bps (with transfers) or bandwidth_bps")
-            bandwidth_bps = advertised_bandwidth(len(sites), nic_bps, transfers)
+            if wan is not None:
+                bandwidth_bps = wan.advertised_matrix(t, tuple(transfers))
+            elif nic_bps is not None:
+                bandwidth_bps = advertised_bandwidth(len(sites), nic_bps, transfers)
+            else:
+                raise ValueError(
+                    "need wan, nic_bps (with transfers) or bandwidth_bps")
         return cls(t=t, jobs=tuple(jobs), sites=sites,
-                   bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64))
+                   bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
+                   wan=wan)
 
 
 def site_views_from_traces(

@@ -23,7 +23,7 @@ HOUR = 3600.0
 DAY = 24 * HOUR
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class Window:
     start_s: float
     end_s: float
@@ -49,7 +49,7 @@ class TraceProfile:
     wind_mean_h: float = 2.5
 
 
-@dataclass
+@dataclass(slots=True)
 class SiteTrace:
     site: int
     windows: List[Window]
@@ -59,13 +59,16 @@ class SiteTrace:
     _ends: List[float] = field(default=None, repr=False, compare=False)
     _n_cached: int = field(default=-1, repr=False, compare=False)
 
-    def _index(self, t: float) -> int:
-        """Index of the window containing t, or -1."""
+    def _refresh(self) -> None:
         if self._n_cached != len(self.windows):
             self.windows.sort(key=lambda w: w.start_s)
             self._starts = [w.start_s for w in self.windows]
             self._ends = [w.end_s for w in self.windows]
             self._n_cached = len(self.windows)
+
+    def _index(self, t: float) -> int:
+        """Index of the window containing t, or -1."""
+        self._refresh()
         i = bisect.bisect_right(self._starts, t) - 1
         if i >= 0 and t < self._ends[i]:
             return i
@@ -85,9 +88,18 @@ class SiteTrace:
         return self.windows[i] if i < len(self.windows) else None
 
     def renewable_seconds(self, t0: float, t1: float) -> float:
+        """Surplus seconds overlapping [t0, t1] — bisect over the sorted
+        window-bounds cache, touching only windows that can overlap (the
+        event engine integrates energy with this on every span)."""
+        if t1 <= t0:
+            return 0.0
+        self._refresh()
+        starts, ends = self._starts, self._ends
+        lo = bisect.bisect_right(ends, t0)  # first window ending after t0
+        hi = bisect.bisect_left(starts, t1)  # windows starting before t1
         tot = 0.0
-        for w in self.windows:
-            tot += max(0.0, min(t1, w.end_s) - max(t0, w.start_s))
+        for k in range(lo, hi):
+            tot += max(0.0, min(t1, ends[k]) - max(t0, starts[k]))
         return tot
 
 

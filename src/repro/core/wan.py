@@ -1,0 +1,376 @@
+"""Per-link WAN topology subsystem (paper §V/§VII; cf. Heron's green
+modular-DC routing and XWind's cross-site renewable-farm router).
+
+The seed modeled the WAN as one uniform NIC rate with fabric-wide hourly
+brownouts.  :class:`WanTopology` generalizes that to
+
+  * per-site NIC rates, asymmetric per direction (``nic_out_bps`` egress,
+    ``nic_in_bps`` ingress),
+  * a per-link ``(src, dst)`` capacity matrix (``np.inf`` = NIC-limited,
+    ``0`` = no link / partitioned),
+  * an hourly brownout calendar scoped to the whole fabric (the legacy
+    flaky-WAN regime, bit-identical calendar for a given seed) or to
+    individual links,
+
+behind two query surfaces shared by every consumer (the simulator transfer
+loop, ``ClusterState.build``'s advertised-bandwidth matrix, the
+``launch.dryrun --plan`` planner and the ``launch.serve --green-route``
+router):
+
+  * :meth:`shared_rates` — the per-flow effective rate under fair sharing,
+  * :meth:`advertised_matrix` — the policy-facing ``(n, n)`` bandwidth
+    matrix under the *current* flow set.
+
+Sharing model: every flow traverses three resources (source NIC,
+destination NIC, the (src, dst) link) and is granted the minimum equal
+split ``cap(r) / flows(r)`` over them.  Each resource hands out at most its
+capacity (``flows(r)`` flows at ``≤ cap(r)/flows(r)`` each), and on a
+uniform topology (equal NICs, uncapped links) the grant reduces *exactly*
+to the seed's ``min(nic / src_flows, nic / dst_flows)``.  This is the
+conservative first round of max-min fair sharing: residual capacity that
+full water-filling would redistribute to unbottlenecked flows is left
+unclaimed, which keeps the advertised matrix and the transfer loop in
+exact agreement.
+
+:class:`WanProfile` is the scenario-composable *spec* (plain floats and
+tuples, frozen); ``WanProfile.build_topology(n_sites, days, seed)``
+materializes the arrays + brownout calendar.  See
+:mod:`repro.core.scenarios` for registry entries (``hub-spoke-wan``,
+``asymmetric-uplink``, ``partitioned-wan``).
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass
+from functools import cached_property
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+HOUR = 3600.0
+
+
+# ---------------------------------------------------------------------------
+# Scenario-facing spec
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WanProfile:
+    """WAN spec a :class:`~repro.core.scenarios.Scenario` composes.
+
+    Uniform fields (the seed model): ``gbps`` per-site NIC rate, plus the
+    flaky-link regime — each hour, with probability ``hourly_degrade_prob``,
+    capacity drops to ``degraded_gbps`` for that hour.
+
+    Topology fields (all optional; ``None`` keeps the uniform model):
+
+      nic_gbps       per-site egress NIC rates, one entry per site
+      nic_in_gbps    per-site ingress NIC rates (defaults to egress —
+                     set both for asymmetric uplink/downlink)
+      link_gbps      full (src, dst) per-link capacity matrix; ``None`` /
+                     ``inf`` entries mean NIC-limited, ``0`` means no link
+      brownout_scope ``"fabric"`` (whole WAN degrades at once — legacy) or
+                     ``"per-link"`` (each link draws its own calendar)
+    """
+
+    gbps: float = 10.0
+    hourly_degrade_prob: float = 0.0
+    degraded_gbps: float = 1.0
+    nic_gbps: Optional[Tuple[float, ...]] = None
+    nic_in_gbps: Optional[Tuple[float, ...]] = None
+    link_gbps: Optional[Tuple[Tuple[Optional[float], ...], ...]] = None
+    brownout_scope: str = "fabric"
+
+    @property
+    def is_uniform(self) -> bool:
+        return (self.nic_gbps is None and self.nic_in_gbps is None
+                and self.link_gbps is None)
+
+    def build_topology(self, n_sites: int, days: int, seed: int) -> "WanTopology":
+        """Materialize the runtime :class:`WanTopology` (arrays + calendar).
+
+        The fabric-scope brownout calendar reproduces the seed's flaky-WAN
+        stream bit-for-bit: ``default_rng(seed + 31).random(days*48 + 1) <
+        prob``.
+        """
+        def per_site(vals, what):
+            arr = np.asarray(vals, dtype=np.float64) * 1e9
+            if arr.shape != (n_sites,):
+                raise ValueError(
+                    f"{what} must have one entry per site ({n_sites}), "
+                    f"got shape {arr.shape}")
+            return arr
+
+        if self.nic_gbps is not None:
+            nic_out = per_site(self.nic_gbps, "nic_gbps")
+        else:
+            nic_out = np.full(n_sites, self.gbps * 1e9, dtype=np.float64)
+        if self.nic_in_gbps is not None:
+            nic_in = per_site(self.nic_in_gbps, "nic_in_gbps")
+        else:
+            nic_in = nic_out.copy()
+
+        link = np.full((n_sites, n_sites), np.inf, dtype=np.float64)
+        if self.link_gbps is not None:
+            rows = self.link_gbps
+            if len(rows) != n_sites or any(len(r) != n_sites for r in rows):
+                raise ValueError(
+                    f"link_gbps must be a {n_sites}x{n_sites} matrix")
+            for s, row in enumerate(rows):
+                for d, cap in enumerate(row):
+                    if cap is not None:
+                        link[s, d] = float(cap) * 1e9
+
+        mask = None
+        if self.hourly_degrade_prob > 0.0:
+            n_hours = int(days * 24 * 2) + 1  # seed calendar length (2x slack)
+            rng = np.random.default_rng(seed + 31)
+            if self.brownout_scope == "fabric":
+                mask = rng.random(n_hours) < self.hourly_degrade_prob
+            elif self.brownout_scope == "per-link":
+                mask = rng.random((n_hours, n_sites, n_sites)) < self.hourly_degrade_prob
+                mask[:, np.arange(n_sites), np.arange(n_sites)] = False
+            else:
+                raise ValueError(
+                    f"brownout_scope must be 'fabric' or 'per-link', "
+                    f"got {self.brownout_scope!r}")
+        return WanTopology(nic_out, nic_in, link, mask,
+                           self.degraded_bps)
+
+    @property
+    def degraded_bps(self) -> float:
+        return self.degraded_gbps * 1e9
+
+
+# ---------------------------------------------------------------------------
+# Runtime topology
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True, eq=False)
+class WanTopology:
+    """Materialized WAN: per-site NIC rate arrays, per-link capacity matrix
+    and an optional hourly brownout calendar.  All rates in bits/s."""
+
+    nic_out_bps: np.ndarray  # (n,) egress NIC per site
+    nic_in_bps: np.ndarray  # (n,) ingress NIC per site
+    link_bps: np.ndarray  # (n, n); inf = NIC-limited, 0 = no link
+    brownout_mask: Optional[np.ndarray] = None  # (n_hours,) or (n_hours, n, n)
+    degraded_bps: float = 0.0
+
+    def __post_init__(self):
+        n = len(self.nic_out_bps)
+        if self.nic_in_bps.shape != (n,) or self.link_bps.shape != (n, n):
+            raise ValueError("inconsistent WanTopology array shapes")
+
+    # -- basic facts ---------------------------------------------------------
+    @property
+    def n_sites(self) -> int:
+        return len(self.nic_out_bps)
+
+    @classmethod
+    def uniform(cls, n_sites: int, nic_bps: float) -> "WanTopology":
+        """The seed model: one symmetric NIC rate, uncapped links."""
+        nic = np.full(n_sites, float(nic_bps))
+        return cls(nic, nic.copy(), np.full((n_sites, n_sites), np.inf))
+
+    @property
+    def is_uniform(self) -> bool:
+        return bool(
+            np.isinf(self.link_bps).all()
+            and (self.nic_out_bps == self.nic_out_bps[0]).all()
+            and (self.nic_in_bps == self.nic_out_bps[0]).all()
+        )
+
+    # -- brownout calendar ---------------------------------------------------
+    def _hour(self, t: float) -> int:
+        return min(int(t // HOUR), len(self.brownout_mask) - 1)
+
+    def _state_key(self, t: float):
+        """Hashable id of the link state at ``t`` (fabric: one bool; per-
+        link: the hour index) — the cache key for derived capacity arrays."""
+        m = self.brownout_mask
+        if m is None:
+            return None
+        h = self._hour(t)
+        return bool(m[h]) if m.ndim == 1 else h
+
+    @cached_property
+    def _resource_cache(self) -> dict:
+        return {}
+
+    def resources_at(self, t: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(nic_out, nic_in, link) capacities at sim-time ``t`` with the
+        brownout calendar applied.  Fabric scope degrades every resource
+        (shared-backbone brownout — reduces to the seed's degraded NIC
+        rate); per-link scope degrades only the affected links.  Cached per
+        link state; treat the returned arrays as read-only."""
+        key = self._state_key(t)
+        cached = self._resource_cache.get(key)
+        if cached is not None:
+            return cached
+        out, in_, link = self.nic_out_bps, self.nic_in_bps, self.link_bps
+        m = self.brownout_mask
+        if m is not None:
+            if m.ndim == 1:  # fabric scope
+                if key:
+                    d = self.degraded_bps
+                    out, in_, link = (np.minimum(out, d), np.minimum(in_, d),
+                                      np.minimum(link, d))
+            else:
+                bad = m[self._hour(t)]
+                if bad.any():
+                    link = np.where(bad, np.minimum(link, self.degraded_bps),
+                                    link)
+        res = (out, in_, link)
+        self._resource_cache[key] = res
+        return res
+
+    @cached_property
+    def _brownout_edges(self) -> List[float]:
+        """Times at which the brownout state changes (hour boundaries)."""
+        m = self.brownout_mask
+        if m is None:
+            return []
+        return [h * HOUR for h in range(1, len(m))
+                if np.any(m[h] != m[h - 1])]
+
+    def next_transition(self, t: float) -> float:
+        """Next sim-time the link state changes (inf if never) — an event
+        source for the next-event engine."""
+        edges = self._brownout_edges
+        i = bisect.bisect_right(edges, t)
+        return edges[i] if i < len(edges) else float("inf")
+
+    def nic_bps_at(self, t: float) -> float:
+        """Fabric NIC rate at ``t`` for (near-)uniform topologies — the
+        legacy ``ClusterSimulator._nic_bps`` scalar."""
+        return float(self.resources_at(t)[0].max())
+
+    # -- capacity / sharing --------------------------------------------------
+    def capacity(self, src: int, dst: int, t: float) -> float:
+        """Uncontended point-to-point capacity src -> dst at time t."""
+        out, in_, link = self.resources_at(t)
+        return float(min(out[src], in_[dst], link[src, dst]))
+
+    def reachable(self, src: int, dst: int) -> bool:
+        """Whether src -> dst has any *structural* capacity (base NICs and
+        link, brownouts ignored — a browned-out link recovers, a 0-capacity
+        link never does).  Migrations to unreachable sites are invalid."""
+        return bool(min(self.nic_out_bps[src], self.nic_in_bps[dst],
+                        self.link_bps[src, dst]) > 0.0)
+
+    @cached_property
+    def _capacity_cache(self) -> dict:
+        return {}
+
+    def capacity_matrix(self, t: float) -> np.ndarray:
+        """Uncontended (src, dst) capacity matrix at time t (cached per
+        link state; treat as read-only)."""
+        key = self._state_key(t)
+        cached = self._capacity_cache.get(key)
+        if cached is not None:
+            return cached
+        out, in_, link = self.resources_at(t)
+        cap = np.minimum(np.minimum(out[:, None], in_[None, :]), link)
+        self._capacity_cache[key] = cap
+        return cap
+
+    def shared_rates(
+        self, flows: Sequence[Tuple[int, int]], t: float = 0.0
+    ) -> np.ndarray:
+        """Effective bps granted to each flow (aligned with ``flows``).
+
+        Each flow gets the minimum equal split over the three resources it
+        traverses: ``min(out[s]/flows(out_s), in[d]/flows(in_d),
+        link[s,d]/flows(link_sd))``.  Never oversubscribes any resource;
+        reduces exactly to ``min(nic/src_flows, nic/dst_flows)`` on uniform
+        topologies."""
+        if not len(flows):
+            return np.zeros(0)
+        out, in_, link = self.resources_at(t)
+        n_src: Dict[int, int] = {}
+        n_dst: Dict[int, int] = {}
+        n_link: Dict[Tuple[int, int], int] = {}
+        for s, d in flows:
+            n_src[s] = n_src.get(s, 0) + 1
+            n_dst[d] = n_dst.get(d, 0) + 1
+            n_link[(s, d)] = n_link.get((s, d), 0) + 1
+        return np.array([
+            min(out[s] / n_src[s], in_[d] / n_dst[d],
+                link[s, d] / n_link[(s, d)])
+            for s, d in flows
+        ])
+
+    def advertised_matrix(
+        self, t: float = 0.0, flows: Sequence[Tuple[int, int]] = ()
+    ) -> np.ndarray:
+        """Policy-facing (src, dst) bandwidth matrix under the *current*
+        flow set — what a transfer on that pair is being granted right now
+        (idle resources advertise full capacity).  The same share counts as
+        :meth:`shared_rates`, so the snapshot always agrees with the
+        transfer loop."""
+        if not len(flows):
+            return self.capacity_matrix(t)
+        out, in_, link = self.resources_at(t)
+        n = self.n_sites
+        src_n = np.ones(n)
+        dst_n = np.ones(n)
+        link_n = np.ones((n, n))
+        for s, d in flows:
+            src_n[s] += 1.0
+            dst_n[d] += 1.0
+            link_n[s, d] += 1.0
+        # counts start at 1 (idle = full rate), so subtract the extra 1
+        # wherever a flow was actually counted
+        src_n[src_n > 1] -= 1.0
+        dst_n[dst_n > 1] -= 1.0
+        link_n[link_n > 1] -= 1.0
+        return np.minimum(
+            np.minimum((out / src_n)[:, None], (in_ / dst_n)[None, :]),
+            link / link_n,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Link-matrix builders for common fabrics
+# ---------------------------------------------------------------------------
+
+
+def hub_spoke_links(
+    n_sites: int, hub: int = 0, spoke_gbps: float = 1.0
+) -> Tuple[Tuple[Optional[float], ...], ...]:
+    """Hub-and-spoke link matrix: hub-adjacent links NIC-limited (None),
+    direct spoke-to-spoke links capped at ``spoke_gbps``."""
+    rows = []
+    for s in range(n_sites):
+        row = []
+        for d in range(n_sites):
+            row.append(None if (s == hub or d == hub or s == d) else spoke_gbps)
+        rows.append(tuple(row))
+    return tuple(rows)
+
+
+def partitioned_links(
+    groups: Sequence[Sequence[int]], inter_gbps: float = 0.25
+) -> Tuple[Tuple[Optional[float], ...], ...]:
+    """Partitioned fabric: NIC-limited links inside each group, thin
+    ``inter_gbps`` links between groups (0 = fully partitioned)."""
+    n = sum(len(g) for g in groups)
+    part = {}
+    for gi, g in enumerate(groups):
+        for s in g:
+            part[s] = gi
+    if sorted(part) != list(range(n)):
+        raise ValueError("groups must partition range(n_sites)")
+    rows = []
+    for s in range(n):
+        rows.append(tuple(
+            None if part[s] == part[d] else inter_gbps for d in range(n)))
+    return tuple(rows)
+
+
+__all__ = [
+    "WanProfile", "WanTopology", "hub_spoke_links", "partitioned_links",
+]

@@ -94,6 +94,21 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+def _peak_bytes(mem) -> Optional[int]:
+    """Per-device peak HBM: the runtime stat when jaxlib exposes it, else
+    the conservative sum of live buffer classes (args + outputs + temps +
+    code, minus donated aliases)."""
+    peak = getattr(mem, "peak_memory_in_bytes", None)
+    if peak is not None:
+        return peak
+    parts = [getattr(mem, a, 0) or 0 for a in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes")]
+    if not any(parts):
+        return None
+    return sum(parts) - (getattr(mem, "alias_size_in_bytes", 0) or 0)
+
+
 def _pspec_tree(logical_tree, mesh):
     """Convert a logical-axis-name pspec tree to PartitionSpecs."""
     def is_leaf(x):
@@ -170,6 +185,8 @@ def _compile_once(
                 compiled = lowered.compile()
                 mem = compiled.memory_analysis()
                 cost = compiled.cost_analysis()
+                if isinstance(cost, (list, tuple)):  # older jax: per-program list
+                    cost = cost[0] if cost else {}
     finally:
         if prev is None:
             os.environ.pop("REPRO_UNROLL_SCAN", None)
@@ -255,7 +272,7 @@ def lower_cell(
             "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
             "output_bytes": getattr(mem, "output_size_in_bytes", None),
             "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
-            "peak_bytes": getattr(mem, "peak_memory_in_bytes", None),
+            "peak_bytes": _peak_bytes(mem),
             "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
         },
         # roofline terms (seconds, per §ROOFLINE — per-chip quantities)
@@ -309,7 +326,9 @@ def plan_orchestration(
         per_site[j.home_site] += 1
     sites = site_views_from_traces(traces, t, slots=cfg.slots_per_site,
                                    busy=per_site)
-    state = ClusterState.build(t, views, sites, nic_bps=cfg.wan_gbps * 1e9)
+    # the same WanTopology the simulator materializes for this scenario
+    # (per-link caps, asymmetric NICs, brownout calendar at sim-time t)
+    state = ClusterState.build(t, views, sites, wan=scn.build_wan())
     actions = make_policy(policy).decide(state)
     return state, actions
 

@@ -38,7 +38,9 @@ def build_serving_state(scenario: str = "paper-table6", at_hour: float = 12.0,
     busy_full = [busy[s] if s < len(busy) else 0 for s in range(cfg.n_sites)]
     sites = site_views_from_traces(traces, t, slots=cfg.slots_per_site,
                                    busy=busy_full)
-    return ClusterState.build(t, [], sites, nic_bps=cfg.wan_gbps * 1e9)
+    # the scenario's materialized WanTopology — identical to what the
+    # simulator's transfer loop and the dry-run planner consume
+    return ClusterState.build(t, [], sites, wan=scn.build_wan())
 
 
 def green_route(state, n_requests: int) -> List[int]:

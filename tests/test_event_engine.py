@@ -1,0 +1,216 @@
+"""Next-event engine: parity with the fixed-dt reference on the paper
+scenarios, determinism, exact energy conservation, and the WAN-topology
+scenarios end-to-end (simulator + dryrun --plan + serve --green-route all
+consuming the same WanTopology)."""
+import numpy as np
+import pytest
+
+from repro.core import ClusterSimulator, get_scenario
+from repro.core.wan import WanTopology
+
+GBPS = 1e9
+
+
+def run_both(scenario, policy, **overrides):
+    out = {}
+    for engine in ("fixed-dt", "event"):
+        sim = ClusterSimulator.from_scenario(
+            scenario, policy, overrides=dict(engine=engine, **overrides))
+        out[engine] = sim.run()
+    return out["fixed-dt"], out["event"]
+
+
+# ---------------------------------------------------------------------------
+# Parity: the event engine reproduces fixed-dt results within tolerance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scenario,policy", [
+    ("paper-table6", "feasibility-aware"),
+    ("paper-table6", "energy-only"),
+    ("flaky-wan", "feasibility-aware"),
+    ("flaky-wan", "energy-only"),
+])
+def test_event_engine_matches_fixed_dt(scenario, policy):
+    """Full 7-day/240-job runs: grid/renewable kWh, completions and
+    migrations agree between engines (not bit-for-bit — fixed-dt rounds
+    completions up to the next 30 s tick; the event engine is exact)."""
+    fixed, event = run_both(scenario, policy)
+    assert event.engine == "event" and fixed.engine == "fixed-dt"
+    assert event.completed == fixed.completed == 240
+    assert event.grid_kwh == pytest.approx(fixed.grid_kwh, rel=0.05)
+    assert event.renewable_kwh == pytest.approx(fixed.renewable_kwh, rel=0.05)
+    assert event.migrations == pytest.approx(fixed.migrations, rel=0.15)
+    assert abs(event.failed_migrations - fixed.failed_migrations) <= 5
+    assert event.mean_jct_s == pytest.approx(fixed.mean_jct_s, rel=0.07)
+    # the whole point: far fewer steps than fixed-dt ticks
+    assert event.ticks < fixed.ticks / 3
+
+
+def test_event_engine_deterministic_given_seed():
+    r1 = ClusterSimulator.from_scenario("paper-table6", "feasibility-aware").run()
+    r2 = ClusterSimulator.from_scenario("paper-table6", "feasibility-aware").run()
+    assert r1.grid_kwh == r2.grid_kwh
+    assert r1.renewable_kwh == r2.renewable_kwh
+    assert r1.migrations == r2.migrations
+    assert r1.ticks == r2.ticks
+    assert [j.done_s for j in r1.jobs] == [j.done_s for j in r2.jobs]
+
+
+def test_event_engine_energy_conservation_is_exact():
+    """Analytic per-span integration: total energy equals compute energy
+    plus migration energy to float precision (fixed-dt needed 2% slack for
+    tick-boundary overshoot)."""
+    sim = ClusterSimulator.from_scenario(
+        "paper-table6", "feasibility-aware",
+        overrides=dict(days=4, n_jobs=120))
+    r = sim.run()
+    assert r.completed == 120
+    compute_kwh = sum(j.progress_s for j in r.jobs) / 3600 * sim.cfg.p_node_kw
+    total = r.grid_kwh + r.renewable_kwh
+    assert total == pytest.approx(compute_kwh + r.migration_kwh, rel=1e-9)
+    for j in r.jobs:
+        assert j.progress_s == pytest.approx(j.compute_s, abs=1e-6)
+
+
+def test_event_engine_summary_surfaces_validity_and_throughput():
+    r = ClusterSimulator.from_scenario(
+        "paper-table6", "static",
+        overrides=dict(days=2, n_jobs=20)).run()
+    s = r.summary()
+    assert "rejected_actions" in s and s["rejected_actions"] == 0
+    assert "ticks_per_sec" in s and s["ticks_per_sec"] > 0
+
+
+def test_failure_storm_runs_on_event_engine():
+    r = ClusterSimulator.from_scenario(
+        "failure-storm", "feasibility-aware",
+        overrides=dict(days=2, n_jobs=30)).run()
+    assert r.failures > 0
+    assert r.completed == 30
+
+
+# ---------------------------------------------------------------------------
+# WAN-topology scenarios end-to-end
+# ---------------------------------------------------------------------------
+
+
+NEW_SCENARIOS = ("hub-spoke-wan", "asymmetric-uplink", "partitioned-wan")
+
+
+@pytest.mark.parametrize("name", NEW_SCENARIOS)
+def test_topology_scenarios_run_end_to_end(name):
+    sim = ClusterSimulator.from_scenario(
+        name, "feasibility-aware", overrides=dict(days=2, n_jobs=24))
+    # the simulator consumes the scenario's materialized topology
+    scn_topo = get_scenario(name).build_wan()
+    np.testing.assert_allclose(sim.wan_topology.link_bps, scn_topo.link_bps)
+    np.testing.assert_allclose(sim.wan_topology.nic_out_bps, scn_topo.nic_out_bps)
+    r = sim.run()
+    assert r.completed == 24
+    assert r.rejected_actions == 0
+
+
+def test_hub_spoke_advertises_thin_spoke_links():
+    sim = ClusterSimulator.from_scenario("hub-spoke-wan", "static",
+                                         overrides=dict(days=2, n_jobs=4))
+    bw = sim.snapshot(0.0).bandwidth_bps
+    assert bw[1, 2] == pytest.approx(1 * GBPS)  # spoke-to-spoke capped
+    assert bw[0, 1] == pytest.approx(10 * GBPS)  # hub->spoke: spoke NIC binds
+    assert bw[1, 0] == pytest.approx(10 * GBPS)
+
+
+def test_partitioned_wan_advertises_thin_cross_links():
+    sim = ClusterSimulator.from_scenario("partitioned-wan", "static",
+                                         overrides=dict(days=2, n_jobs=4))
+    bw = sim.snapshot(0.0).bandwidth_bps
+    assert bw[0, 1] == pytest.approx(10 * GBPS)  # intra-partition
+    assert bw[3, 4] == pytest.approx(10 * GBPS)
+    assert bw[1, 3] == pytest.approx(0.25 * GBPS)  # cross-partition
+    assert bw[4, 2] == pytest.approx(0.25 * GBPS)
+
+
+def test_asymmetric_uplink_halves_concurrent_evacuations():
+    """Two transfers out of one dark site share the 2.5 Gbps egress NIC."""
+    sim = ClusterSimulator.from_scenario("asymmetric-uplink", "static",
+                                         overrides=dict(days=2, n_jobs=8))
+    j0, j1 = sim.jobs[0], sim.jobs[1]
+    for j, dest in ((j0, 1), (j1, 2)):
+        sim._move(j, state="queued", site=0)
+        sim._move(j, state="running")
+        j.transfer_dest = dest
+        j.transfer_remaining_bits = 8.0 * j.ckpt_bytes
+        sim._move(j, state="migrating")
+    eff = sim._effective_bw([j0, j1], 0.0)
+    assert eff[j0.jid] == pytest.approx(1.25 * GBPS)
+    state = sim.snapshot(0.0)
+    assert state.bandwidth_bps[0, 1] == pytest.approx(1.25 * GBPS)
+    # ingress stays uncontended for other sources
+    assert state.bandwidth_bps[3, 4] == pytest.approx(2.5 * GBPS)
+
+
+def test_plan_and_serve_consume_the_same_topology():
+    """dryrun --plan and serve --green-route build their snapshots from
+    Scenario.build_wan() — identical to the simulator's topology."""
+    from repro.launch.dryrun import plan_orchestration
+    from repro.launch.serve import build_serving_state
+
+    state, _actions = plan_orchestration("hub-spoke-wan", "feasibility-aware",
+                                         at_hour=12.0)
+    assert isinstance(state.wan, WanTopology)
+    assert state.bandwidth_bps[1, 2] == pytest.approx(1 * GBPS)
+    assert state.bandwidth_bps[0, 1] == pytest.approx(10 * GBPS)
+
+    sstate = build_serving_state("asymmetric-uplink", at_hour=12.0)
+    assert isinstance(sstate.wan, WanTopology)
+    assert sstate.bandwidth_bps[0, 1] == pytest.approx(2.5 * GBPS)
+
+    sim_topo = ClusterSimulator.from_scenario(
+        "hub-spoke-wan", "static", overrides=dict(days=2, n_jobs=2)).wan_topology
+    np.testing.assert_allclose(state.wan.link_bps, sim_topo.link_bps)
+
+
+def test_unreachable_migrations_rejected_not_stranded():
+    """On a *fully* partitioned fabric (inter_gbps=0) a Migrate across the
+    cut can never complete — the simulator must reject it (rejected_actions)
+    instead of stranding the job in 'migrating' forever."""
+    import dataclasses
+
+    from repro.core import WanProfile, get_scenario, partitioned_links
+    from repro.core.scenarios import register_scenario
+    from repro.core import scenarios as scn_mod
+
+    base = get_scenario("partitioned-wan")
+    hard = base.replace(
+        name="partitioned-wan-hard",
+        wan=WanProfile(gbps=10.0,
+                       link_gbps=partitioned_links(((0, 1, 2), (3, 4)),
+                                                   inter_gbps=0.0)))
+    register_scenario(hard)
+    try:
+        r = ClusterSimulator.from_scenario(
+            "partitioned-wan-hard", "energy-only",
+            overrides=dict(days=2, n_jobs=24)).run()
+    finally:
+        scn_mod._REGISTRY.pop("partitioned-wan-hard", None)
+    assert r.completed == 24  # nobody stranded mid-migration
+    assert r.rejected_actions > 0  # cross-cut Migrates were refused
+    for j in r.jobs:
+        assert j.state == "done"
+
+
+def test_partitioned_wan_feasibility_prefers_intra_partition():
+    """Cross-partition moves are class-B/C at 0.25 Gbps for >7.5 GB
+    checkpoints, so the feasibility filter keeps class-B jobs inside their
+    island."""
+    r = ClusterSimulator.from_scenario(
+        "partitioned-wan", "feasibility-aware",
+        overrides=dict(days=3, n_jobs=40)).run()
+    assert r.completed == 40
+    for j in r.jobs:
+        if j.size_class == "B" and j.migrations:
+            # class B (10-40 GB): 0.25 Gbps transfer >= 320 s => class C
+            # cross-partition, so any migration stayed inside the island
+            same_island = ({j.home_site, j.site} <= {0, 1, 2}
+                           or {j.home_site, j.site} <= {3, 4})
+            assert same_island

@@ -13,7 +13,8 @@ from repro.core.simulator import generate_jobs
 from repro.core.traces import TraceProfile
 
 BUILTINS = ("paper-table6", "flaky-wan", "solar-heavy", "large-ckpt-classC",
-            "failure-storm")
+            "failure-storm", "hub-spoke-wan", "asymmetric-uplink",
+            "partitioned-wan")
 
 
 def test_all_builtins_registered():
@@ -57,6 +58,17 @@ def test_sim_config_overrides_win():
     cfg = get_scenario("paper-table6").sim_config(wan_gbps=1.0, dt_s=120.0)
     assert cfg.wan_gbps == 1.0 and cfg.dt_s == 120.0
     assert cfg.n_jobs == 240  # untouched fields keep scenario values
+    assert cfg.wan.gbps == 1.0  # scalar override reaches the WanProfile
+
+
+def test_wan_gbps_override_rejected_when_shadowed_by_nic_gbps():
+    """On topology scenarios with per-site NIC rates the uniform wan_gbps
+    override would be silently ignored — it must raise instead."""
+    with pytest.raises(ValueError, match="nic_gbps"):
+        get_scenario("hub-spoke-wan").sim_config(wan_gbps=1.0)
+    # partitioned-wan keeps uniform NICs: the override applies there
+    cfg = get_scenario("partitioned-wan").sim_config(wan_gbps=1.0)
+    assert cfg.wan.gbps == 1.0 and cfg.wan.link_gbps is not None
 
 
 def test_scenarios_compose_with_replace():

@@ -1,0 +1,204 @@
+"""WanTopology: exact reduction to the legacy uniform share model,
+per-link caps, asymmetric NICs, brownout calendars, builder validation,
+and hypothesis properties (shared rates never oversubscribe any NIC/link
+and conserve the flow count)."""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # clean environments: deterministic tests still run
+    HAS_HYPOTHESIS = False
+
+from repro.core.state import advertised_bandwidth
+from repro.core.wan import (
+    WanProfile, WanTopology, hub_spoke_links, partitioned_links,
+)
+
+GBPS = 1e9
+
+
+def test_uniform_reduces_to_legacy_share_model():
+    topo = WanTopology.uniform(4, 10 * GBPS)
+    flows = [(0, 2), (0, 3), (1, 3), (0, 2)]
+    rates = topo.shared_rates(flows)
+    # min(nic/src_flows, nic/dst_flows): site0 has 3 outgoing flows
+    assert rates[0] == pytest.approx(10 * GBPS / 3)  # 0->2: src 3, dst 2
+    assert rates[1] == pytest.approx(10 * GBPS / 3)  # 0->3: src 3, dst 2
+    assert rates[2] == pytest.approx(10 * GBPS / 2)  # 1->3: src 1, dst 2
+    legacy = advertised_bandwidth(4, 10 * GBPS, flows)
+    np.testing.assert_allclose(topo.advertised_matrix(0.0, flows), legacy)
+
+
+def test_advertised_matrix_no_flows_is_capacity():
+    topo = WanTopology.uniform(3, 10 * GBPS)
+    np.testing.assert_allclose(topo.advertised_matrix(0.0, ()),
+                               np.full((3, 3), 10 * GBPS))
+
+
+def test_asymmetric_uplink_binds_on_egress():
+    prof = WanProfile(gbps=10.0, nic_gbps=(2.5, 2.5), nic_in_gbps=(10.0, 10.0))
+    topo = prof.build_topology(2, days=1, seed=0)
+    assert topo.capacity(0, 1, 0.0) == pytest.approx(2.5 * GBPS)
+    # two concurrent flows out of site 0 halve the *egress* NIC
+    rates = topo.shared_rates([(0, 1), (0, 1)])
+    np.testing.assert_allclose(rates, 1.25 * GBPS)
+
+
+def test_link_cap_binds_below_nics():
+    prof = WanProfile(gbps=10.0, link_gbps=((None, 1.0), (1.0, None)))
+    topo = prof.build_topology(2, days=1, seed=0)
+    assert topo.capacity(0, 1, 0.0) == pytest.approx(1 * GBPS)
+    # the link, not the NIC, is shared by two flows on the same pair
+    rates = topo.shared_rates([(0, 1), (0, 1)])
+    np.testing.assert_allclose(rates, 0.5 * GBPS)
+
+
+def test_zero_capacity_link_gives_zero_rate():
+    prof = WanProfile(gbps=10.0, link_gbps=((None, 0.0), (0.0, None)))
+    topo = prof.build_topology(2, days=1, seed=0)
+    assert topo.capacity(0, 1, 0.0) == 0.0
+    assert topo.shared_rates([(0, 1)])[0] == 0.0
+    assert topo.advertised_matrix(0.0, ())[0, 1] == 0.0
+
+
+def test_hub_spoke_and_partitioned_builders():
+    links = hub_spoke_links(4, hub=0, spoke_gbps=1.0)
+    assert links[0][2] is None and links[2][0] is None  # hub-adjacent
+    assert links[1][2] == 1.0 and links[3][1] == 1.0  # spoke-spoke capped
+    links = partitioned_links(((0, 1), (2, 3)), inter_gbps=0.25)
+    assert links[0][1] is None and links[2][3] is None  # intra
+    assert links[0][2] == 0.25 and links[3][1] == 0.25  # inter
+    with pytest.raises(ValueError, match="partition"):
+        partitioned_links(((0, 1), (1, 2)))
+
+
+def test_fabric_brownout_matches_legacy_calendar():
+    days, seed, prob = 3, 5, 0.4
+    prof = WanProfile(gbps=10.0, hourly_degrade_prob=prob, degraded_gbps=0.5)
+    topo = prof.build_topology(4, days=days, seed=seed)
+    n_hours = days * 48 + 1
+    legacy_bad = np.random.default_rng(seed + 31).random(n_hours) < prob
+    for h in range(days * 24):
+        want = 0.5 * GBPS if legacy_bad[h] else 10 * GBPS
+        assert topo.nic_bps_at(h * 3600.0 + 10.0) == pytest.approx(want)
+
+
+def test_per_link_brownout_degrades_only_affected_links():
+    prof = WanProfile(gbps=10.0, hourly_degrade_prob=0.5, degraded_gbps=0.5,
+                      brownout_scope="per-link")
+    topo = prof.build_topology(5, days=3, seed=0)
+    mask = topo.brownout_mask
+    assert mask.ndim == 3
+    h = next(h for h in range(len(mask)) if mask[h].any() and not mask[h].all())
+    t = h * 3600.0 + 1.0
+    cap = topo.capacity_matrix(t)
+    bad = mask[h]
+    assert (cap[bad] == 0.5 * GBPS).all()
+    assert (cap[~bad & ~np.eye(5, dtype=bool)] == 10 * GBPS).all()
+
+
+def test_next_transition_walks_brownout_edges():
+    prof = WanProfile(gbps=10.0, hourly_degrade_prob=0.5)
+    topo = prof.build_topology(3, days=3, seed=1)
+    t = 0.0
+    seen = 0
+    while True:
+        nxt = topo.next_transition(t)
+        if not np.isfinite(nxt):
+            break
+        assert nxt > t
+        assert nxt % 3600.0 == 0.0  # hourly calendar
+        # the state really changes across the edge
+        assert (topo.nic_bps_at(nxt - 1.0) != topo.nic_bps_at(nxt + 1.0))
+        t = nxt
+        seen += 1
+    assert seen > 0
+
+
+def test_no_brownouts_never_transitions():
+    topo = WanTopology.uniform(3, 10 * GBPS)
+    assert topo.next_transition(0.0) == float("inf")
+
+
+def test_profile_validation():
+    with pytest.raises(ValueError, match="nic_gbps"):
+        WanProfile(nic_gbps=(1.0, 2.0)).build_topology(3, days=1, seed=0)
+    with pytest.raises(ValueError, match="matrix"):
+        WanProfile(link_gbps=((None,),)).build_topology(2, days=1, seed=0)
+    with pytest.raises(ValueError, match="brownout_scope"):
+        WanProfile(hourly_degrade_prob=0.5,
+                   brownout_scope="chaos").build_topology(2, days=1, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# Property tests: conservation under arbitrary topologies + flow sets
+# ---------------------------------------------------------------------------
+
+if HAS_HYPOTHESIS:
+
+    @st.composite
+    def topology_and_flows(draw):
+        n = draw(st.integers(2, 6))
+        gbps = st.floats(0.1, 100.0)
+        out = tuple(draw(gbps) for _ in range(n))
+        in_ = tuple(draw(gbps) for _ in range(n))
+        link = tuple(
+            tuple(draw(st.one_of(st.none(), st.floats(0.0, 50.0)))
+                  for _ in range(n))
+            for _ in range(n))
+        prob = draw(st.sampled_from([0.0, 0.5]))
+        scope = draw(st.sampled_from(["fabric", "per-link"]))
+        prof = WanProfile(nic_gbps=out, nic_in_gbps=in_, link_gbps=link,
+                          hourly_degrade_prob=prob, degraded_gbps=0.5,
+                          brownout_scope=scope)
+        topo = prof.build_topology(n, days=2, seed=draw(st.integers(0, 5)))
+        pairs = [(s, d) for s in range(n) for d in range(n) if s != d]
+        flows = draw(st.lists(st.sampled_from(pairs), min_size=0, max_size=12))
+        t = draw(st.floats(0.0, 2 * 24 * 3600.0))
+        return topo, flows, t
+
+    @given(topology_and_flows())
+    @settings(max_examples=80, deadline=None)
+    def test_shared_rates_conserve_capacity_and_flow_count(tf):
+        topo, flows, t = tf
+        rates = topo.shared_rates(flows, t)
+        # conserves the flow count: one non-negative rate per flow
+        assert len(rates) == len(flows)
+        assert (rates >= 0.0).all()
+        out, in_, link = topo.resources_at(t)
+        tol = 1e-6
+        # no flow exceeds its uncontended point-to-point capacity
+        for (s, d), r in zip(flows, rates):
+            assert r <= topo.capacity(s, d, t) * (1 + tol)
+        # aggregate over every NIC and link stays within capacity
+        for s in range(topo.n_sites):
+            tot = sum(r for (fs, _), r in zip(flows, rates) if fs == s)
+            assert tot <= out[s] * (1 + tol)
+        for d in range(topo.n_sites):
+            tot = sum(r for (_, fd), r in zip(flows, rates) if fd == d)
+            assert tot <= in_[d] * (1 + tol)
+        for (s, d) in set(flows):
+            tot = sum(r for f, r in zip(flows, rates) if f == (s, d))
+            assert tot <= link[s, d] * (1 + tol) or np.isinf(link[s, d])
+
+    @given(topology_and_flows())
+    @settings(max_examples=50, deadline=None)
+    def test_advertised_matrix_agrees_with_shared_rates(tf):
+        topo, flows, t = tf
+        rates = topo.shared_rates(flows, t)
+        adv = topo.advertised_matrix(t, flows)
+        for (s, d), r in zip(flows, rates):
+            assert adv[s, d] == pytest.approx(r, rel=1e-9, abs=1e-6)
+
+    @given(st.integers(2, 6), st.floats(0.5, 50.0),
+           st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)),
+                    min_size=1, max_size=10))
+    @settings(max_examples=50, deadline=None)
+    def test_uniform_property_matches_legacy(n, gbps, raw_flows):
+        flows = [(s % n, d % n) for s, d in raw_flows if s % n != d % n]
+        topo = WanTopology.uniform(n, gbps * GBPS)
+        np.testing.assert_allclose(
+            topo.advertised_matrix(0.0, flows),
+            advertised_bandwidth(n, gbps * GBPS, flows))
