@@ -51,30 +51,39 @@ def calibrate() -> float:
 
 
 def quick_smoke(json_path: str = QUICK_LATEST) -> int:
-    """Perf gate for the orchestration hot loop: the headline 7-day/240-job
-    run under the ``paper-table6`` scenario, end to end, with ticks/sec
-    (one tick = one processed event under the next-event engine)."""
+    """Perf gate for the orchestration hot loop: full 7-day/240-job runs —
+    the headline ``paper-table6`` scenario plus the forecast-driven
+    ``plan-ahead`` policy on ``forecastable-brownouts`` (per-link outage
+    calendar + ForecastHorizon queries every tick), end to end, with
+    ticks/sec (one tick = one processed event under the next-event
+    engine)."""
     from repro.core import ClusterSimulator
 
     print("name,us_per_call,derived")
     ok = True
     record = {"engine": None, "calib_s": round(calibrate(), 4), "policies": {}}
-    for policy in ("feasibility-aware", "energy-only"):
+    for scenario, policy in (
+        ("paper-table6", "feasibility-aware"),
+        ("paper-table6", "energy-only"),
+        ("forecastable-brownouts", "plan-ahead"),
+    ):
         best = None
         for _ in range(2):  # best-of-2: shave scheduler noise off the gate
-            sim = ClusterSimulator.from_scenario("paper-table6", policy)
+            sim = ClusterSimulator.from_scenario(scenario, policy)
             r = sim.run()
             if best is None or r.wall_time_s < best.wall_time_s:
                 best = r
         r = best
         record["engine"] = r.engine
-        print(f"[quick] {policy}: {r.wall_time_s:.2f}s wall for {r.ticks} ticks "
-              f"({r.ticks_per_sec:.0f} ticks/sec) | grid={r.grid_kwh:.1f} kWh "
+        print(f"[quick] {policy}@{scenario}: {r.wall_time_s:.2f}s wall for "
+              f"{r.ticks} ticks ({r.ticks_per_sec:.0f} ticks/sec) | "
+              f"grid={r.grid_kwh:.1f} kWh "
               f"renew_frac={r.renewable_fraction:.2f} migrations={r.migrations} "
               f"completed={r.completed} rejected={r.rejected_actions}")
         print(f"quick_{policy},{r.wall_time_s * 1e6:.0f},"
               f"{r.ticks_per_sec:.0f} ticks/sec")
         record["policies"][policy] = {
+            "scenario": scenario,
             "wall_s": round(r.wall_time_s, 4),
             "ticks": r.ticks,
             "ticks_per_sec": round(r.ticks_per_sec, 1),

@@ -18,11 +18,16 @@ PAPER = {
     "oracle": (0.40, 0.79, "<2%"),
 }
 
+# the paper's Table VI plus the beyond-paper plan-ahead row (forecast-driven
+# Pause/Defer/Migrate plans; no published reference numbers)
+POLICIES = ("static", "energy-only", "feasibility-aware", "oracle",
+            "plan-ahead")
+
 
 def one(rows, label):
     out = []
     for r in rows:
-        pe, pj, po = PAPER[r["policy"]]
+        pe, pj, po = PAPER.get(r["policy"], ("-", "-", "-"))
         out.append([
             r["policy"], r["nonrenew_energy"], r["jct"],
             f"{r['migration_overhead']:.1%}", f"{r['stall_overhead']:.1%}",
@@ -44,10 +49,12 @@ def run(fast: bool = False):
                          n_jobs=120 if fast else 240,
                          days=4 if fast else 7)
         r10 = one(normalized_table(run_policy_comparison(
-            scenario="paper-table6", overrides=overrides)),
+            scenario="paper-table6", overrides=overrides,
+            policies=POLICIES)),
             "WAN 10 Gbps NIC (Table V nominal)")
         r1 = one(normalized_table(run_policy_comparison(
-            scenario="paper-table6", overrides={**overrides, "wan_gbps": 1.0})),
+            scenario="paper-table6", overrides={**overrides, "wan_gbps": 1.0},
+            policies=POLICIES)),
             "WAN 1 Gbps effective per-flow")
         # §VI.H: stochastic feasibility gate under noisy forecasts, passed
         # per-policy via a structured PolicyConfig

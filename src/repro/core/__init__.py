@@ -18,8 +18,11 @@ from repro.core.state import (  # noqa: F401
 from repro.core.orchestrator import (  # noqa: F401
     DeferConfig, DeferToWindowPolicy, EnergyOnlyPolicy, FeasibilityAwarePolicy,
     FeasibilityConfig, GridThrottlePolicy, OraclePolicy, OrchestratorContext,
-    Policy, PolicyConfig, StaticPolicy, ThrottleConfig, available_policies,
-    make_policy, register_policy,
+    PlanAheadConfig, PlanAheadPolicy, Policy, PolicyConfig, StaticPolicy,
+    ThrottleConfig, available_policies, make_policy, register_policy,
+)
+from repro.core.forecast import (  # noqa: F401
+    ForecastHorizon, OutageForecast, WindowForecast,
 )
 from repro.core.wan import (  # noqa: F401
     WanProfile, WanTopology, hub_spoke_links, partitioned_links,

@@ -1,0 +1,319 @@
+"""Forecast-and-planning subsystem: the lookahead view of renewable
+windows and WAN brownouts (paper §VI.H; cf. XWind's per-farm renewable
+horizons and Wiesner et al.'s curtailment-window feasibility study).
+
+The reactive snapshot fields (``SiteView.window_remaining_s``,
+``next_window_start_s``, the advertised bandwidth matrix) describe *now*.
+:class:`ForecastHorizon` is the *plan-ahead* product attached to every
+:class:`~repro.core.state.ClusterState` as ``state.forecast``:
+
+  * per-site sequences of upcoming renewable windows over a lookahead
+    ``horizon_s``, derived from :class:`~repro.core.traces.SiteTrace`
+    windows with the same Gaussian ``sigma_s`` noise model the
+    :class:`~repro.core.traces.Forecaster` applies to remaining-window
+    queries (σ=0 reproduces the oracle view), and
+  * per-link brownout *outage* forecasts derived from a
+    :class:`~repro.core.wan.WanTopology` calendar — brownout calendars are
+    schedules (grid-operator curtailment notices, maintenance windows), so
+    they are forecast exactly, with the degraded capacity attached.
+
+Window noise is **hash-deterministic**: each (seed, site) pair seeds its
+own stream and jitters that site's windows in trace order, so every
+consumer — the simulator's per-tick snapshot, ``dryrun --plan``,
+``serve --green-route`` — sees the *same* noisy horizon for a given seed
+regardless of when or how often it queries.  That is what lets a policy
+compose multi-step plans (Pause now, Resume at the forecast window start)
+without the plan shifting under it between ticks.
+
+All queries take an explicit sim-time ``t`` and gate visibility at
+``t + horizon_s``: the horizon is a sliding lookahead window, not a fixed
+batch, so one ``ForecastHorizon`` (built once per run) serves every
+snapshot.
+"""
+from __future__ import annotations
+
+import bisect
+from dataclasses import dataclass, field
+from functools import cached_property
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+#: Default lookahead: one diurnal cycle (every site sees its next solar
+#: window plus the night wind window that may precede it).
+DEFAULT_HORIZON_S = DAY
+
+
+@dataclass(frozen=True, slots=True)
+class WindowForecast:
+    """A forecast renewable-surplus window (edges carry the sigma noise)."""
+
+    start_s: float
+    end_s: float
+
+    @property
+    def duration_s(self) -> float:
+        return self.end_s - self.start_s
+
+    def overlap_s(self, t0: float, t1: float) -> float:
+        return max(0.0, min(t1, self.end_s) - max(t0, self.start_s))
+
+
+@dataclass(frozen=True, slots=True)
+class OutageForecast:
+    """A forecast WAN brownout span.
+
+    ``src == dst == -1`` marks a fabric-scope outage (every link degrades
+    at once — the legacy flaky-WAN regime); otherwise the span applies to
+    the single directed link ``(src, dst)``.  ``capacity_bps`` is the
+    degraded capacity during the span — combine it with the current
+    advertised bandwidth via ``min`` (the calendar degrades, never
+    upgrades).
+    """
+
+    start_s: float
+    end_s: float
+    src: int = -1
+    dst: int = -1
+    capacity_bps: float = 0.0
+
+    @property
+    def fabric_wide(self) -> bool:
+        return self.src < 0
+
+    def affects(self, src: int, dst: int) -> bool:
+        return self.fabric_wide or (self.src == src and self.dst == dst)
+
+
+def _compress_hours(mask_1d: np.ndarray) -> List[Tuple[int, int]]:
+    """Runs of consecutive True hours as [h_start, h_end) pairs."""
+    runs: List[Tuple[int, int]] = []
+    start = None
+    for h, bad in enumerate(mask_1d):
+        if bad and start is None:
+            start = h
+        elif not bad and start is not None:
+            runs.append((start, h))
+            start = None
+    if start is not None:
+        runs.append((start, len(mask_1d)))
+    return runs
+
+
+@dataclass(frozen=True)
+class ForecastHorizon:
+    """Sliding-lookahead forecast of renewable windows and WAN outages.
+
+    Built once per run (:meth:`build`) and attached to every snapshot;
+    queries take the current sim-time ``t`` and only reveal entries that
+    begin before ``t + horizon_s``.
+    """
+
+    horizon_s: float
+    sigma_s: float
+    site_windows: Tuple[Tuple[WindowForecast, ...], ...]
+    outages: Tuple[OutageForecast, ...]  # sorted by start_s
+
+    @property
+    def n_sites(self) -> int:
+        return len(self.site_windows)
+
+    # -- renewable-window queries -------------------------------------------
+    @cached_property
+    def _window_starts(self) -> Tuple[List[float], ...]:
+        return tuple([w.start_s for w in wins] for wins in self.site_windows)
+
+    def windows(self, site: int, t: float) -> List[WindowForecast]:
+        """Forecast windows still relevant at ``t``: end after ``t``, start
+        inside the lookahead."""
+        limit = t + self.horizon_s
+        return [w for w in self.site_windows[site]
+                if w.end_s > t and w.start_s < limit]
+
+    def next_window(self, site: int, t: float) -> Optional[WindowForecast]:
+        """The current-or-next forecast window at ``t`` (None when nothing
+        begins inside the lookahead)."""
+        wins = self.site_windows[site]
+        i = bisect.bisect_right(self._window_starts[site], t)
+        # wins[i-1] may still be open (covers t)
+        if i > 0 and wins[i - 1].end_s > t:
+            return wins[i - 1]
+        if i < len(wins) and wins[i].start_s < t + self.horizon_s:
+            return wins[i]
+        return None
+
+    def next_window_start_s(self, site: int, t: float) -> float:
+        """Forecast start of the next window strictly after ``t`` (inf if
+        none inside the lookahead) — the planning analogue of
+        ``SiteView.next_window_start_s``."""
+        wins = self.site_windows[site]
+        i = bisect.bisect_right(self._window_starts[site], t)
+        if i < len(wins) and wins[i].start_s < t + self.horizon_s:
+            return wins[i].start_s
+        return float("inf")
+
+    def active(self, site: int, t: float) -> bool:
+        w = self.next_window(site, t)
+        return w is not None and w.start_s <= t
+
+    def green_seconds(self, site: int, t0: float, t1: float) -> float:
+        """Forecast renewable seconds overlapping [t0, t1] (t1 capped at
+        the lookahead)."""
+        t1 = min(t1, t0 + self.horizon_s)
+        return sum(w.overlap_s(t0, t1) for w in self.site_windows[site]
+                   if w.end_s > t0 and w.start_s < t1)
+
+    # -- WAN outage queries --------------------------------------------------
+    @cached_property
+    def _link_outages(self) -> Dict[Tuple[int, int], Tuple[OutageForecast, ...]]:
+        by: Dict[Tuple[int, int], List[OutageForecast]] = {}
+        for o in self.outages:
+            by.setdefault((o.src, o.dst), []).append(o)
+        return {k: tuple(v) for k, v in by.items()}
+
+    @cached_property
+    def _merged_outage_cache(self) -> Dict[Tuple[int, int], Tuple[OutageForecast, ...]]:
+        return {}
+
+    def _outages_for(self, src: int, dst: int) -> Tuple[OutageForecast, ...]:
+        """Fabric + per-link outages affecting (src, dst), start-sorted.
+        Merged once per link and cached — plan-ahead queries every
+        (candidate, destination) pair every tick."""
+        key = (src, dst)
+        got = self._merged_outage_cache.get(key)
+        if got is None:
+            got = tuple(sorted(
+                (*self._link_outages.get((-1, -1), ()),
+                 *self._link_outages.get(key, ())),
+                key=lambda o: o.start_s))
+            self._merged_outage_cache[key] = got
+        return got
+
+    def next_outage(self, src: int, dst: int, t: float) -> Optional[OutageForecast]:
+        """The first forecast outage affecting link (src, dst) that is
+        still open at / begins after ``t``, inside the lookahead."""
+        limit = t + self.horizon_s
+        for o in self._outages_for(src, dst):
+            if o.end_s > t and o.start_s < limit:
+                return o
+        return None
+
+    def next_outage_start_s(self, src: int, dst: int, t: float) -> float:
+        o = self.next_outage(src, dst, t)
+        return o.start_s if o is not None else float("inf")
+
+    def next_outage_start_after(self, src: int, dst: int, t: float) -> float:
+        """First forecast outage START strictly after ``t`` on (src, dst)
+        (inf if none inside the lookahead).  Unlike :meth:`next_outage`,
+        an outage already in progress does not mask a later one — this is
+        the query arrival checks need: "does anything begin while my
+        transfer is still in flight?"."""
+        limit = t + self.horizon_s
+        for o in self._outages_for(src, dst):
+            if o.start_s > t:
+                return o.start_s if o.start_s < limit else float("inf")
+        return float("inf")
+
+    def next_uplink_outage_start_s(self, src: int, t: float) -> float:
+        """Earliest forecast outage start affecting ANY link out of
+        ``src`` (inf if none inside the lookahead) — the evacuation
+        trigger: after this instant the site's checkpoints may no longer
+        drain at full rate."""
+        limit = t + self.horizon_s
+        best = float("inf")
+        for (s, _d), outs in self._link_outages.items():
+            if s != -1 and s != src:
+                continue
+            for o in outs:
+                if o.end_s > t and o.start_s < limit:
+                    best = min(best, max(o.start_s, t))
+                    break
+        return best
+
+    def capacity_floor_bps(self, src: int, dst: int, t0: float, t1: float) -> float:
+        """Minimum forecast degraded capacity on (src, dst) over [t0, t1]
+        (inf when no outage overlaps — i.e. the calendar forecasts no
+        degradation; combine with the advertised bandwidth via min)."""
+        t1 = min(t1, t0 + self.horizon_s)
+        floor = float("inf")
+        for o in self._outages_for(src, dst):
+            if o.end_s > t0 and o.start_s < t1:
+                floor = min(floor, o.capacity_bps)
+        return floor
+
+    # -- builder -------------------------------------------------------------
+    @classmethod
+    def build(
+        cls,
+        traces: Sequence,
+        *,
+        wan=None,
+        horizon_s: float = DEFAULT_HORIZON_S,
+        sigma_s: float = 0.0,
+        seed: int = 0,
+    ) -> "ForecastHorizon":
+        """Materialize the forecast from site traces (+ optionally a
+        :class:`~repro.core.wan.WanTopology` brownout calendar).
+
+        Window edges get i.i.d. Gaussian jitter N(0, sigma_s²) from a
+        per-(seed, site) stream drawn in trace order — deterministic and
+        query-order-independent.  Windows whose noisy duration collapses
+        below 60 s are dropped (the forecaster "missed" them), and
+        windows the jitter pushed into overlap are merged — the query
+        surface (bisect coverage in :meth:`next_window`, the overlap sum
+        in :meth:`green_seconds`) assumes disjoint windows.  Outage spans
+        are exact (calendars are schedules); the per-span
+        ``capacity_bps`` is the calendar's degraded rate.
+        """
+        site_windows: List[Tuple[WindowForecast, ...]] = []
+        for s, tr in enumerate(traces):
+            rng = np.random.default_rng([seed, 97, s]) if sigma_s > 0 else None
+            noisy: List[Tuple[float, float]] = []
+            for w in tr.windows:
+                if rng is not None:
+                    ds, de = rng.normal(0.0, sigma_s, 2)
+                else:
+                    ds = de = 0.0
+                a, b = max(0.0, w.start_s + ds), w.end_s + de
+                if b - a >= 60.0:
+                    noisy.append((a, b))
+            noisy.sort()
+            merged: List[List[float]] = []
+            for a, b in noisy:
+                if merged and a <= merged[-1][1]:
+                    merged[-1][1] = max(merged[-1][1], b)
+                else:
+                    merged.append([a, b])
+            site_windows.append(tuple(WindowForecast(a, b)
+                                      for a, b in merged))
+
+        outages: List[OutageForecast] = []
+        mask = getattr(wan, "brownout_mask", None)
+        if mask is not None:
+            degraded = wan.degraded_bps
+            if mask.ndim == 1:  # fabric scope
+                for h0, h1 in _compress_hours(mask):
+                    outages.append(OutageForecast(
+                        h0 * HOUR, h1 * HOUR, -1, -1, degraded))
+            else:  # per-link scope: (n_hours, n, n)
+                n = mask.shape[1]
+                for src in range(n):
+                    for dst in range(n):
+                        if src == dst or not mask[:, src, dst].any():
+                            continue
+                        cap = float(min(degraded, wan.link_bps[src, dst]))
+                        for h0, h1 in _compress_hours(mask[:, src, dst]):
+                            outages.append(OutageForecast(
+                                h0 * HOUR, h1 * HOUR, src, dst, cap))
+        outages.sort(key=lambda o: (o.start_s, o.src, o.dst))
+        return cls(horizon_s=float(horizon_s), sigma_s=float(sigma_s),
+                   site_windows=tuple(site_windows), outages=tuple(outages))
+
+
+__all__ = [
+    "DEFAULT_HORIZON_S", "ForecastHorizon", "OutageForecast",
+    "WindowForecast",
+]

@@ -27,6 +27,10 @@ Built-ins:
                     power, restore full power inside renewable windows
   defer-to-window   beyond-paper: Defer queued jobs at dark sites until the
                     site's next forecast window start
+  plan-ahead        beyond-paper: multi-step plans over ``state.forecast``
+                    — Algorithm 1 hardened against forecast link outages,
+                    Pause-for-window sequences, pre-emptive evacuation
+                    ahead of uplink brownouts, horizon-bounded Defer
 """
 from __future__ import annotations
 
@@ -73,6 +77,21 @@ class ThrottleConfig(PolicyConfig):
 @dataclass(frozen=True)
 class DeferConfig(PolicyConfig):
     max_wait_s: float = 4 * 3600.0  # never hold a queued job longer than this
+
+
+@dataclass(frozen=True)
+class PlanAheadConfig(PolicyConfig):
+    """Knobs for the forecast-driven planner (Algorithm 1 + lookahead)."""
+
+    alpha: float = fz.ALPHA
+    gamma: float = 1.0
+    beta: float = 1.0
+    queue_penalty_s: float = 7200.0
+    min_benefit_s: float = 1500.0
+    max_wait_s: float = 4 * 3600.0  # Defer bound (as defer-to-window)
+    pause_horizon_s: float = 4 * 3600.0  # Pause-for-window lookahead
+    min_pause_compute_s: float = 1800.0  # don't park nearly-done jobs
+    arrival_margin_s: float = 1800.0  # forecast-noise margin on arrivals
 
 
 # ---------------------------------------------------------------------------
@@ -134,6 +153,90 @@ def make_policy(name: str, config: Optional[PolicyConfig] = None, **kw) -> "Poli
     if config is not None:
         kw = {**dataclasses.asdict(config), **kw}
     return _REGISTRY[key](**kw)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 building blocks (shared by feasibility-aware and plan-ahead)
+# ---------------------------------------------------------------------------
+
+
+def algorithm1_grid(state: ClusterState, candidates: List[JobView], *,
+                    alpha: float, eps: float = 0.0,
+                    forecast_sigma_s: float = 0.0, bw_grid=None):
+    """Stage 1, vectorized: one feasibility evaluation over the whole
+    (candidate × destination) grid per tick.  ``bw_grid`` overrides the
+    snapshot's advertised rows (plan-ahead hardens them against forecast
+    outages first); ``eps`` > 0 with ``forecast_sigma_s`` > 0 swaps the
+    deterministic time gate for the stochastic one (§VI.H).  Returns
+    ``(ok_grid, t_transfer_grid)``."""
+    import numpy as np
+
+    sizes = np.array([j.ckpt_bytes for j in candidates])[:, None]
+    t_loads = np.array([j.t_load_s for j in candidates])[:, None]
+    if bw_grid is None:
+        bw_grid = np.asarray(state.bandwidth_bps)[
+            np.array([j.site for j in candidates], dtype=np.int64), :
+        ]  # (n_candidates, n_sites)
+    windows = state.site_window_s[None, :]
+    v = fz.evaluate(sizes, bw_grid, windows, alpha=alpha, t_load_s=t_loads)
+    if eps > 0.0 and forecast_sigma_s > 0.0:
+        ok_grid = (
+            np.asarray(
+                fz.stochastic_feasible(
+                    sizes, bw_grid, windows, forecast_sigma_s,
+                    eps=eps, alpha=alpha, t_load_s=t_loads,
+                )
+            )
+            & np.asarray(v.energy_ok)
+            & (np.asarray(v.workload_class) != 2)
+        )
+    else:
+        ok_grid = np.asarray(v.feasible)
+    return ok_grid, np.asarray(v.t_transfer_s)
+
+
+def best_destination(state: ClusterState, job: JobView, ok_row,
+                     t_transfer_row, reserved: Dict[int, int], *,
+                     gamma: float, beta: float, queue_penalty_s: float,
+                     min_benefit_s: float) -> Optional[int]:
+    """Stage 2: utility maximization inside the feasible set.
+
+        benefit(d) = γ · expected grid-seconds avoided
+                     − β · queue penalty · (load(d) − load(s))
+
+    ``reserved`` tracks same-tick slot commitments so concurrent decisions
+    do not herd.  Returns the argmax destination sid (ties by transfer
+    time) or None when nothing beats ``max(t_cost, min_benefit_s)``."""
+    cur = state.site(job.site)
+    best: Optional[Tuple[float, float, int]] = None  # (-benefit, t_transfer, sid)
+    for dest in state.sites:
+        if dest.sid == job.site:
+            continue
+        if not ok_row[dest.sid]:
+            continue
+        window = dest.window_remaining_s
+        t_transfer = float(t_transfer_row[dest.sid])
+        t_cost = t_transfer + job.t_load_s + fz.T_DOWNTIME_S
+        cur_green_s = cur.window_remaining_s if cur.renewable_active else 0.0
+        dest_green_s = min(window, job.remaining_compute_s)
+        grid_seconds_avoided = max(
+            0.0, dest_green_s - min(cur_green_s, job.remaining_compute_s))
+        dest_load = (dest.busy + dest.queued
+                     + reserved[dest.sid]) / max(dest.slots, 1)
+        # symmetric congestion term: moving toward a less-loaded site is
+        # itself a benefit (contention-aware placement, §V.D.2)
+        benefit = (
+            gamma * grid_seconds_avoided
+            - beta * queue_penalty_s * (dest_load - cur.load)
+        )
+        if dest.free_slots - reserved[dest.sid] <= 0:
+            benefit -= queue_penalty_s  # would have to queue
+        if benefit <= max(t_cost, min_benefit_s):
+            continue
+        key = (-benefit, t_transfer, dest.sid)
+        if best is None or key < best:
+            best = key
+    return best[2] if best is not None else None
 
 
 # ---------------------------------------------------------------------------
@@ -213,72 +316,24 @@ class FeasibilityAwarePolicy(Policy):
     forecast_sigma_s: float = 0.0
 
     def decide(self, state: ClusterState) -> List[Action]:
-        import numpy as np
-
         candidates = state.migratable()
         if not candidates:
             return []
-        # ---- Stage 1, vectorized: one feasibility evaluation over the whole
-        # (job × destination) grid per tick, using the snapshot's advertised
-        # bandwidth matrix (per-NIC fair share).
-        sizes = np.array([j.ckpt_bytes for j in candidates])[:, None]
-        t_loads = np.array([j.t_load_s for j in candidates])[:, None]
-        bw_grid = np.asarray(state.bandwidth_bps)[
-            np.array([j.site for j in candidates], dtype=np.int64), :
-        ]  # (n_jobs, n_sites)
-        windows = state.site_window_s[None, :]
-        v = fz.evaluate(sizes, bw_grid, windows, alpha=self.alpha,
-                        t_load_s=t_loads)
-        if self.eps > 0.0 and self.forecast_sigma_s > 0.0:
-            ok_grid = (
-                np.asarray(
-                    fz.stochastic_feasible(
-                        sizes, bw_grid, windows, self.forecast_sigma_s,
-                        eps=self.eps, alpha=self.alpha, t_load_s=t_loads,
-                    )
-                )
-                & np.asarray(v.energy_ok)
-                & (np.asarray(v.workload_class) != 2)
-            )
-        else:
-            ok_grid = np.asarray(v.feasible)
-        t_transfer_grid = np.asarray(v.t_transfer_s)
-
+        ok_grid, t_transfer_grid = algorithm1_grid(
+            state, candidates, alpha=self.alpha, eps=self.eps,
+            forecast_sigma_s=self.forecast_sigma_s)
         out: List[Action] = []
         # Track slot reservations within this tick so we do not herd.
         reserved: Dict[int, int] = {s.sid: 0 for s in state.sites}
         for i, job in enumerate(candidates):
-            cur = state.site(job.site)
-            best: Optional[Tuple[float, float, int]] = None  # (-benefit, t_transfer, sid)
-            for dest in state.sites:
-                if dest.sid == job.site:
-                    continue
-                if not ok_grid[i, dest.sid]:
-                    continue
-                window = dest.window_remaining_s
-                t_transfer = float(t_transfer_grid[i, dest.sid])
-                t_cost = t_transfer + job.t_load_s + fz.T_DOWNTIME_S
-                # ---- Stage 2: benefit inside the feasible set ----
-                cur_green_s = cur.window_remaining_s if cur.renewable_active else 0.0
-                dest_green_s = min(window, job.remaining_compute_s)
-                grid_seconds_avoided = max(0.0, dest_green_s - min(cur_green_s, job.remaining_compute_s))
-                dest_load = (dest.busy + dest.queued + reserved[dest.sid]) / max(dest.slots, 1)
-                # symmetric congestion term: moving toward a less-loaded site
-                # is itself a benefit (contention-aware placement, §V.D.2)
-                benefit = (
-                    self.gamma * grid_seconds_avoided
-                    - self.beta * self.queue_penalty_s * (dest_load - cur.load)
-                )
-                if dest.free_slots - reserved[dest.sid] <= 0:
-                    benefit -= self.queue_penalty_s  # would have to queue
-                if benefit <= max(t_cost, self.min_benefit_s):
-                    continue
-                key = (-benefit, t_transfer, dest.sid)
-                if best is None or key < best:
-                    best = key
-            if best is not None:
-                out.append(Migrate(job.jid, best[2]))
-                reserved[best[2]] += 1
+            dest = best_destination(
+                state, job, ok_grid[i], t_transfer_grid[i], reserved,
+                gamma=self.gamma, beta=self.beta,
+                queue_penalty_s=self.queue_penalty_s,
+                min_benefit_s=self.min_benefit_s)
+            if dest is not None:
+                out.append(Migrate(job.jid, dest))
+                reserved[dest] += 1
         return out
 
 
@@ -311,6 +366,183 @@ class GridThrottlePolicy(Policy):
         return out
 
 
+@register_policy("plan-ahead", aliases=("planahead",), config=PlanAheadConfig)
+@dataclass
+class PlanAheadPolicy(Policy):
+    """Forecast-driven planner: Algorithm 1's filter evaluated against the
+    *forecast* fabric, plus multi-step Pause/Resume and Defer plans over
+    the window horizon (``state.forecast``).
+
+    Four stages per tick:
+
+    1. **Migrate** — Algorithm 1 (hard feasibility filter + utility
+       maximization), with the bandwidth grid hardened against forecast
+       link outages: a transfer that would still be in flight when an
+       outage begins on its link is planned at the outage's degraded
+       capacity, not today's matrix.  Every chosen migration must also
+       pass an *arrival* check at the post-admission ``(flows+1)`` rate —
+       the transfer must land ``arrival_margin_s`` inside the destination
+       window and before any forecast outage on its link, so planned
+       moves do not become failed migrations.  Jobs at green sites are
+       pre-emptively evacuated only when the forecast says their uplink
+       browns out before the window ends and their checkpoint could no
+       longer drain afterwards.
+    2. **Pause** — running jobs burning grid power at dark sites are
+       parked when the forecast promises a window within
+       ``pause_horizon_s`` (the Pause-for-window sequence PR 1 left open).
+    3. **Resume** — paused jobs restart when their site turns green, or
+       when the window they were waiting for evaporates from the
+       forecast (no stranding).
+    4. **Defer** — queued jobs at dark sites are held until the forecast
+       window start (bounded by ``max_wait_s``), one Defer per
+       (job, window) via ``JobView.defer_until_s``.
+
+    Degrades gracefully to reactive feasibility-aware + defer behaviour
+    when ``state.forecast`` is None.
+    """
+
+    alpha: float = fz.ALPHA
+    gamma: float = 1.0
+    beta: float = 1.0
+    queue_penalty_s: float = 7200.0
+    min_benefit_s: float = 1500.0
+    max_wait_s: float = 4 * 3600.0
+    pause_horizon_s: float = 4 * 3600.0
+    min_pause_compute_s: float = 1800.0
+    arrival_margin_s: float = 1800.0
+
+    # ---- stage 1: migration ------------------------------------------------
+    def _migrations(self, state: ClusterState, planned: set) -> List[Action]:
+        import numpy as np
+
+        t = state.t
+        fc = state.forecast
+        candidates = state.migratable()
+        if not candidates:
+            return []
+        n_sites = state.n_sites
+        cand_sites = np.array([j.site for j in candidates], dtype=np.int64)
+        bw_grid = np.array(np.asarray(state.bandwidth_bps)[cand_sites, :],
+                           copy=True)
+        # forecast hardening: plan any transfer that would cross the first
+        # forecast outage on its link at the outage's degraded capacity
+        outage_at = {}
+        if fc is not None:
+            for s in set(int(x) for x in cand_sites):
+                for d in range(n_sites):
+                    if d != s:
+                        outage_at[(s, d)] = fc.next_outage(s, d, t)
+            for i, job in enumerate(candidates):
+                for d in range(n_sites):
+                    o = outage_at.get((job.site, d))
+                    bw = bw_grid[i, d]
+                    if o is None or bw <= 0.0:
+                        continue
+                    t_transfer = 8.0 * job.ckpt_bytes / bw
+                    if o.start_s < t + t_transfer:  # would cross the outage
+                        bw_grid[i, d] = min(bw, o.capacity_bps)
+        ok_grid, t_transfer_grid = algorithm1_grid(
+            state, candidates, alpha=self.alpha, bw_grid=bw_grid)
+
+        out: List[Action] = []
+        flows = list(state.transfers)
+        reserved: Dict[int, int] = {s.sid: 0 for s in state.sites}
+        for i, job in enumerate(candidates):
+            cur = state.site(job.site)
+            if cur.renewable_active:
+                if job.remaining_compute_s <= cur.window_remaining_s:
+                    continue  # finishes green where it is
+                # pre-emptive evacuation: only when the uplink is forecast
+                # to brown out before this window ends — afterwards the
+                # checkpoint could no longer drain at plan rate
+                if fc is None:
+                    continue
+                uplink_out = fc.next_uplink_outage_start_s(job.site, t)
+                if uplink_out > t + cur.window_remaining_s:
+                    continue  # fabric stays clean: migrate reactively later
+            dest_sid = best_destination(
+                state, job, ok_grid[i], t_transfer_grid[i], reserved,
+                gamma=self.gamma, beta=self.beta,
+                queue_penalty_s=self.queue_penalty_s,
+                min_benefit_s=self.min_benefit_s)
+            if dest_sid is None:
+                continue
+            # arrival check at the post-admission rate — counting both the
+            # in-flight transfers and the migrations committed earlier this
+            # tick: the transfer must land inside the destination window
+            # with margin, and before any forecast outage on its link
+            # (otherwise the rate estimate is fiction and the move becomes
+            # a failed migration)
+            rate = state.post_admission_bps(job.site, dest_sid, flows)
+            if rate <= 0.0:
+                continue
+            t_transfer = 8.0 * job.ckpt_bytes / rate
+            t_arrive = t + t_transfer
+            dest_window_end = t + state.site(dest_sid).window_remaining_s
+            if t_arrive + self.arrival_margin_s > dest_window_end:
+                continue
+            if fc is not None:
+                # only a FUTURE outage start the transfer would cross
+                # invalidates the rate estimate — an outage already in
+                # progress is baked into the (degraded) capacities behind
+                # `rate`, but it must not mask a back-to-back successor
+                if fc.next_outage_start_after(job.site, dest_sid,
+                                              t) < t_arrive:
+                    continue
+            out.append(Migrate(job.jid, dest_sid))
+            flows.append((job.site, dest_sid))
+            reserved[dest_sid] += 1
+            planned.add(job.jid)
+        return out
+
+    def decide(self, state: ClusterState) -> List[Action]:
+        t = state.t
+        fc = state.forecast
+        planned: set = set()
+        out: List[Action] = list(self._migrations(state, planned))
+
+        # ---- stage 2: Pause-for-window (running jobs on grid power)
+        if fc is not None:
+            for job in state.running():
+                if job.jid in planned:
+                    continue
+                site = state.site(job.site)
+                if site.renewable_active:
+                    continue
+                if job.remaining_compute_s < self.min_pause_compute_s:
+                    continue
+                start = fc.next_window_start_s(job.site, t)
+                if t < start <= t + self.pause_horizon_s:
+                    out.append(Pause(job.jid))
+
+        # ---- stage 3: Resume at the (forecast) window start
+        for job in state.paused():
+            site = state.site(job.site)
+            if site.renewable_active:
+                out.append(Resume(job.jid))
+                continue
+            if fc is None:
+                out.append(Resume(job.jid))
+                continue
+            w = fc.next_window(job.site, t)
+            if w is None or w.start_s > t + self.pause_horizon_s:
+                # the window we parked for moved out of reach — stop waiting
+                out.append(Resume(job.jid))
+
+        # ---- stage 4: Defer queued jobs across the dark span
+        for job in state.queued():
+            if job.held(t):
+                continue  # one Defer per (job, window)
+            site = state.site(job.site)
+            if site.renewable_active:
+                continue
+            start = (fc.next_window_start_s(job.site, t) if fc is not None
+                     else site.next_window_start_s)
+            if t < start <= t + self.max_wait_s:
+                out.append(Defer(job.jid, start))
+        return out
+
+
 @register_policy("defer-to-window", config=DeferConfig)
 @dataclass
 class DeferToWindowPolicy(Policy):
@@ -323,6 +555,11 @@ class DeferToWindowPolicy(Policy):
     def decide(self, state: ClusterState) -> List[Action]:
         out: List[Action] = []
         for job in state.queued():
+            if job.held(state.t):
+                # already holding for a window — re-issuing Defer every tick
+                # is pure action noise (one Defer per (job, window); the
+                # job resurfaces here when the hold expires)
+                continue
             site = state.site(job.site)
             if site.renewable_active:
                 continue
@@ -336,7 +573,7 @@ __all__ = [
     "Action", "ClusterState", "DeferConfig", "DeferToWindowPolicy",
     "EnergyOnlyPolicy", "FeasibilityAwarePolicy", "FeasibilityConfig",
     "GridThrottlePolicy", "JobView", "OraclePolicy", "OrchestratorContext",
-    "Policy", "PolicyConfig", "SiteView", "StaticPolicy", "ThrottleConfig",
-    "available_policies", "make_policy", "policy_config_cls",
-    "register_policy",
+    "PlanAheadConfig", "PlanAheadPolicy", "Policy", "PolicyConfig",
+    "SiteView", "StaticPolicy", "ThrottleConfig", "available_policies",
+    "make_policy", "policy_config_cls", "register_policy",
 ]

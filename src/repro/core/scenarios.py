@@ -20,6 +20,8 @@ Built-ins:
   hub-spoke-wan      40 Gbps hub at site 0, 1 Gbps direct spoke-to-spoke
   asymmetric-uplink  2.5 Gbps egress / 10 Gbps ingress NICs everywhere
   partitioned-wan    two island fabrics joined by thin 0.25 Gbps links
+  forecastable-brownouts  per-link brownout calendars readable through
+                     state.forecast — the plan-ahead policy's home turf
 
 The WAN half of a scenario is a :class:`repro.core.wan.WanProfile`
 (per-site NIC rates, per-link capacity matrix, fabric- or per-link-scoped
@@ -70,6 +72,7 @@ class FailureRegime:
 @dataclass(frozen=True)
 class ForecastNoise:
     sigma_s: float = 900.0  # 15-min 1-sigma error on remaining-window
+    horizon_s: float = 24 * 3600.0  # ClusterState.forecast lookahead
 
 
 @dataclass(frozen=True)
@@ -120,6 +123,7 @@ class Scenario:
             failure_rate_per_slot_hour=self.failures.rate_per_slot_hour,
             checkpoint_interval_s=self.failures.checkpoint_interval_s,
             forecast_sigma_s=self.forecast.sigma_s,
+            forecast_horizon_s=self.forecast.horizon_s,
         )
         kw.update(overrides)
         if "wan" not in overrides:
@@ -247,6 +251,19 @@ register_scenario(Scenario(
     wan=WanProfile(gbps=10.0,
                    nic_gbps=(2.5,) * 5,  # egress
                    nic_in_gbps=(10.0,) * 5),
+))
+
+register_scenario(Scenario(
+    name="forecastable-brownouts",
+    description="Per-link hourly brownouts (p=0.2 to 0.5 Gbps) whose "
+                "calendar is published through state.forecast, over windows "
+                "with wide geographic phase spread: a reactive policy "
+                "starts transfers that stall mid-brownout and burns grid "
+                "through dark gaps a planner would Pause or Defer across — "
+                "the scenario where plan-ahead's lookahead pays.",
+    trace=TraceProfile(mean_window_h=3.5, p_wind=0.35),
+    wan=WanProfile(gbps=10.0, hourly_degrade_prob=0.2, degraded_gbps=0.5,
+                   brownout_scope="per-link"),
 ))
 
 register_scenario(Scenario(

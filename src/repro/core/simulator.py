@@ -141,6 +141,7 @@ class SimConfig:
     t_load_s: float = fz.T_LOAD_S
     t_downtime_s: float = fz.T_DOWNTIME_S
     forecast_sigma_s: float = 900.0
+    forecast_horizon_s: float = 24 * HOUR  # ClusterState.forecast lookahead
     migration_cooldown_s: float = 900.0  # orchestrator debounce per job
     # renewable-window process (scenario-composable)
     trace: TraceProfile = field(default_factory=TraceProfile)
@@ -294,6 +295,16 @@ class ClusterSimulator:
         # advertisement, and — via scenarios — dryrun --plan / serve)
         self.wan_topology = cfg.wan_profile().build_topology(
             cfg.n_sites, cfg.days, cfg.seed)
+        # the lookahead product (window + outage forecasts) attached to
+        # every snapshot.  Built once: window noise is hash-deterministic
+        # per (seed, site), so the horizon is identical at every tick —
+        # which is what lets plan-ahead policies hold a plan across ticks.
+        from repro.core.forecast import ForecastHorizon
+
+        self.forecast_horizon = ForecastHorizon.build(
+            self.traces, wan=self.wan_topology,
+            horizon_s=cfg.forecast_horizon_s, sigma_s=sigma,
+            seed=cfg.seed + 7)
         # incremental (site, state) job index: jid-keyed dicts give
         # deterministic (insertion-ordered) iteration and O(1) moves
         self._by_state: Dict[str, Dict[int, SimJob]] = {s: {} for s in JOB_STATES}
@@ -386,11 +397,13 @@ class ClusterSimulator:
                         eligible=(t - j.last_migration_end_s
                                   >= cfg.migration_cooldown_s),
                         power_frac=j.power_frac,
+                        defer_until_s=j.defer_until_s,
                     )
                 )
         views.sort(key=lambda v: v.jid)
         return ClusterState.build(t, views, sites, wan=self.wan_topology,
-                                  transfers=transfers)
+                                  transfers=transfers,
+                                  forecast=self.forecast_horizon)
 
     def _has_live_jobs(self) -> bool:
         by = self._by_state
@@ -436,7 +449,11 @@ class ClusterSimulator:
             rate = next(float(r) for x, r in zip(mig, rates) if x.jid == j.jid)
             t_arrive = (t + j.transfer_remaining_bits / rate if rate > 0.0
                         else float("inf"))
-            if not self.traces[dest].active(min(t_arrive, horizon - 1)):
+            # Post-horizon arrivals are explicitly failed: the trace carries
+            # no windows beyond the horizon, and the old clamp to
+            # horizon - 1 classified such a transfer by whatever the last
+            # in-horizon sample happened to be.
+            if t_arrive >= horizon or not self.traces[dest].active(t_arrive):
                 self.failed_migrations += 1
         elif isinstance(action, Defer):
             if j.state != "queued":

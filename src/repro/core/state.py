@@ -14,7 +14,17 @@ the seed implementation halved rows/columns once per in-flight transfer,
 under-advertising a doubly-loaded uplink as bw/4 when the transfer loop
 actually grants bw/2. Note the advertisement is of current shares, not the
 post-admission share a new transfer would dilute to (nic/(flows+1)); the
-alpha safety margin in Algorithm 1 absorbs that optimism.
+alpha safety margin in Algorithm 1 absorbs that optimism.  Callers that
+cannot lean on alpha — admission checks in ``serve --green-route`` and
+``dryrun --plan``, and the ``plan-ahead`` policy's arrival estimates —
+use :meth:`ClusterState.post_admission_bps` instead, which includes the
+new flow in the share counts.
+
+The snapshot also carries ``state.forecast`` — a
+:class:`~repro.core.forecast.ForecastHorizon` with the per-site upcoming
+renewable windows and per-link WAN outage forecasts — built by
+:meth:`ClusterState.build` whenever the caller passes its traces (the
+simulator reuses one prebuilt horizon across ticks).
 """
 from __future__ import annotations
 
@@ -25,6 +35,7 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core import feasibility as fz
+from repro.core.forecast import DEFAULT_HORIZON_S, ForecastHorizon
 from repro.core.wan import WanTopology
 
 
@@ -40,6 +51,14 @@ class JobView:
     state: str = "running"  # queued|running|paused
     eligible: bool = True  # migration cooldown has elapsed
     power_frac: float = 1.0  # current Throttle level
+    # Defer hold: the job is not schedulable before this sim-time.  Policies
+    # MUST consult it before re-issuing Defer — a held job re-deferred every
+    # tick is pure action noise (one Defer per (job, window)).
+    defer_until_s: float = -1e18
+
+    def held(self, t: float) -> bool:
+        """Whether a Defer hold is still active at sim-time ``t``."""
+        return self.defer_until_s > t
 
 
 @dataclass(slots=True)
@@ -79,9 +98,51 @@ class ClusterState:
     # the topology the matrix was derived from (None when an explicit
     # matrix or the legacy uniform nic_bps path was used)
     wan: Optional["WanTopology"] = None
+    # the in-flight (src, dst) flow set the matrix was derived under —
+    # what post_admission_bps dilutes against
+    transfers: Tuple[Tuple[int, int], ...] = ()
+    # the uniform NIC rate when the legacy nic_bps path built the matrix
+    # (None on the wan / explicit-matrix paths)
+    nic_bps: Optional[float] = None
+    # lookahead forecast (upcoming windows + WAN outages); None when the
+    # caller had no traces to forecast from
+    forecast: Optional[ForecastHorizon] = None
 
     def site(self, sid: int) -> SiteView:
         return self.sites[sid]
+
+    def post_admission_bps(
+        self, src: int, dst: int,
+        flows: Optional[Sequence[Tuple[int, int]]] = None,
+    ) -> float:
+        """The rate a NEW ``src -> dst`` transfer would be granted, with
+        the new flow included in the share counts (``flows+1`` dilution).
+        ``bandwidth_bps`` advertises *current* grants and is systematically
+        optimistic for exactly this query; admission checks belong here.
+
+        ``flows`` overrides the snapshot's in-flight set — callers that
+        admit several transfers in one pass (the serve router, the
+        dry-run plan validator, plan-ahead's per-tick migrations) thread
+        their growing list through so each admission sees the dilution of
+        the ones before it."""
+        if flows is None:
+            flows = self.transfers
+        if self.wan is not None:
+            return self.wan.post_admission_rate(src, dst, flows, self.t)
+        # legacy uniform-NIC fallback: use the recorded NIC rate (the
+        # matrix maximum underestimates it whenever every entry is
+        # diluted by flows) and re-count with the new flow included.
+        # Capped by the pair's own advertised entry so an explicit
+        # NON-uniform matrix (tests/replay path) never advertises the
+        # fabric's fastest link for a slower pair — post-admission can
+        # only be at or below the current grant.
+        bw = np.asarray(self.bandwidth_bps)
+        nic = (self.nic_bps if self.nic_bps is not None
+               else float(bw.max()))
+        src_n, dst_n = nic_share_counts(flows)
+        return min(float(bw[src, dst]),
+                   nic / (src_n.get(src, 0) + 1),
+                   nic / (dst_n.get(dst, 0) + 1))
 
     @property
     def n_sites(self) -> int:
@@ -141,6 +202,11 @@ class ClusterState:
         nic_bps: Optional[float] = None,
         transfers: Sequence[Tuple[int, int]] = (),
         bandwidth_bps: Optional[np.ndarray] = None,
+        traces: Optional[Sequence] = None,
+        forecast: Optional[ForecastHorizon] = None,
+        forecast_sigma_s: float = 0.0,
+        forecast_seed: int = 0,
+        forecast_horizon_s: float = DEFAULT_HORIZON_S,
     ) -> "ClusterState":
         """Assemble a snapshot.
 
@@ -150,19 +216,33 @@ class ClusterState:
         legacy uniform per-site NIC rate ``nic_bps`` (same share model,
         uncapped links); or an explicit ``bandwidth_bps`` matrix (tests,
         replay).
+
+        The forecast horizon: pass a prebuilt ``forecast`` (the simulator
+        builds one per run and reuses it across ticks — window noise is
+        hash-deterministic, so rebuilding would give the identical
+        object), or the site ``traces`` and one is built here with the
+        ``forecast_*`` knobs (the dry-run planner and serve router path).
+        With neither, ``state.forecast`` is None and plan-ahead consumers
+        degrade to reactive behaviour.
         """
         sites = tuple(sites)
+        transfers = tuple(transfers)
         if bandwidth_bps is None:
             if wan is not None:
-                bandwidth_bps = wan.advertised_matrix(t, tuple(transfers))
+                bandwidth_bps = wan.advertised_matrix(t, transfers)
             elif nic_bps is not None:
                 bandwidth_bps = advertised_bandwidth(len(sites), nic_bps, transfers)
             else:
                 raise ValueError(
                     "need wan, nic_bps (with transfers) or bandwidth_bps")
+        if forecast is None and traces is not None:
+            forecast = ForecastHorizon.build(
+                traces, wan=wan, horizon_s=forecast_horizon_s,
+                sigma_s=forecast_sigma_s, seed=forecast_seed)
         return cls(t=t, jobs=tuple(jobs), sites=sites,
                    bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
-                   wan=wan)
+                   wan=wan, transfers=transfers, forecast=forecast,
+                   nic_bps=nic_bps)
 
 
 def site_views_from_traces(

@@ -21,16 +21,28 @@ router):
   * :meth:`advertised_matrix` — the policy-facing ``(n, n)`` bandwidth
     matrix under the *current* flow set.
 
-Sharing model: every flow traverses three resources (source NIC,
-destination NIC, the (src, dst) link) and is granted the minimum equal
-split ``cap(r) / flows(r)`` over them.  Each resource hands out at most its
-capacity (``flows(r)`` flows at ``≤ cap(r)/flows(r)`` each), and on a
-uniform topology (equal NICs, uncapped links) the grant reduces *exactly*
-to the seed's ``min(nic / src_flows, nic / dst_flows)``.  This is the
-conservative first round of max-min fair sharing: residual capacity that
-full water-filling would redistribute to unbottlenecked flows is left
-unclaimed, which keeps the advertised matrix and the transfer loop in
-exact agreement.
+Sharing models (``WanTopology(sharing=...)``, both used consistently by
+the transfer loop and the advertised matrix):
+
+  * ``"conservative"`` (default) — every flow traverses three resources
+    (source NIC, destination NIC, the (src, dst) link) and is granted the
+    minimum equal split ``cap(r) / flows(r)`` over them.  Each resource
+    hands out at most its capacity, and on a uniform topology (equal
+    NICs, uncapped links) the grant reduces *exactly* to the seed's
+    ``min(nic / src_flows, nic / dst_flows)``.  This is the first round
+    of max-min fair sharing: residual capacity that full water-filling
+    would redistribute to unbottlenecked flows is left unclaimed.
+  * ``"waterfill"`` — full max-min water-filling: raise every flow's rate
+    in lockstep, freeze the flows crossing each resource as it saturates,
+    redistribute the residual among the rest, repeat.  Per-flow rates
+    dominate (are >=) the conservative split and still never oversubscribe
+    any resource.  Exact-reduction caveat: waterfill coincides with the
+    conservative split whenever every flow is frozen in the first round
+    (e.g. all flows sharing one source or one destination NIC on a
+    uniform fabric); with *several* disjoint bottlenecks a flow whose
+    peers are frozen elsewhere inherits their residual, so waterfill is
+    strictly greater — that residual is exactly what the conservative
+    model leaves unclaimed.
 
 :class:`WanProfile` is the scenario-composable *spec* (plain floats and
 tuples, frozen); ``WanProfile.build_topology(n_sites, days, seed)``
@@ -72,6 +84,8 @@ class WanProfile:
                      ``inf`` entries mean NIC-limited, ``0`` means no link
       brownout_scope ``"fabric"`` (whole WAN degrades at once — legacy) or
                      ``"per-link"`` (each link draws its own calendar)
+      sharing        ``"conservative"`` (single-round split, legacy) or
+                     ``"waterfill"`` (full max-min water-filling)
     """
 
     gbps: float = 10.0
@@ -81,6 +95,7 @@ class WanProfile:
     nic_in_gbps: Optional[Tuple[float, ...]] = None
     link_gbps: Optional[Tuple[Tuple[Optional[float], ...], ...]] = None
     brownout_scope: str = "fabric"
+    sharing: str = "conservative"
 
     @property
     def is_uniform(self) -> bool:
@@ -136,7 +151,7 @@ class WanProfile:
                     f"brownout_scope must be 'fabric' or 'per-link', "
                     f"got {self.brownout_scope!r}")
         return WanTopology(nic_out, nic_in, link, mask,
-                           self.degraded_bps)
+                           self.degraded_bps, self.sharing)
 
     @property
     def degraded_bps(self) -> float:
@@ -158,11 +173,16 @@ class WanTopology:
     link_bps: np.ndarray  # (n, n); inf = NIC-limited, 0 = no link
     brownout_mask: Optional[np.ndarray] = None  # (n_hours,) or (n_hours, n, n)
     degraded_bps: float = 0.0
+    sharing: str = "conservative"  # or "waterfill" (full max-min)
 
     def __post_init__(self):
         n = len(self.nic_out_bps)
         if self.nic_in_bps.shape != (n,) or self.link_bps.shape != (n, n):
             raise ValueError("inconsistent WanTopology array shapes")
+        if self.sharing not in ("conservative", "waterfill"):
+            raise ValueError(
+                f"sharing must be 'conservative' or 'waterfill', "
+                f"got {self.sharing!r}")
 
     # -- basic facts ---------------------------------------------------------
     @property
@@ -280,16 +300,22 @@ class WanTopology:
     def shared_rates(
         self, flows: Sequence[Tuple[int, int]], t: float = 0.0
     ) -> np.ndarray:
-        """Effective bps granted to each flow (aligned with ``flows``).
+        """Effective bps granted to each flow (aligned with ``flows``),
+        under the topology's ``sharing`` model.
 
-        Each flow gets the minimum equal split over the three resources it
-        traverses: ``min(out[s]/flows(out_s), in[d]/flows(in_d),
-        link[s,d]/flows(link_sd))``.  Never oversubscribes any resource;
-        reduces exactly to ``min(nic/src_flows, nic/dst_flows)`` on uniform
-        topologies."""
+        ``"conservative"``: each flow gets the minimum equal split over the
+        three resources it traverses — ``min(out[s]/flows(out_s),
+        in[d]/flows(in_d), link[s,d]/flows(link_sd))``.  Never
+        oversubscribes any resource; reduces exactly to
+        ``min(nic/src_flows, nic/dst_flows)`` on uniform topologies.
+
+        ``"waterfill"``: full max-min (see :meth:`_waterfill_rates`) —
+        per-flow rates dominate the conservative split."""
         if not len(flows):
             return np.zeros(0)
         out, in_, link = self.resources_at(t)
+        if self.sharing == "waterfill":
+            return self._waterfill_rates(flows, out, in_, link)
         n_src: Dict[int, int] = {}
         n_dst: Dict[int, int] = {}
         n_link: Dict[Tuple[int, int], int] = {}
@@ -303,17 +329,133 @@ class WanTopology:
             for s, d in flows
         ])
 
+    @staticmethod
+    def _waterfill_table(
+        flows: Sequence[Tuple[int, int]],
+        out: np.ndarray, in_: np.ndarray, link: np.ndarray,
+    ) -> Tuple[List[float], List[List[int]], Dict[Tuple, int]]:
+        """Resource table for :meth:`_waterfill_solve`: capacities + member
+        flow indices per (src NIC, dst NIC, link) resource
+        (infinite-capacity links are omitted — they can never bind)."""
+        caps: List[float] = []
+        members: List[List[int]] = []
+        index: Dict[Tuple, int] = {}
+
+        def add(key: Tuple, cap: float, i: int) -> None:
+            k = index.get(key)
+            if k is None:
+                k = len(caps)
+                index[key] = k
+                caps.append(float(cap))
+                members.append([])
+            members[k].append(i)
+
+        for i, (s, d) in enumerate(flows):
+            add(("o", s), out[s], i)
+            add(("i", d), in_[d], i)
+            if np.isfinite(link[s, d]):
+                add(("l", s, d), link[s, d], i)
+        return caps, members, index
+
+    def _waterfill_rates(
+        self,
+        flows: Sequence[Tuple[int, int]],
+        out: np.ndarray, in_: np.ndarray, link: np.ndarray,
+    ) -> np.ndarray:
+        caps, members, _ = self._waterfill_table(flows, out, in_, link)
+        return self._waterfill_solve(len(flows), caps, members)
+
+    @staticmethod
+    def _waterfill_solve(
+        m: int, caps: List[float], members: List[List[int]],
+    ) -> np.ndarray:
+        """Max-min fair water-filling over the (src NIC, dst NIC, link)
+        resource hypergraph.
+
+        Iterate: raise every unfrozen flow's rate in lockstep by the
+        smallest per-resource headroom-per-unfrozen-flow increment,
+        freeze the flows crossing each resource that saturates, and
+        redistribute the residual among the rest until every flow is
+        frozen.  Terminates after at most ``#resources`` rounds (every
+        round saturates at least one finite resource).  Flows through a
+        zero-capacity resource freeze at 0 in the first round."""
+        rate = np.zeros(m)
+        frozen = np.zeros(m, dtype=bool)
+        alloc = np.zeros(len(caps))
+        while not frozen.all():
+            best = float("inf")
+            n_active = [0] * len(caps)
+            for k, mem in enumerate(members):
+                n_act = sum(1 for i in mem if not frozen[i])
+                n_active[k] = n_act
+                if n_act and np.isfinite(caps[k]):
+                    inc = max(0.0, caps[k] - alloc[k]) / n_act
+                    if inc < best:
+                        best = inc
+            if not np.isfinite(best):  # only inf-capacity resources left
+                break  # unreachable with finite NICs; safety net
+            rate[~frozen] += best
+            for k, mem in enumerate(members):
+                if not n_active[k]:
+                    continue
+                alloc[k] += best * n_active[k]
+                if np.isfinite(caps[k]) and alloc[k] >= caps[k] * (1 - 1e-12):
+                    for i in mem:
+                        frozen[i] = True
+        return rate
+
     def advertised_matrix(
         self, t: float = 0.0, flows: Sequence[Tuple[int, int]] = ()
     ) -> np.ndarray:
         """Policy-facing (src, dst) bandwidth matrix under the *current*
         flow set — what a transfer on that pair is being granted right now
-        (idle resources advertise full capacity).  The same share counts as
+        (idle resources advertise full capacity).  The same share model as
         :meth:`shared_rates`, so the snapshot always agrees with the
-        transfer loop."""
+        transfer loop.
+
+        Under ``sharing="waterfill"`` pairs carrying flows advertise their
+        water-filled grant (all flows on one pair are symmetric, hence
+        equal); idle pairs advertise the rate a *new* flow on that pair
+        would be granted (post-admission water-fill) — under max-min the
+        "current grant on an idle pair" is undefined, and the
+        post-admission rate is the honest, strictly-less-optimistic
+        number."""
         if not len(flows):
             return self.capacity_matrix(t)
         out, in_, link = self.resources_at(t)
+        if self.sharing == "waterfill":
+            m = len(flows)
+            caps, members, index = self._waterfill_table(flows, out, in_, link)
+            rates = self._waterfill_solve(m, caps, members)
+            adv = np.array(self.capacity_matrix(t), copy=True)
+            loaded = {}
+            for (s, d), r in zip(flows, rates):
+                loaded[(s, d)] = float(r)
+            for s in range(self.n_sites):
+                for d in range(self.n_sites):
+                    if s == d:
+                        continue
+                    if (s, d) in loaded:
+                        adv[s, d] = loaded[(s, d)]
+                    elif adv[s, d] > 0.0:
+                        # post-admission solve for the idle pair: reuse the
+                        # base resource table, appending only the candidate
+                        # flow's three resources (no per-pair rebuild)
+                        caps2 = list(caps)
+                        members2 = [list(mem) for mem in members]
+                        for key, cap in ((("o", s), out[s]), (("i", d), in_[d]),
+                                         (("l", s, d), link[s, d])):
+                            if key[0] == "l" and not np.isfinite(cap):
+                                continue
+                            k = index.get(key)
+                            if k is None:
+                                caps2.append(float(cap))
+                                members2.append([m])
+                            else:
+                                members2[k].append(m)
+                        adv[s, d] = self._waterfill_solve(
+                            m + 1, caps2, members2)[-1]
+            return adv
         n = self.n_sites
         src_n = np.ones(n)
         dst_n = np.ones(n)
@@ -331,6 +473,18 @@ class WanTopology:
             np.minimum((out / src_n)[:, None], (in_ / dst_n)[None, :]),
             link / link_n,
         )
+
+    def post_admission_rate(
+        self, src: int, dst: int,
+        flows: Sequence[Tuple[int, int]] = (), t: float = 0.0,
+    ) -> float:
+        """The rate a NEW ``src -> dst`` transfer would actually be granted
+        given the in-flight ``flows`` — the new flow itself dilutes every
+        resource it traverses (the ``(flows+1)`` share the advertised
+        matrix deliberately omits).  This is the number admission checks
+        should use: the advertised matrix is the *current* grant and is
+        systematically optimistic for a would-be transfer."""
+        return float(self.shared_rates(list(flows) + [(src, dst)], t)[-1])
 
 
 # ---------------------------------------------------------------------------

@@ -300,13 +300,22 @@ def plan_orchestration(
     policy: str = "feasibility-aware",
     at_hour: float = 36.0,
     fill: float = 0.5,
+    transfers: Tuple[Tuple[int, int], ...] = (),
 ):
     """Orchestration dry-run: scenario state at sim-time ``at_hour`` ->
     ClusterState (via the shared constructor) -> the policy's typed actions.
 
     Placement is synthetic but scenario-faithful: the earliest-arrived jobs
-    run at their home sites, up to ``fill`` of each site's slots. Returns
+    run at their home sites, up to ``fill`` of each site's slots;
+    ``transfers`` injects synthetic in-flight ``(src, dst)`` migrations so
+    the preview can be taken under WAN load.  Every ``Migrate`` the policy
+    proposes is re-checked at the **post-admission** ``(flows+1)`` rate —
+    the advertised matrix is the current grant, systematically optimistic
+    for a transfer the plan itself would add — and moves that are
+    infeasible at the diluted rate are dropped from the plan.  Returns
     (state, actions)."""
+    from repro.core import feasibility as fz
+    from repro.core.actions import Migrate
     from repro.core.orchestrator import make_policy
     from repro.core.scenarios import get_scenario
     from repro.core.simulator import generate_jobs
@@ -327,9 +336,24 @@ def plan_orchestration(
     sites = site_views_from_traces(traces, t, slots=cfg.slots_per_site,
                                    busy=per_site)
     # the same WanTopology the simulator materializes for this scenario
-    # (per-link caps, asymmetric NICs, brownout calendar at sim-time t)
-    state = ClusterState.build(t, views, sites, wan=scn.build_wan())
-    actions = make_policy(policy).decide(state)
+    # (per-link caps, asymmetric NICs, brownout calendar at sim-time t),
+    # plus the forecast horizon (σ=0: the planner reads the calendar as-is)
+    state = ClusterState.build(t, views, sites, wan=scn.build_wan(),
+                               transfers=transfers, traces=traces)
+    jobs_by_id = {j.jid: j for j in state.jobs}
+    flows = list(transfers)
+    actions = []
+    for a in make_policy(policy).decide(state):
+        if isinstance(a, Migrate):
+            j = jobs_by_id[a.jid]
+            rate = state.post_admission_bps(j.site, a.dest, flows)
+            v = fz.evaluate(j.ckpt_bytes, rate,
+                            state.site(a.dest).window_remaining_s,
+                            t_load_s=j.t_load_s)
+            if not bool(v.feasible):
+                continue  # optimistic under load: drop from the plan
+            flows.append((j.site, a.dest))
+        actions.append(a)
     return state, actions
 
 
@@ -350,10 +374,19 @@ def main():
     ap.add_argument("--scenario", default="paper-table6")
     ap.add_argument("--policy", default="feasibility-aware")
     ap.add_argument("--at-hour", type=float, default=36.0)
+    ap.add_argument("--transfers", default="",
+                    help="synthetic in-flight migrations for --plan as "
+                         "src:dst pairs, e.g. '0:2,0:3' — proposed moves "
+                         "are admission-checked at the diluted "
+                         "post-admission rate")
     args = ap.parse_args()
 
     if args.plan:
-        state, actions = plan_orchestration(args.scenario, args.policy, args.at_hour)
+        transfers = tuple(
+            (int(s), int(d)) for s, d in
+            (pair.split(":") for pair in args.transfers.split(",") if pair))
+        state, actions = plan_orchestration(args.scenario, args.policy,
+                                            args.at_hour, transfers=transfers)
         print(f"[plan] scenario={args.scenario} policy={args.policy} "
               f"t={args.at_hour:.1f}h jobs={len(state.jobs)}")
         for s in state.sites:

@@ -25,9 +25,12 @@ from repro.models.model import build_model
 
 
 def build_serving_state(scenario: str = "paper-table6", at_hour: float = 12.0,
-                        busy: Tuple[int, ...] = ()):
+                        busy: Tuple[int, ...] = (),
+                        transfers: Tuple[Tuple[int, int], ...] = ()):
     """Snapshot of the serving fleet at sim-time ``at_hour`` for a
-    registered scenario, through the shared ClusterState constructor."""
+    registered scenario, through the shared ClusterState constructor.
+    ``transfers`` injects in-flight ``(src, dst)`` WAN flows so the router
+    sees a loaded fabric."""
     from repro.core.scenarios import get_scenario
     from repro.core.state import ClusterState, site_views_from_traces
 
@@ -39,27 +42,53 @@ def build_serving_state(scenario: str = "paper-table6", at_hour: float = 12.0,
     sites = site_views_from_traces(traces, t, slots=cfg.slots_per_site,
                                    busy=busy_full)
     # the scenario's materialized WanTopology — identical to what the
-    # simulator's transfer loop and the dry-run planner consume
-    return ClusterState.build(t, [], sites, wan=scn.build_wan())
+    # simulator's transfer loop and the dry-run planner consume — plus the
+    # forecast horizon (windows + outage calendar) for lookahead routing
+    return ClusterState.build(t, [], sites, wan=scn.build_wan(),
+                              transfers=transfers, traces=traces)
 
 
-def green_route(state, n_requests: int) -> List[int]:
+def green_route(state, n_requests: int, *, origin: int = None,
+                min_gbps: float = 0.0) -> List[int]:
     """Assign each request to the greenest feasible site: renewable sites
     with free slots first (longest remaining window wins), then spill by
-    least relative load once renewable capacity is exhausted."""
+    least relative load once renewable capacity is exhausted.
+
+    With ``origin`` set, each request must ship its batch/KV state from
+    ``origin`` to the chosen site, and a remote site is only admissible if
+    the **post-admission** ``(flows+1)`` rate on (origin, site) — counting
+    both the snapshot's in-flight transfers and the requests this call
+    already routed — stays at or above ``min_gbps``.  The advertised
+    matrix is the pre-admission grant and is systematically optimistic
+    for exactly this check: a saturated uplink that still advertises its
+    current share flips the verdict once the request's own dilution is
+    counted."""
     load = {s.sid: s.busy for s in state.sites}
+    flows = list(state.transfers)
+
+    def admissible(s) -> bool:
+        if origin is None or s.sid == origin or min_gbps <= 0.0:
+            return True
+        return state.post_admission_bps(origin, s.sid, flows) >= min_gbps * 1e9
+
     out: List[int] = []
     for _ in range(n_requests):
         free_green = [s for s in state.sites
-                      if s.renewable_active and load[s.sid] < s.slots]
+                      if s.renewable_active and load[s.sid] < s.slots
+                      and admissible(s)]
         if free_green:
             best = max(free_green,
                        key=lambda s: (s.window_remaining_s, -load[s.sid], -s.sid))
         else:
-            best = min(state.sites,
+            # non-empty: the origin site (or, with no origin, every site)
+            # is always admissible
+            spill = [s for s in state.sites if admissible(s)]
+            best = min(spill,
                        key=lambda s: (load[s.sid] / max(s.slots, 1),
                                       not s.renewable_active, s.sid))
         load[best.sid] += 1
+        if origin is not None and best.sid != origin:
+            flows.append((origin, best.sid))
         out.append(best.sid)
     return out
 
@@ -92,11 +121,16 @@ def main(argv=None):
                          "sites and exit")
     ap.add_argument("--scenario", default="paper-table6")
     ap.add_argument("--at-hour", type=float, default=12.0)
+    ap.add_argument("--origin", type=int, default=None,
+                    help="site requests originate from; remote routing then "
+                         "requires post-admission bandwidth >= --min-gbps")
+    ap.add_argument("--min-gbps", type=float, default=0.0)
     args = ap.parse_args(argv)
 
     if args.green_route > 0:
         state = build_serving_state(args.scenario, args.at_hour)
-        routes = green_route(state, args.green_route)
+        routes = green_route(state, args.green_route, origin=args.origin,
+                             min_gbps=args.min_gbps)
         counts = {s.sid: routes.count(s.sid) for s in state.sites}
         print(f"[serve] green routing {args.green_route} requests "
               f"({args.scenario} @ t={args.at_hour:.1f}h):")

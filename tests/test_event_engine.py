@@ -47,6 +47,35 @@ def test_event_engine_matches_fixed_dt(scenario, policy):
     assert event.ticks < fixed.ticks / 3
 
 
+@pytest.mark.parametrize("scenario,policy", [
+    ("paper-table6", "grid-throttle"),
+    ("paper-table6", "defer-to-window"),
+    ("forecastable-brownouts", "plan-ahead"),
+])
+def test_event_engine_parity_for_action_policies(scenario, policy):
+    """Engine parity beyond migrate-style policies: Throttle, Defer and the
+    plan-ahead Pause/Resume sequences must integrate identically — in
+    particular the paused_policy_s / queue_s accounting the fixed-dt loop
+    accrues per tick and the event engine integrates per span."""
+    fixed, event = run_both(scenario, policy, days=4, n_jobs=120)
+    assert event.completed == fixed.completed == 120
+    assert event.grid_kwh == pytest.approx(fixed.grid_kwh, rel=0.05)
+    assert event.renewable_kwh == pytest.approx(fixed.renewable_kwh, rel=0.05)
+    # per-job state accounting (policy-initiated pause + queue time)
+    paused_f = sum(j.paused_policy_s for j in fixed.jobs)
+    paused_e = sum(j.paused_policy_s for j in event.jobs)
+    queue_f = sum(j.queue_s for j in fixed.jobs)
+    queue_e = sum(j.queue_s for j in event.jobs)
+    assert paused_e == pytest.approx(paused_f, rel=0.15, abs=600.0)
+    assert queue_e == pytest.approx(queue_f, rel=0.15, abs=600.0)
+    if policy == "grid-throttle":
+        # Throttle slows every grid-powered span in both engines alike
+        assert all(j.power_frac in (0.5, 1.0) for j in event.jobs)
+    if policy == "plan-ahead":
+        assert paused_e > 0  # the Pause-for-window plans actually ran
+        assert abs(event.failed_migrations - fixed.failed_migrations) <= 3
+
+
 def test_event_engine_deterministic_given_seed():
     r1 = ClusterSimulator.from_scenario("paper-table6", "feasibility-aware").run()
     r2 = ClusterSimulator.from_scenario("paper-table6", "feasibility-aware").run()

@@ -1,0 +1,451 @@
+"""Forecast-and-planning subsystem: ForecastHorizon construction (noise
+determinism, outage compression, horizon gating), ClusterState.forecast
+wiring across all three consumers, the plan-ahead policy's stage logic,
+the forecastable-brownouts acceptance ordering, and the post-admission
+routing checks in dryrun --plan / serve --green-route."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import ClusterSimulator, make_policy, run_policy_comparison
+from repro.core.actions import Defer, Migrate, Pause, Resume
+from repro.core.forecast import ForecastHorizon, OutageForecast, WindowForecast
+from repro.core.orchestrator import PlanAheadPolicy
+from repro.core.scenarios import get_scenario
+from repro.core.state import ClusterState, JobView, SiteView
+from repro.core.traces import SiteTrace, Window, generate_trace
+from repro.core.wan import WanProfile, WanTopology
+
+GB = 1e9
+HOUR = 3600.0
+DAY = 24 * HOUR
+
+
+# ---------------------------------------------------------------------------
+# ForecastHorizon construction
+# ---------------------------------------------------------------------------
+
+
+def test_build_sigma_zero_reproduces_trace_windows():
+    traces = generate_trace(3, 2, seed=0)
+    fc = ForecastHorizon.build(traces, sigma_s=0.0)
+    for s, tr in enumerate(traces):
+        got = [(w.start_s, w.end_s) for w in fc.site_windows[s]]
+        want = [(w.start_s, w.end_s) for w in tr.windows]
+        assert got == want
+
+
+def test_window_noise_is_hash_deterministic():
+    traces = generate_trace(3, 3, seed=1)
+    a = ForecastHorizon.build(traces, sigma_s=900.0, seed=5)
+    b = ForecastHorizon.build(traces, sigma_s=900.0, seed=5)
+    c = ForecastHorizon.build(traces, sigma_s=900.0, seed=6)
+    assert a.site_windows == b.site_windows  # same seed: identical horizon
+    assert a.site_windows != c.site_windows  # different seed: jitter moves
+    # the jitter is bounded in distribution, not a constant offset
+    flat_a = [w.start_s for wins in a.site_windows for w in wins]
+    flat_t = [w.start_s for tr in traces for w in tr.windows]
+    assert len(flat_a) <= len(flat_t)
+    assert any(abs(x - y) > 1.0 for x, y in zip(flat_a, flat_t))
+
+
+def test_horizon_gates_lookahead():
+    tr = SiteTrace(0, [Window(2 * HOUR, 4 * HOUR), Window(30 * HOUR, 33 * HOUR)])
+    fc = ForecastHorizon.build([tr], horizon_s=DAY)
+    assert fc.next_window_start_s(0, 0.0) == 2 * HOUR
+    # at t=3 h the 30 h window is beyond the 24 h lookahead → invisible
+    assert fc.next_window_start_s(0, 3 * HOUR) == float("inf")
+    # at t=6.5 h it slides into view (6.5 + 24 > 30)
+    assert fc.next_window_start_s(0, 6.5 * HOUR) == 30 * HOUR
+    assert fc.next_window_start_s(0, 1.0) == 2 * HOUR
+    assert fc.next_window(0, 3 * HOUR).start_s == 2 * HOUR  # covering window
+    assert fc.next_window_start_s(0, 34 * HOUR) == float("inf")
+    # a 6-hour horizon hides the 30 h window even from t=25 h
+    short = ForecastHorizon.build([tr], horizon_s=6 * HOUR)
+    assert short.next_window_start_s(0, 4.5 * HOUR) == float("inf")
+    assert short.next_window_start_s(0, 25 * HOUR) == 30 * HOUR
+
+
+def test_build_merges_windows_that_overlap_after_jitter():
+    """The query surface assumes disjoint windows; overlapping ones (e.g.
+    containment produced by edge jitter) must be merged or bisect coverage
+    and the green_seconds overlap sum go wrong."""
+    tr = SiteTrace(0, [Window(0.0, 10 * HOUR), Window(2 * HOUR, 3 * HOUR)])
+    fc = ForecastHorizon.build([tr])
+    assert len(fc.site_windows[0]) == 1
+    assert fc.active(0, 5 * HOUR)  # mid-span of the containing window
+    assert fc.next_window(0, 5 * HOUR).end_s == 10 * HOUR
+    assert fc.green_seconds(0, 0.0, 10 * HOUR) == pytest.approx(10 * HOUR)
+
+
+def test_green_seconds_and_active():
+    tr = SiteTrace(0, [Window(HOUR, 2 * HOUR)])
+    fc = ForecastHorizon.build([tr])
+    assert fc.active(0, 1.5 * HOUR)
+    assert not fc.active(0, 0.5 * HOUR)
+    assert fc.green_seconds(0, 0.0, 3 * HOUR) == pytest.approx(HOUR)
+    assert fc.green_seconds(0, 1.5 * HOUR, 1.75 * HOUR) == pytest.approx(900.0)
+
+
+def test_fabric_outages_compressed_to_spans():
+    prof = WanProfile(gbps=10.0, hourly_degrade_prob=0.5, degraded_gbps=0.5)
+    topo = prof.build_topology(3, days=2, seed=3)
+    fc = ForecastHorizon.build(generate_trace(3, 2, seed=3), wan=topo)
+    assert fc.outages  # the p=0.5 calendar certainly browns out somewhere
+    mask = topo.brownout_mask
+    for o in fc.outages:
+        assert o.fabric_wide
+        assert o.capacity_bps == pytest.approx(0.5e9)
+        h0, h1 = int(o.start_s // HOUR), int(o.end_s // HOUR)
+        assert mask[h0:h1].all()  # span covers only browned hours
+        if h0 > 0:
+            assert not mask[h0 - 1]  # and is maximal
+        if h1 < len(mask):
+            assert not mask[h1]
+
+
+def test_ongoing_outage_does_not_mask_back_to_back_successor():
+    """next_outage returns the span still open at t, but arrival checks ask
+    for the first START strictly after t — an ongoing brownout must not
+    hide the next one from the veto."""
+    a = OutageForecast(0.0, HOUR, 0, 1, 0.5e9)  # ongoing at t=600
+    b = OutageForecast(2 * HOUR, 3 * HOUR, 0, 1, 0.5e9)
+    fc = ForecastHorizon(horizon_s=DAY, sigma_s=0.0,
+                         site_windows=((), ()), outages=(a, b))
+    t = 600.0
+    assert fc.next_outage(0, 1, t) is a  # the open span
+    assert fc.next_outage_start_after(0, 1, t) == 2 * HOUR  # the successor
+    assert fc.next_outage_start_after(0, 1, 4 * HOUR) == float("inf")
+    # also vetoes a plain future outage identically
+    assert fc.next_outage_start_after(0, 1, HOUR + 1) == 2 * HOUR
+
+
+def test_per_link_outages_and_uplink_query():
+    prof = WanProfile(gbps=10.0, hourly_degrade_prob=0.3, degraded_gbps=0.25,
+                      brownout_scope="per-link")
+    topo = prof.build_topology(4, days=2, seed=0)
+    fc = ForecastHorizon.build(generate_trace(4, 2, seed=0), wan=topo)
+    assert all(not o.fabric_wide for o in fc.outages)
+    o = fc.outages[0]
+    # the first outage is visible on its link, absent on others
+    assert fc.next_outage(o.src, o.dst, o.start_s - 1.0).start_s == o.start_s
+    assert fc.capacity_floor_bps(o.src, o.dst, o.start_s, o.end_s) == \
+        pytest.approx(o.capacity_bps)
+    assert fc.capacity_floor_bps(o.src, o.dst, o.end_s + 1,
+                                 o.end_s + 2) >= o.capacity_bps
+    # uplink view: the earliest outage out of o.src is at most o.start_s
+    assert fc.next_uplink_outage_start_s(o.src, 0.0) <= o.start_s
+
+
+# ---------------------------------------------------------------------------
+# ClusterState wiring: one forecast for simulator / dryrun / serve
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_snapshot_carries_prebuilt_horizon():
+    sim = ClusterSimulator.from_scenario(
+        "forecastable-brownouts", "static", overrides=dict(days=2, n_jobs=8))
+    st = sim.snapshot(0.0)
+    assert st.forecast is sim.forecast_horizon
+    assert st.forecast.sigma_s == sim.cfg.forecast_sigma_s
+    assert st.forecast.outages  # per-link calendar surfaced
+    assert st.transfers == ()
+    # oracle harness gets the σ=0 horizon
+    osim = ClusterSimulator.from_scenario(
+        "forecastable-brownouts", "oracle", overrides=dict(days=2, n_jobs=8))
+    assert osim.forecast_horizon.sigma_s == 0.0
+    tw = get_scenario("forecastable-brownouts").build_traces()[0].windows[0]
+    fw = osim.forecast_horizon.site_windows[0][0]
+    assert (fw.start_s, fw.end_s) == (tw.start_s, tw.end_s)
+
+
+def test_dryrun_and_serve_states_carry_forecast():
+    from repro.launch.dryrun import plan_orchestration
+    from repro.launch.serve import build_serving_state
+
+    state, _ = plan_orchestration("forecastable-brownouts", "plan-ahead",
+                                  at_hour=12.0)
+    assert isinstance(state.forecast, ForecastHorizon)
+    assert state.forecast.outages
+    sstate = build_serving_state("forecastable-brownouts", at_hour=12.0)
+    assert isinstance(sstate.forecast, ForecastHorizon)
+    # both consume the same (σ=0) horizon as the scenario's trace windows
+    assert sstate.forecast.site_windows == state.forecast.site_windows
+
+
+def test_build_without_traces_has_no_forecast():
+    sites = [SiteView(0, 4, 0, 0, True, HOUR)]
+    st = ClusterState.build(0.0, [], sites, nic_bps=10 * GB)
+    assert st.forecast is None
+
+
+# ---------------------------------------------------------------------------
+# plan-ahead policy stages
+# ---------------------------------------------------------------------------
+
+
+def fc_of(windows_per_site, outages=(), horizon_s=DAY):
+    return ForecastHorizon(
+        horizon_s=horizon_s, sigma_s=0.0,
+        site_windows=tuple(tuple(WindowForecast(a, b) for a, b in wins)
+                           for wins in windows_per_site),
+        outages=tuple(outages))
+
+
+def state_of(jobs, sites, fc, t=0.0, nic_gbps=10.0, transfers=()):
+    wan = WanTopology.uniform(len(sites), nic_gbps * GB)
+    return ClusterState.build(t, jobs, sites, wan=wan, transfers=transfers,
+                              forecast=fc)
+
+
+def green(sid, window_h=2.5, busy=0, queued=0, slots=4):
+    return SiteView(sid, slots, busy, queued, True, window_h * HOUR)
+
+
+def dark(sid, busy=0, queued=0, slots=4, next_start=float("inf")):
+    return SiteView(sid, slots, busy, queued, False, 0.0,
+                    next_window_start_s=next_start)
+
+
+def test_plan_ahead_pauses_for_forecast_window():
+    fc = fc_of([[(HOUR, 4 * HOUR)], []])
+    jobs = [JobView(0, 0, 2 * GB, 10 * HOUR)]
+    actions = PlanAheadPolicy().decide(state_of(jobs, [dark(0), dark(1)], fc))
+    assert Pause(0) in actions
+
+
+def test_plan_ahead_does_not_pause_without_upcoming_window():
+    fc = fc_of([[(30 * HOUR, 33 * HOUR)], []])  # beyond pause_horizon_s
+    jobs = [JobView(0, 0, 2 * GB, 10 * HOUR)]
+    actions = PlanAheadPolicy().decide(state_of(jobs, [dark(0), dark(1)], fc))
+    assert Pause(0) not in actions
+
+
+def test_plan_ahead_resumes_on_green_or_evaporated_window():
+    fc = fc_of([[], []])
+    jobs = [JobView(0, 0, 2 * GB, 10 * HOUR, state="paused"),
+            JobView(1, 1, 2 * GB, 10 * HOUR, state="paused")]
+    actions = PlanAheadPolicy().decide(
+        state_of(jobs, [green(0), dark(1)], fc))
+    assert Resume(0) in actions  # site went green
+    assert Resume(1) in actions  # window evaporated from the forecast
+    # still waiting: window pending inside the pause horizon
+    fc2 = fc_of([[], [(2 * HOUR, 5 * HOUR)]])
+    actions2 = PlanAheadPolicy().decide(
+        state_of(jobs[1:], [green(0), dark(1)], fc2))
+    assert actions2 == []
+
+
+def test_plan_ahead_defers_queued_once_per_window():
+    fc = fc_of([[(2 * HOUR, 5 * HOUR)], []])
+    jobs = [JobView(0, 0, 2 * GB, 10 * HOUR, state="queued")]
+    st = state_of(jobs, [dark(0), dark(1)], fc)
+    actions = PlanAheadPolicy().decide(st)
+    assert Defer(0, 2 * HOUR) in actions
+    # already held → not re-issued
+    held = [JobView(0, 0, 2 * GB, 10 * HOUR, state="queued",
+                    defer_until_s=2 * HOUR)]
+    assert PlanAheadPolicy().decide(
+        state_of(held, [dark(0), dark(1)], fc)) == []
+
+
+def test_plan_ahead_hardens_bandwidth_against_forecast_outage():
+    """A transfer that would cross a forecast outage on its link is planned
+    at the outage's degraded capacity — here that makes it class C."""
+    jobs = [JobView(0, 0, 30 * GB, 10 * HOUR)]  # 24 s at 10 Gbps
+    sites = [dark(0), green(1, window_h=9.0)]
+    clean = fc_of([[], [(0.0, 9 * HOUR)]])
+    assert PlanAheadPolicy().decide(
+        state_of(jobs, sites, clean)) == [Migrate(0, 1)]
+    outage = OutageForecast(10.0, 2 * HOUR, 0, 1, 0.01 * GB)
+    hardened = fc_of([[], [(0.0, 9 * HOUR)]], outages=[outage])
+    actions = PlanAheadPolicy().decide(state_of(jobs, sites, hardened))
+    assert Migrate(0, 1) not in actions
+
+
+def test_plan_ahead_migrates_through_ongoing_outage_at_degraded_rate():
+    """An outage already in progress is baked into the (degraded) rate the
+    arrival check uses — it must NOT veto a transfer that is feasible at
+    that degraded capacity (only a FUTURE outage start invalidates the
+    estimate)."""
+    # ongoing fabric-wide brownout to 2.5 Gbps: a 2 GB checkpoint still
+    # drains in ~6.4 s, far inside the 8 h destination window
+    ongoing = OutageForecast(0.0, 2 * HOUR, -1, -1, 2.5 * GB)
+    fc = fc_of([[], [(0.0, 8 * HOUR)]], outages=[ongoing])
+    jobs = [JobView(0, 0, 2 * GB, 10 * HOUR)]
+    sites = [dark(0), green(1, window_h=8.0)]
+    wan = WanTopology.uniform(2, 2.5 * GB)  # the browned-out capacities
+    st = ClusterState.build(0.0, jobs, sites, wan=wan, forecast=fc)
+    assert PlanAheadPolicy().decide(st) == [Migrate(0, 1)]
+    # the same transfer crossing a FUTURE outage start is still refused
+    # (at 10 Gbps the 2 GB transfer takes 1.6 s; the outage begins mid-way)
+    future = OutageForecast(0.5, 2 * HOUR, -1, -1, 2.5 * GB)
+    fc2 = fc_of([[], [(0.0, 8 * HOUR)]], outages=[future])
+    st2 = ClusterState.build(0.0, jobs, sites,
+                             wan=WanTopology.uniform(2, 10 * GB), forecast=fc2)
+    assert Migrate(0, 1) not in PlanAheadPolicy().decide(st2)
+
+
+def test_plan_ahead_arrival_check_respects_window_end():
+    """Feasible by Algorithm 1 (alpha-window) but arriving too close to the
+    forecast window end at the post-admission rate → not migrated."""
+    jobs = [JobView(0, 0, 30 * GB, 10 * HOUR)]
+    sites = [dark(0), green(1, window_h=9.0)]
+    fc = fc_of([[], [(0.0, 9 * HOUR)]])
+    pol = PlanAheadPolicy(arrival_margin_s=9.1 * HOUR)  # absurd margin
+    assert all(not isinstance(a, Migrate) for a in pol.decide(
+        state_of(jobs, sites, fc)))
+
+
+def test_plan_ahead_preemptive_evacuation_before_uplink_outage():
+    """A green job that outlives its window migrates early ONLY when the
+    forecast says its uplink browns out before the window ends."""
+    jobs = [JobView(0, 0, 20 * GB, 10 * HOUR)]  # outlives the 2 h window
+    sites = [green(0, window_h=2.0), green(1, window_h=9.0)]
+    calm = fc_of([[(0.0, 2 * HOUR)], [(0.0, 9 * HOUR)]])
+    assert PlanAheadPolicy().decide(state_of(jobs, sites, calm)) == []
+    outage = OutageForecast(HOUR, 5 * HOUR, 0, 1, 0.01 * GB)
+    storm = fc_of([[(0.0, 2 * HOUR)], [(0.0, 9 * HOUR)]], outages=[outage])
+    assert PlanAheadPolicy().decide(
+        state_of(jobs, sites, storm)) == [Migrate(0, 1)]
+
+
+def test_plan_ahead_without_forecast_degrades_gracefully():
+    jobs = [JobView(0, 0, 2 * GB, 10 * HOUR),
+            JobView(1, 0, 2 * GB, 10 * HOUR, state="paused")]
+    st = state_of([jobs[0]], [dark(0), green(1)], None)
+    actions = PlanAheadPolicy().decide(st)
+    assert Migrate(0, 1) in actions  # reactive Algorithm 1 still works
+    st2 = state_of([jobs[1]], [dark(0), green(1)], None)
+    assert Resume(1) in PlanAheadPolicy().decide(st2)  # never strands
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: forecastable-brownouts ordering
+# ---------------------------------------------------------------------------
+
+
+def test_plan_ahead_beats_reactive_policies_on_forecastable_brownouts():
+    """ISSUE 3 acceptance: plan-ahead beats defer-to-window AND
+    feasibility-aware on grid kWh with no increase in failed migrations."""
+    res = run_policy_comparison(
+        scenario="forecastable-brownouts",
+        overrides=dict(days=4, n_jobs=120),
+        policies=("defer-to-window", "feasibility-aware", "plan-ahead"))
+    plan = res["plan-ahead"]
+    feas = res["feasibility-aware"]
+    defer = res["defer-to-window"]
+    assert plan.completed == feas.completed == defer.completed == 120
+    assert plan.grid_kwh < feas.grid_kwh
+    assert plan.grid_kwh < defer.grid_kwh
+    assert plan.failed_migrations <= min(feas.failed_migrations,
+                                         defer.failed_migrations)
+    assert plan.rejected_actions == 0
+    # the lookahead verbs actually fired
+    assert sum(j.paused_policy_s for j in plan.jobs) > 0
+
+
+# ---------------------------------------------------------------------------
+# Post-admission routing: dryrun --plan and serve --green-route
+# ---------------------------------------------------------------------------
+
+
+def test_plan_drops_migrations_infeasible_at_post_admission_rate():
+    """A class-B move that is feasible at the advertised (current-grant)
+    rate becomes class C once its own (flows+1) dilution is counted: the
+    plan must drop it."""
+    from repro.core.scenarios import Scenario, register_scenario
+    from repro.core import scenarios as scn_mod
+    from repro.core.scenarios import JobMix
+    from repro.launch.dryrun import plan_orchestration
+
+    scn = Scenario(name="tmp-admission", description="x",
+                   wan=WanProfile(gbps=1.0),
+                   jobs=JobMix(frac_a=0.0, frac_b=1.0, size_b_gb=(20.0, 30.0)))
+    register_scenario(scn)
+    try:
+        hour = next(
+            h for h in range(6, 72, 2)
+            if any(isinstance(a, Migrate) for a in plan_orchestration(
+                "tmp-admission", "feasibility-aware", at_hour=h)[1]))
+        state, actions = plan_orchestration("tmp-admission",
+                                            "feasibility-aware", at_hour=hour)
+        mig = next(a for a in actions if isinstance(a, Migrate))
+        src = next(j.site for j in state.jobs if j.jid == mig.jid)
+        # one in-flight transfer on the same uplink: post-admission rate
+        # halves to 0.5 Gbps → 20-30 GB takes 320-480 s → class C
+        _, loaded = plan_orchestration("tmp-admission", "feasibility-aware",
+                                       at_hour=hour,
+                                       transfers=((src, mig.dest),))
+        assert mig not in loaded
+    finally:
+        scn_mod._REGISTRY.pop("tmp-admission", None)
+
+
+def test_green_route_admission_flips_on_saturated_uplink():
+    """asymmetric-uplink: 2.5 Gbps egress. With a 2 Gbps admission floor the
+    first remote request fits (2.5/1) but the second would dilute the
+    origin NIC to 1.25 Gbps — the verdict flips and it routes elsewhere."""
+    from repro.launch.serve import build_serving_state, green_route
+
+    state = build_serving_state("asymmetric-uplink", at_hour=12.0)
+    unchecked = green_route(state, 3)
+    checked = green_route(state, 3, origin=0, min_gbps=2.0)
+    assert len(checked) == 3
+    remote = [s for s in checked if s != 0]
+    # at most one remote route fits under the 2 Gbps floor
+    assert len(remote) <= 1
+    assert unchecked != checked  # the admission check changed the verdict
+
+
+def test_green_route_counts_flows_it_already_routed_without_wan():
+    """On the legacy nic_bps path (state.wan is None) the admission floor
+    must still see the flows this very call created: at nic=10 Gbps and a
+    4 Gbps floor only two remote requests fit (10/2 = 5 ≥ 4 but
+    10/3 < 4), no matter how many green sites beckon."""
+    from repro.launch.serve import green_route
+
+    sites = [dark(0)] + [green(s, window_h=3.0) for s in range(1, 5)]
+    st = ClusterState.build(0.0, [], sites, nic_bps=10 * GB)
+    routes = green_route(st, 4, origin=0, min_gbps=4.0)
+    assert sum(1 for s in routes if s != 0) == 2
+    assert routes.count(0) == 2  # the rest stays at the origin
+
+
+def test_post_admission_bps_dilutes_by_one_flow():
+    wan = WanTopology.uniform(3, 10 * GB)
+    st = ClusterState.build(0.0, [], [green(0), green(1), green(2)],
+                            wan=wan, transfers=((0, 1),))
+    # advertised: current grant = full NIC for the single flow
+    assert st.bandwidth_bps[0, 1] == pytest.approx(10 * GB)
+    # post-admission: the new flow shares the src NIC with the existing one
+    assert st.post_admission_bps(0, 2) == pytest.approx(5 * GB)
+    assert st.post_admission_bps(2, 1) == pytest.approx(5 * GB)
+    assert st.post_admission_bps(2, 0) == pytest.approx(10 * GB)
+
+
+def test_post_admission_bps_legacy_path_keeps_true_nic_rate():
+    """wan=None fallback: when every matrix entry is diluted by flows,
+    bandwidth_bps.max() underestimates the NIC — the snapshot records the
+    real nic_bps so the (flows+1) count divides the true capacity."""
+    sites = [green(0), green(1)]
+    st = ClusterState.build(0.0, [], sites, nic_bps=10 * GB,
+                            transfers=((0, 1), (0, 1), (1, 0), (1, 0)))
+    # both rows fully diluted: the matrix maximum is 5 Gbps, not 10
+    assert float(np.asarray(st.bandwidth_bps).max()) == pytest.approx(5 * GB)
+    # a third 0->1 flow gets nic/3 of the TRUE 10 Gbps NIC
+    assert st.post_admission_bps(0, 1) == pytest.approx(10 * GB / 3)
+
+
+def test_post_admission_bps_explicit_matrix_capped_by_pair_entry():
+    """wan=None with an explicit NON-uniform matrix (tests/replay path):
+    the fallback must never advertise the fabric's fastest link for a
+    slower pair."""
+    bw = np.array([[10.0, 10.0, 1.0],
+                   [10.0, 10.0, 1.0],
+                   [1.0, 1.0, 10.0]]) * GB
+    st = ClusterState.build(0.0, [], [green(0), green(1), green(2)],
+                            bandwidth_bps=bw)
+    assert st.post_admission_bps(0, 2) == pytest.approx(1 * GB)  # pair cap
+    assert st.post_admission_bps(0, 1) == pytest.approx(10 * GB)

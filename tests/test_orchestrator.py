@@ -120,8 +120,30 @@ def test_oracle_is_feasibility_aware():
 def test_registry_lists_all_builtins():
     names = available_policies()
     for want in ("static", "energy-only", "feasibility-aware", "oracle",
-                 "grid-throttle", "defer-to-window"):
+                 "grid-throttle", "defer-to-window", "plan-ahead"):
         assert want in names
+
+
+def test_defer_to_window_skips_held_jobs():
+    """Regression (ISSUE 3): a queued job already holding for a window must
+    not be re-deferred every tick — one Defer per (job, window)."""
+    from repro.core.actions import Defer
+    from repro.core.orchestrator import DeferToWindowPolicy
+
+    site = SiteView(0, 4, 4, 1, False, 0.0, next_window_start_s=1800.0)
+    fresh = [JobView(0, 0, 1 * GB, 3600.0, state="queued")]
+    state = ClusterState.build(t=0.0, jobs=fresh, sites=[site], nic_bps=1e10)
+    assert DeferToWindowPolicy().decide(state) == [Defer(0, 1800.0)]
+    held = [JobView(0, 0, 1 * GB, 3600.0, state="queued",
+                    defer_until_s=1800.0)]
+    state2 = ClusterState.build(t=0.0, jobs=held, sites=[site], nic_bps=1e10)
+    assert DeferToWindowPolicy().decide(state2) == []
+    # once the hold expired (and the site is still dark before a later
+    # window) a fresh Defer is legitimate again
+    site3 = SiteView(0, 4, 4, 1, False, 0.0, next_window_start_s=7200.0)
+    state3 = ClusterState.build(t=3600.0, jobs=held, sites=[site3],
+                                nic_bps=1e10)
+    assert DeferToWindowPolicy().decide(state3) == [Defer(0, 7200.0)]
 
 
 def test_registry_aliases_and_normalization():
@@ -171,13 +193,15 @@ def test_config_fields_stay_in_sync_with_policies():
     import dataclasses
 
     from repro.core.orchestrator import (
-        DeferConfig, DeferToWindowPolicy, GridThrottlePolicy, ThrottleConfig,
+        DeferConfig, DeferToWindowPolicy, GridThrottlePolicy, PlanAheadConfig,
+        PlanAheadPolicy, ThrottleConfig,
     )
 
     for config_cls, policy_cls in [
         (FeasibilityConfig, FeasibilityAwarePolicy),
         (ThrottleConfig, GridThrottlePolicy),
         (DeferConfig, DeferToWindowPolicy),
+        (PlanAheadConfig, PlanAheadPolicy),
     ]:
         cfg_fields = {f.name for f in dataclasses.fields(config_cls)}
         pol_fields = {f.name for f in dataclasses.fields(policy_cls)}

@@ -14,7 +14,7 @@ from repro.core.traces import TraceProfile
 
 BUILTINS = ("paper-table6", "flaky-wan", "solar-heavy", "large-ckpt-classC",
             "failure-storm", "hub-spoke-wan", "asymmetric-uplink",
-            "partitioned-wan")
+            "partitioned-wan", "forecastable-brownouts")
 
 
 def test_all_builtins_registered():

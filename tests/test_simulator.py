@@ -332,6 +332,87 @@ def test_migrate_action_roundtrip():
     assert j.done_s >= 0
 
 
+def test_defer_issued_once_per_job_window():
+    """Regression (ISSUE 3): DeferToWindowPolicy used to re-issue Defer for
+    already-held jobs on every orchestrator tick.  JobView now exposes
+    defer_until_s and the policy skips held jobs — a job may only be
+    re-deferred after its previous hold expired."""
+
+    class Recording(Policy):
+        name = "recording"
+
+        def __init__(self, inner):
+            self.inner = inner
+            self.log = []
+
+        def decide(self, state):
+            acts = self.inner.decide(state)
+            self.log.append((state.t, acts))
+            return acts
+
+    pol = Recording(make_policy("defer-to-window"))
+    # 2 slots/site keeps queues non-empty so Defer actually fires
+    ClusterSimulator.from_scenario(
+        "paper-table6", pol,
+        overrides=dict(days=3, n_jobs=120, slots_per_site=2)).run()
+    n_defers = 0
+    held_until = {}
+    for t, acts in pol.log:
+        for a in acts:
+            if isinstance(a, Defer):
+                n_defers += 1
+                prev = held_until.get(a.jid)
+                assert prev is None or t >= prev - 1e-9, (
+                    f"job {a.jid} re-deferred at t={t} while still held "
+                    f"until {prev}")
+                held_until[a.jid] = a.until_s
+    assert n_defers > 0  # the policy actually fired
+
+
+def test_snapshot_exposes_defer_until():
+    cfg = small_cfg()
+    sim = ClusterSimulator(cfg, make_policy("static"), jobs=generate_jobs(cfg))
+    j = sim.jobs[0]
+    sim._move(j, state="queued")
+    j.defer_until_s = 1234.5
+    view = next(v for v in sim.snapshot(0.0).jobs if v.jid == j.jid)
+    assert view.defer_until_s == 1234.5
+    assert view.held(0.0) and not view.held(2000.0)
+
+
+def test_post_horizon_arrival_is_failed_migration():
+    """Regression (ISSUE 3): the failed-arrival estimate clamped t_arrive to
+    horizon - 1, so a transfer landing *after* the horizon was classified
+    by whatever the trace's last sample happened to be.  A destination
+    window touching the horizon made such transfers count as successes."""
+    from repro.core import SimJob
+    from repro.core.traces import SiteTrace, Window
+
+    GB = 1e9
+    horizon = 1 * 24 * 3600.0
+    cfg = SimConfig(n_sites=2, days=1, arrival_skew=(0.5, 0.5), n_jobs=1)
+    # dest window covers the last hour right up to the horizon: the old
+    # clamp landed inside it and called the migration a success
+    traces = [SiteTrace(0, []), SiteTrace(1, [Window(horizon - 3600.0, horizon)])]
+
+    def migrate_at(t, ckpt_gb):
+        jobs = [SimJob(0, 0.0, 10 * 3600.0, ckpt_gb * GB, "C", 0, site=0)]
+        sim = ClusterSimulator(cfg, make_policy("static"), traces=traces,
+                               jobs=jobs)
+        j = sim.jobs[0]
+        sim._move(j, state="queued")
+        sim._move(j, state="running")
+        sim._apply_action(Migrate(0, 1), t, None, horizon)
+        assert sim.migrations == 1 and sim.rejected_actions == 0
+        return sim.failed_migrations
+
+    # 200 GB at 10 Gbps = 160 s: launched 100 s before the horizon it
+    # arrives 60 s past it → failed (old code: clamped into the window)
+    assert migrate_at(horizon - 100.0, 200.0) == 1
+    # control: a small checkpoint arrives inside the window → success
+    assert migrate_at(horizon - 600.0, 2.0) == 0
+
+
 # ---------------------------------------------------------------------------
 # Advertised bandwidth matches the transfer loop's NIC-share model
 # ---------------------------------------------------------------------------

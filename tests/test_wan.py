@@ -1,7 +1,11 @@
 """WanTopology: exact reduction to the legacy uniform share model,
 per-link caps, asymmetric NICs, brownout calendars, builder validation,
-and hypothesis properties (shared rates never oversubscribe any NIC/link
-and conserve the flow count)."""
+the sharing="waterfill" max-min mode (conservation, dominance over the
+conservative split, exact reduction on single-bottleneck flow sets), and
+hypothesis properties (shared rates never oversubscribe any NIC/link and
+conserve the flow count)."""
+import dataclasses
+
 import numpy as np
 import pytest
 
@@ -133,6 +137,75 @@ def test_profile_validation():
 
 
 # ---------------------------------------------------------------------------
+# sharing="waterfill": full max-min water-filling
+# ---------------------------------------------------------------------------
+
+
+def waterfill_of(topo: WanTopology) -> WanTopology:
+    return dataclasses.replace(topo, sharing="waterfill")
+
+
+def test_waterfill_redistributes_residual_of_frozen_bottlenecks():
+    """The textbook case the conservative split leaves on the table: three
+    flows saturate out0 at 10/3 each, which leaves in1 half idle — under
+    max-min the fourth flow (4->1) inherits the residual (6.67 Gbps) where
+    the conservative model grants only min(10/1, 10/2) = 5."""
+    topo = WanTopology.uniform(5, 10 * GBPS)
+    wf = waterfill_of(topo)
+    flows = [(0, 1), (0, 2), (0, 3), (4, 1)]
+    cons = topo.shared_rates(flows)
+    rates = wf.shared_rates(flows)
+    np.testing.assert_allclose(rates[:3], 10 * GBPS / 3)
+    assert cons[3] == pytest.approx(5 * GBPS)
+    assert rates[3] == pytest.approx(10 * GBPS - 10 * GBPS / 3)  # 6.67
+
+
+def test_waterfill_reduces_exactly_on_single_bottleneck_flow_sets():
+    """Exact-reduction caveat: when every flow is frozen by the same first
+    saturating resource (all flows out of one site on a uniform fabric),
+    waterfill IS the conservative split."""
+    topo = WanTopology.uniform(4, 10 * GBPS)
+    wf = waterfill_of(topo)
+    for flows in ([(0, 1)], [(0, 1), (0, 2)], [(0, 1), (0, 2), (0, 2)],
+                  [(0, 3), (0, 3), (0, 3)]):
+        np.testing.assert_allclose(wf.shared_rates(flows),
+                                   topo.shared_rates(flows))
+
+
+def test_waterfill_zero_capacity_and_link_caps():
+    prof = WanProfile(gbps=10.0, link_gbps=((None, 0.0), (1.0, None)),
+                      sharing="waterfill")
+    topo = prof.build_topology(2, days=1, seed=0)
+    assert topo.shared_rates([(0, 1)])[0] == 0.0
+    # the 1 Gbps link binds below the NICs and is split two ways
+    np.testing.assert_allclose(topo.shared_rates([(1, 0), (1, 0)]),
+                               0.5 * GBPS)
+
+
+def test_waterfill_advertised_matrix_consistent_with_rates():
+    topo = waterfill_of(WanTopology.uniform(5, 10 * GBPS))
+    flows = [(0, 1), (0, 2), (0, 3), (4, 1)]
+    rates = topo.shared_rates(flows)
+    adv = topo.advertised_matrix(0.0, flows)
+    for (s, d), r in zip(flows, rates):
+        assert adv[s, d] == pytest.approx(r)
+    # idle pairs advertise the post-admission water-fill of a new flow —
+    # never more than uncontended capacity, never negative
+    assert (adv <= topo.capacity_matrix(0.0) + 1e-6).all()
+    assert (adv >= 0.0).all()
+    # a new flow into the saturated in1 would get in1's residual share
+    assert adv[2, 1] == pytest.approx(
+        topo.post_admission_rate(2, 1, flows))
+
+
+def test_waterfill_profile_and_validation():
+    prof = WanProfile(gbps=10.0, sharing="waterfill")
+    assert prof.build_topology(3, days=1, seed=0).sharing == "waterfill"
+    with pytest.raises(ValueError, match="sharing"):
+        WanProfile(sharing="greedy").build_topology(2, days=1, seed=0)
+
+
+# ---------------------------------------------------------------------------
 # Property tests: conservation under arbitrary topologies + flow sets
 # ---------------------------------------------------------------------------
 
@@ -202,3 +275,54 @@ if HAS_HYPOTHESIS:
         np.testing.assert_allclose(
             topo.advertised_matrix(0.0, flows),
             advertised_bandwidth(n, gbps * GBPS, flows))
+
+    @given(topology_and_flows())
+    @settings(max_examples=80, deadline=None)
+    def test_waterfill_conserves_every_resource_capacity(tf):
+        """Waterfill never oversubscribes any NIC or link, on arbitrary
+        topologies, brownout states and flow sets."""
+        topo, flows, t = tf
+        wf = waterfill_of(topo)
+        rates = wf.shared_rates(flows, t)
+        assert len(rates) == len(flows)
+        assert (rates >= 0.0).all()
+        out, in_, link = wf.resources_at(t)
+        tol = 1e-6
+        for s in range(wf.n_sites):
+            tot = sum(r for (fs, _), r in zip(flows, rates) if fs == s)
+            assert tot <= out[s] * (1 + tol)
+        for d in range(wf.n_sites):
+            tot = sum(r for (_, fd), r in zip(flows, rates) if fd == d)
+            assert tot <= in_[d] * (1 + tol)
+        for (s, d) in set(flows):
+            tot = sum(r for f, r in zip(flows, rates) if f == (s, d))
+            assert tot <= link[s, d] * (1 + tol) or np.isinf(link[s, d])
+
+    @given(topology_and_flows())
+    @settings(max_examples=80, deadline=None)
+    def test_waterfill_dominates_conservative_per_flow(tf):
+        """Every flow's water-filled rate is >= its conservative single-round
+        split — the residual is only ever redistributed, never taken."""
+        topo, flows, t = tf
+        if not flows:
+            return
+        cons = topo.shared_rates(flows, t)
+        rates = waterfill_of(topo).shared_rates(flows, t)
+        assert (rates >= cons * (1 - 1e-9) - 1e-6).all()
+
+    @given(st.integers(2, 6), st.floats(0.5, 50.0),
+           st.lists(st.integers(0, 5), min_size=1, max_size=8))
+    @settings(max_examples=50, deadline=None)
+    def test_waterfill_reduces_to_conservative_on_uniform_single_source(
+            n, gbps, raw_dsts):
+        """Exact-reduction property on uniform fabrics: with every flow
+        leaving one source NIC, the first water-filling round freezes all
+        of them at nic/k — identically the conservative split.  (With
+        several disjoint bottlenecks waterfill strictly dominates; see
+        test_waterfill_redistributes_residual_of_frozen_bottlenecks.)"""
+        src = 0
+        flows = [(src, 1 + d % (n - 1)) for d in raw_dsts]
+        topo = WanTopology.uniform(n, gbps * GBPS)
+        np.testing.assert_allclose(
+            waterfill_of(topo).shared_rates(flows),
+            topo.shared_rates(flows))
