@@ -69,6 +69,27 @@ def main() -> int:
             print(f"[check_quick] FAIL {policy}: completed "
                   f"{cur['completed']} != baseline {b['completed']}")
             failed = True
+    # mini-sweep row: regression gate on the *summed in-simulator wall*
+    # (machine-normalized; the pool wall is spawn/import-dominated and
+    # tracks runner provisioning, not the code) plus exact determinism of
+    # the completed-jobs total
+    b_sw, c_sw = base.get("sweep"), latest.get("sweep")
+    if b_sw is not None:
+        if c_sw is None:
+            print("[check_quick] FAIL sweep: missing from latest record")
+            failed = True
+        else:
+            norm_wall = c_sw["sim_wall_s"] / speed
+            wall_ok = norm_wall <= b_sw["sim_wall_s"] * (1.0 + args.threshold)
+            det_ok = c_sw["completed"] == b_sw["completed"]
+            verdict = "ok" if (wall_ok and det_ok) else "FAIL"
+            print(f"[check_quick] {verdict} sweep: sim wall "
+                  f"{c_sw['sim_wall_s']:.2f}s raw, {norm_wall:.2f}s "
+                  f"normalized vs baseline {b_sw['sim_wall_s']:.2f}s "
+                  f"(pool wall {c_sw['wall_s']:.2f}s); completed "
+                  f"{c_sw['completed']} vs {b_sw['completed']}")
+            if not (wall_ok and det_ok):
+                failed = True
     return 1 if failed else 0
 
 

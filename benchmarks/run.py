@@ -50,43 +50,56 @@ def calibrate() -> float:
     return min(once() for _ in range(3))
 
 
+#: 25-site fleet variant of forecastable-brownouts: the scale where the
+#: vectorized decide path pulls away from the scalar oracle (~4x on the
+#: decide wall; at 5 sites numpy dispatch ~= python-loop cost).
+FLEET_OVERRIDES = dict(n_sites=25, n_jobs=1200, arrival_skew=(1.0,) * 25)
+
+
 def quick_smoke(json_path: str = QUICK_LATEST) -> int:
-    """Perf gate for the orchestration hot loop: full 7-day/240-job runs —
-    the headline ``paper-table6`` scenario plus the forecast-driven
-    ``plan-ahead`` policy on ``forecastable-brownouts`` (per-link outage
-    calendar + ForecastHorizon queries every tick), end to end, with
-    ticks/sec (one tick = one processed event under the next-event
-    engine)."""
+    """Perf gate for the orchestration hot loop: full 7-day runs — the
+    headline ``paper-table6`` scenario, the forecast-driven ``plan-ahead``
+    policy on ``forecastable-brownouts`` (per-link outage calendar +
+    ForecastHorizon grids every tick) at the paper's 5 sites and at the
+    25-site fleet scale, plus a mini Monte-Carlo sweep (2 scenarios x 2
+    policies x 2 seeds through the process-pool engine).  Ticks/sec =
+    processed events per second under the next-event engine; ``decide_s``
+    = cumulative wall time inside ``Policy.decide``."""
     from repro.core import ClusterSimulator
+    from repro.core.sweep import SweepSpec, run_sweep
 
     print("name,us_per_call,derived")
     ok = True
     record = {"engine": None, "calib_s": round(calibrate(), 4), "policies": {}}
-    for scenario, policy in (
-        ("paper-table6", "feasibility-aware"),
-        ("paper-table6", "energy-only"),
-        ("forecastable-brownouts", "plan-ahead"),
+    for label, scenario, policy, overrides in (
+        ("feasibility-aware", "paper-table6", "feasibility-aware", None),
+        ("energy-only", "paper-table6", "energy-only", None),
+        ("plan-ahead", "forecastable-brownouts", "plan-ahead", None),
+        ("plan-ahead-fleet", "forecastable-brownouts", "plan-ahead",
+         FLEET_OVERRIDES),
     ):
         best = None
         for _ in range(2):  # best-of-2: shave scheduler noise off the gate
-            sim = ClusterSimulator.from_scenario(scenario, policy)
+            sim = ClusterSimulator.from_scenario(scenario, policy,
+                                                 overrides=overrides)
             r = sim.run()
             if best is None or r.wall_time_s < best.wall_time_s:
                 best = r
         r = best
         record["engine"] = r.engine
-        print(f"[quick] {policy}@{scenario}: {r.wall_time_s:.2f}s wall for "
-              f"{r.ticks} ticks ({r.ticks_per_sec:.0f} ticks/sec) | "
-              f"grid={r.grid_kwh:.1f} kWh "
+        print(f"[quick] {label}@{scenario}: {r.wall_time_s:.2f}s wall for "
+              f"{r.ticks} ticks ({r.ticks_per_sec:.0f} ticks/sec, "
+              f"decide {r.decide_s:.2f}s) | grid={r.grid_kwh:.1f} kWh "
               f"renew_frac={r.renewable_fraction:.2f} migrations={r.migrations} "
               f"completed={r.completed} rejected={r.rejected_actions}")
-        print(f"quick_{policy},{r.wall_time_s * 1e6:.0f},"
+        print(f"quick_{label},{r.wall_time_s * 1e6:.0f},"
               f"{r.ticks_per_sec:.0f} ticks/sec")
-        record["policies"][policy] = {
+        record["policies"][label] = {
             "scenario": scenario,
             "wall_s": round(r.wall_time_s, 4),
             "ticks": r.ticks,
             "ticks_per_sec": round(r.ticks_per_sec, 1),
+            "decide_s": round(r.decide_s, 4),
             "grid_kwh": round(r.grid_kwh, 1),
             "renewable_kwh": round(r.renewable_kwh, 1),
             "migrations": r.migrations,
@@ -94,11 +107,86 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
             "rejected_actions": r.rejected_actions,
         }
         ok &= r.completed == len(r.jobs)
+    # mini-sweep: exercises the process-pool fan-out end to end in CI
+    spec = SweepSpec(
+        scenarios=("paper-table6", "forecastable-brownouts"),
+        policies=("feasibility-aware", "plan-ahead"), seeds=(0, 1),
+        overrides=dict(days=3, n_jobs=80))
+    sw = run_sweep(spec, workers=2, keep_results=False)
+    completed = sum(r.summary["completed"] for r in sw.runs)
+    # the gated quantity is the summed in-simulator wall, not the pool
+    # wall: process spawn/import overhead tracks runner provisioning, not
+    # the code under test
+    sim_wall = sum(r.summary["wall_s"] for r in sw.runs)
+    print(f"[quick] mini-sweep: {len(sw.runs)} runs "
+          f"(2 scen x 2 pol x 2 seeds) in {sw.wall_s:.2f}s pool wall "
+          f"({sw.workers} workers, {sim_wall:.2f}s summed sim wall), "
+          f"completed={completed}")
+    print(f"quick_sweep,{sw.wall_s * 1e6:.0f},{len(sw.runs)} runs")
+    record["sweep"] = {
+        "runs": len(sw.runs), "workers": sw.workers,
+        "wall_s": round(sw.wall_s, 4), "sim_wall_s": round(sim_wall, 4),
+        "completed": completed,
+    }
+    ok &= completed == 2 * 2 * 2 * 80
     with open(json_path, "w") as f:
         json.dump(record, f, indent=1)
         f.write("\n")
     print(f"[quick] wrote {json_path} (calib {record['calib_s']}s)")
     return 0 if ok else 1
+
+
+def sweep_table(workers=None) -> None:
+    """``--sweep``: the Monte-Carlo evaluation the single-seed tables
+    cannot give — 5 scenarios x 3 policies x 8 seeds, full 7-day runs,
+    fanned out over the process pool; prints mean +/- 95% CI per
+    metric."""
+    from repro.core.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec(
+        scenarios=("paper-table6", "flaky-wan", "solar-heavy",
+                   "hub-spoke-wan", "forecastable-brownouts"),
+        policies=("energy-only", "feasibility-aware", "plan-ahead"),
+        seeds=tuple(range(8)))
+    sw = run_sweep(spec, workers=workers, keep_results=False)
+    print(sw.table())
+    print(f"[sweep] {len(sw.runs)} runs ({sw.workers} workers) "
+          f"in {sw.wall_s:.1f}s")
+    print(f"sweep,{sw.wall_s * 1e6:.0f},{len(sw.runs)} runs")
+
+
+def profile_run(scenario: str, policy: str, out_csv: str) -> None:
+    """``--profile``: cProfile one full run and emit the top-15
+    cumulative-time rows as CSV — so the next perf PR starts from data,
+    not guesses."""
+    import cProfile
+    import pstats
+
+    from repro.core import ClusterSimulator
+
+    sim = ClusterSimulator.from_scenario(scenario, policy)
+    pr = cProfile.Profile()
+    pr.enable()
+    r = sim.run()
+    pr.disable()
+    print(f"[profile] {policy}@{scenario}: {r.wall_time_s:.2f}s wall "
+          f"(decide {r.decide_s:.2f}s), {r.ticks} ticks")
+    stats = pstats.Stats(pr)
+    stats.sort_stats("cumulative")
+    rows = []
+    for func in stats.fcn_list:  # already cumulative-sorted
+        cc, nc, tt, ct, _ = stats.stats[func]
+        file, line, name = func
+        rows.append((f"{file}:{line}({name})", nc, tt, ct))
+        if len(rows) >= 15:
+            break
+    with open(out_csv, "w") as f:
+        f.write("function,ncalls,tottime_s,cumtime_s\n")
+        for fn, nc, tt, ct in rows:
+            f.write(f"\"{fn}\",{nc},{tt:.4f},{ct:.4f}\n")
+    print(f"[profile] top-15 cumulative rows -> {out_csv}")
+    for fn, nc, tt, ct in rows:
+        print(f"  {ct:8.4f}s cum  {tt:8.4f}s tot  {nc:>8}x  {fn}")
 
 
 def main() -> None:
@@ -109,10 +197,29 @@ def main() -> None:
                     help="perf smoke only: 7-day/240-job sim + ticks/sec")
     ap.add_argument("--quick-json", default=QUICK_LATEST,
                     help="where --quick writes its JSON record")
+    ap.add_argument("--sweep", action="store_true",
+                    help="Monte-Carlo sweep: 5 scenarios x 3 policies x "
+                         "8 seeds over the process pool, mean±CI table")
+    ap.add_argument("--sweep-workers", type=int, default=None,
+                    help="process-pool size for --sweep (default: cpus)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile one run, top-15 cumulative-time CSV")
+    ap.add_argument("--profile-scenario", default="forecastable-brownouts")
+    ap.add_argument("--profile-policy", default="plan-ahead")
+    ap.add_argument("--profile-out",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "PROFILE_top15.csv"))
     args = ap.parse_args()
 
     if args.quick:
         sys.exit(quick_smoke(args.quick_json))
+    if args.sweep:
+        sweep_table(args.sweep_workers)
+        return
+    if args.profile:
+        profile_run(args.profile_scenario, args.profile_policy,
+                    args.profile_out)
+        return
 
     from benchmarks import (
         fig1_breakeven, fig2_phase, roofline, table1_hardware,

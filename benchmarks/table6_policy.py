@@ -32,13 +32,16 @@ def one(rows, label):
             r["policy"], r["nonrenew_energy"], r["jct"],
             f"{r['migration_overhead']:.1%}", f"{r['stall_overhead']:.1%}",
             f"{r['renewable_frac']:.1%}", r["rejected_actions"],
-            f"{r['ticks_per_sec']:.0f}", f"{pe}/{pj}/{po}",
+            f"{r['ticks_per_sec']:.0f}", f"{r['decide_s']:.3f}",
+            f"{pe}/{pj}/{po}",
         ])
     print(f"--- {label} ---")
     # 'rej' (rejected actions) makes action-validity regressions visible in
-    # the table; 'ticks/s' tracks engine throughput alongside the metrics
+    # the table; 'ticks/s' tracks engine throughput and 'decide_s' the
+    # cumulative policy overhead alongside the metrics
     print(table(out, ["policy", "nonrenew", "JCT", "migr-ovh", "stalls",
-                      "renew%", "rej", "ticks/s", "paper(e/jct/ovh)"]))
+                      "renew%", "rej", "ticks/s", "decide_s",
+                      "paper(e/jct/ovh)"]))
     return {r["policy"]: r for r in rows}
 
 

@@ -13,7 +13,8 @@ from repro.core.actions import (  # noqa: F401
     Action, Defer, Migrate, Pause, Resume, Throttle,
 )
 from repro.core.state import (  # noqa: F401
-    ClusterState, JobView, SiteView, advertised_bandwidth, nic_share_counts,
+    ClusterState, JobSoA, JobView, SiteView, advertised_bandwidth,
+    nic_share_counts,
 )
 from repro.core.orchestrator import (  # noqa: F401
     DeferConfig, DeferToWindowPolicy, EnergyOnlyPolicy, FeasibilityAwarePolicy,
@@ -36,5 +37,9 @@ from repro.core.simulator import (  # noqa: F401
     normalized_table, run_policy_comparison,
 )
 from repro.core.traces import (  # noqa: F401
-    Forecaster, SiteTrace, TraceProfile, Window, generate_trace, trace_stats,
+    Forecaster, SiteTrace, TraceProfile, TraceStack, Window, generate_trace,
+    stack_traces, trace_stats,
+)
+from repro.core.sweep import (  # noqa: F401
+    RunRecord, SweepResult, SweepSpec, run_sweep,
 )

@@ -233,6 +233,180 @@ class ForecastHorizon:
                     break
         return best
 
+    # -- batched grids (one numpy pass instead of n^2 scalar queries) --------
+    @cached_property
+    def _window_mats(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Padded (n_sites, Kw) window start/end matrices (+inf padded; Kw
+        = max window count + 1 so searchsorted indices always gather)."""
+        k = max((len(w) for w in self.site_windows), default=0) + 1
+        n = self.n_sites
+        starts = np.full((n, k), np.inf)
+        ends = np.full((n, k), np.inf)
+        for i, wins in enumerate(self.site_windows):
+            for j, w in enumerate(wins):
+                starts[i, j] = w.start_s
+                ends[i, j] = w.end_s
+        return starts, ends
+
+    @cached_property
+    def _outage_mats(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Padded (n, n, Ko) per-link merged-outage start/end/capacity
+        matrices (fabric spans folded into every link, start-sorted — the
+        array form of :meth:`_outages_for`).  Pads: start=+inf, end=-inf,
+        cap=+inf."""
+        n = self.n_sites
+        k = 1
+        per_link = {}
+        for s in range(n):
+            for d in range(n):
+                outs = self._outages_for(s, d)
+                per_link[(s, d)] = outs
+                k = max(k, len(outs) + 1)
+        starts = np.full((n, n, k), np.inf)
+        ends = np.full((n, n, k), -np.inf)
+        caps = np.full((n, n, k), np.inf)
+        for (s, d), outs in per_link.items():
+            for j, o in enumerate(outs):
+                starts[s, d, j] = o.start_s
+                ends[s, d, j] = o.end_s
+                caps[s, d, j] = o.capacity_bps
+        return starts, ends, caps
+
+    # The grids below cache only quantities that are piecewise-constant in
+    # ``t`` between breakpoints, and apply every comparison that involves
+    # the live ``t`` (window-still-open checks, the ``t + horizon_s``
+    # reveal limit) per call on the cached gathers — like
+    # ``TraceStack.point``.  Caching comparison *results* would be wrong
+    # at the breakpoints themselves: a predicate like
+    # ``start < t + horizon`` is False exactly at ``t = start - horizon``
+    # but True just after, so a value computed at the edge must not be
+    # reused for the epoch's interior (orchestrator ticks land exactly on
+    # hour-aligned edges all the time).
+    @cached_property
+    def _grid_cache(self) -> dict:
+        return {}
+
+    @staticmethod
+    def _breaks(*arrays: np.ndarray) -> List[float]:
+        vals = np.unique(np.concatenate([np.asarray(a).ravel()
+                                         for a in arrays]))
+        return [float(v) for v in vals if np.isfinite(v)]
+
+    @cached_property
+    def _outage_end_breaks(self) -> List[float]:
+        _, ends, _ = self._outage_mats
+        return self._breaks(ends)
+
+    @cached_property
+    def _outage_reveal_breaks(self) -> List[float]:
+        starts, _, _ = self._outage_mats
+        return self._breaks(starts - self.horizon_s)
+
+    @cached_property
+    def _outage_start_breaks(self) -> List[float]:
+        starts, _, _ = self._outage_mats
+        return self._breaks(starts)
+
+    @cached_property
+    def _window_start_breaks(self) -> List[float]:
+        starts, _ = self._window_mats
+        return self._breaks(starts)
+
+    def _cached_grid(self, key: tuple, compute):
+        got = self._grid_cache.get(key)
+        if got is None:
+            got = self._grid_cache[key] = compute()
+        return got
+
+    def next_outage_grid(self, t: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(start, end, capacity) ``(n, n)`` grids of the first forecast
+        outage per link still open at / beginning after ``t`` inside the
+        lookahead — the batched :meth:`next_outage` (start=+inf, cap=+inf
+        where there is none).  Treat the returned arrays as read-only
+        (cached per breakpoint epoch).
+
+        The qualifying mask mixes two edge semantics: expiry flips
+        (``end > t``) become False *at* the edge (``bisect_right``
+        epochs), reveal flips (``start < t + horizon``) become True just
+        *after* theirs (``bisect_left`` epochs) — the cache key combines
+        both, so every ``t`` sharing a key evaluates to the same mask."""
+        def compute():
+            starts, ends, caps = self._outage_mats
+            qual = (ends > t) & (starts < t + self.horizon_s)
+            first = qual.argmax(axis=2)[:, :, None]
+            any_ = np.take_along_axis(qual, first, axis=2)[:, :, 0]
+            o_start = np.where(
+                any_, np.take_along_axis(starts, first, axis=2)[:, :, 0],
+                np.inf)
+            o_end = np.where(
+                any_, np.take_along_axis(ends, first, axis=2)[:, :, 0],
+                np.inf)
+            o_cap = np.where(
+                any_, np.take_along_axis(caps, first, axis=2)[:, :, 0],
+                np.inf)
+            return o_start, o_end, o_cap
+
+        key = ("no", bisect.bisect_right(self._outage_end_breaks, t),
+               bisect.bisect_left(self._outage_reveal_breaks, t))
+        return self._cached_grid(key, compute)
+
+    def next_outage_start_after_grid(self, t: float) -> np.ndarray:
+        """(n, n) grid of the first outage START strictly after ``t`` per
+        link (inf when none inside the lookahead) — the batched
+        :meth:`next_outage_start_after`.  Read-only; the reveal limit is
+        applied with the live ``t``."""
+        def compute():
+            starts, _, _ = self._outage_mats
+            after = np.where(starts > t, starts, np.inf)
+            return after.min(axis=2)
+
+        # ``starts > t`` flips False at the start itself: bisect_right
+        first = self._cached_grid(
+            ("na", bisect.bisect_right(self._outage_start_breaks, t)),
+            compute)
+        return np.where(first < t + self.horizon_s, first, np.inf)
+
+    def next_uplink_outage_grid(self, t: float) -> np.ndarray:
+        """(n_sites,) batched :meth:`next_uplink_outage_start_s`: earliest
+        forecast outage start affecting any link out of each site.  (The
+        clamp uses the live ``t`` — an outage already open clamps to
+        ``t``.)"""
+        o_start, _, _ = self.next_outage_grid(t)
+        return np.maximum(o_start, t).min(axis=1)
+
+    def next_window_start_grid(self, t: float) -> np.ndarray:
+        """(n_sites,) batched :meth:`next_window_start_s`.  Read-only;
+        the reveal limit is applied with the live ``t``."""
+        def compute():
+            starts, _ = self._window_mats
+            j = (starts <= t).sum(axis=1)
+            return starts[np.arange(self.n_sites), j]
+
+        # ``starts <= t`` flips True at the start itself: bisect_right
+        nxt = self._cached_grid(
+            ("nw", bisect.bisect_right(self._window_start_breaks, t)),
+            compute)
+        return np.where(nxt < t + self.horizon_s, nxt, np.inf)
+
+    def window_open_or_next_start_grid(self, t: float) -> np.ndarray:
+        """(n_sites,) start of the current-or-next forecast window — the
+        batched ``next_window(site, t).start_s`` (+inf when
+        :meth:`next_window` would return None).  Read-only; the
+        still-open and reveal checks use the live ``t``."""
+        def compute():
+            starts, ends = self._window_mats
+            r = np.arange(self.n_sites)
+            j = (starts <= t).sum(axis=1)
+            jm = np.maximum(j - 1, 0)
+            return j > 0, starts[r, jm], ends[r, jm], starts[r, j]
+
+        has_prev, prev_start, prev_end, nxt = self._cached_grid(
+            ("cn", bisect.bisect_right(self._window_start_breaks, t)),
+            compute)
+        open_ = has_prev & (prev_end > t)
+        return np.where(open_, prev_start,
+                        np.where(nxt < t + self.horizon_s, nxt, np.inf))
+
     def capacity_floor_bps(self, src: int, dst: int, t0: float, t1: float) -> float:
         """Minimum forecast degraded capacity on (src, dst) over [t0, t1]
         (inf when no outage overlaps — i.e. the calendar forecasts no

@@ -38,9 +38,14 @@ import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Type
 
+import numpy as np
+
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
-from repro.core.state import ClusterState, JobView, SiteView
+from repro.core.state import (
+    STATE_PAUSED, STATE_QUEUED, STATE_RUNNING, ClusterState, JobSoA, JobView,
+    SiteView,
+)
 
 # Backwards-looking alias: the pre-redesign name for the snapshot type.
 OrchestratorContext = ClusterState
@@ -240,6 +245,162 @@ def best_destination(state: ClusterState, job: JobView, ok_row,
 
 
 # ---------------------------------------------------------------------------
+# Vectorized kernels (SoA fast path; the scalar functions above are the
+# parity oracles — tests/test_vectorized.py asserts identical Action lists)
+# ---------------------------------------------------------------------------
+
+_PPF_CACHE: Dict[float, float] = {}
+
+
+def _norm_ppf_cached(eps: float) -> float:
+    got = _PPF_CACHE.get(eps)
+    if got is None:
+        import statistics
+
+        got = _PPF_CACHE[eps] = statistics.NormalDist().inv_cdf(eps)
+    return got
+
+
+def feasibility_grid_arrays(
+    sizes, t_loads, bw_grid, windows, *, alpha: float, eps: float = 0.0,
+    forecast_sigma_s: float = 0.0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Algorithm 1 stage 1 as one lean numpy pass over SoA columns.
+
+    ``sizes``/``t_loads`` are ``(k, 1)``, ``bw_grid`` ``(k, n)``,
+    ``windows`` ``(n,)`` or ``(1, n)``.  Bit-identical to
+    :func:`algorithm1_grid` (which routes through ``fz.evaluate`` and its
+    NamedTuple) but without the per-call dispatch and intermediate
+    verdicts.  Returns ``(ok_grid, t_transfer_grid)``.
+    """
+    with np.errstate(divide="ignore"):
+        t_transfer = 8.0 * sizes / bw_grid
+    t_cost = t_transfer + t_loads + fz.T_DOWNTIME_S
+    energy_ok = (fz.P_SYS_KW / fz.P_NODE_KW) * t_transfer < windows
+    not_c = t_transfer < fz.CLASS_B_MAX_S
+    if eps > 0.0 and forecast_sigma_s > 0.0:
+        # stochastic gate (§VI.H): deterministic check against the lower
+        # eps-quantile of the window (fz.stochastic_feasible, numpy path)
+        window_lo = windows + _norm_ppf_cached(eps) * forecast_sigma_s
+        time_ok = t_cost < alpha * np.maximum(window_lo, 0.0)
+    else:
+        time_ok = t_cost < alpha * windows
+    return time_ok & energy_ok & not_c, t_transfer
+
+
+def benefit_grid_arrays(
+    state: ClusterState, cand: np.ndarray, t_transfer_grid: np.ndarray, *,
+    gamma: float, beta: float, queue_penalty_s: float,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Stage 2's benefit, for every (candidate, destination) pair at once,
+    with zero same-tick reservations (the common case — reservations only
+    exist after a migration was already committed this tick, and those rare
+    follow-up rows fall back to the scalar :func:`best_destination`).
+    Arithmetic mirrors the scalar path op for op.  Returns
+    ``(benefit_grid, t_cost_grid)``."""
+    soa = state.soa
+    W = state.site_window_s
+    s_i = soa.site[cand]
+    rem = soa.remaining_s[cand][:, None]
+    t_cost = t_transfer_grid + soa.t_load_s[cand][:, None] + fz.T_DOWNTIME_S
+    cur_green = np.where(state.site_renewable[s_i], W[s_i], 0.0)[:, None]
+    dest_green = np.minimum(W[None, :], rem)
+    avoided = np.maximum(0.0, dest_green - np.minimum(cur_green, rem))
+    benefit = (gamma * avoided
+               - (beta * queue_penalty_s)
+               * (state.site_bq_load[None, :] - state.site_load[s_i][:, None]))
+    benefit = np.where(state.site_free_slots[None, :] <= 0,
+                       benefit - queue_penalty_s, benefit)
+    return benefit, t_cost
+
+
+def pick_best_grid(
+    benefit: np.ndarray, t_transfer_grid: np.ndarray, valid: np.ndarray,
+) -> np.ndarray:
+    """Per-row argbest destination under the scalar tie-break key
+    ``(-benefit, t_transfer, sid)`` — max benefit, ties by transfer time,
+    then lowest site id.  Returns ``(k,)`` destination sids, ``-1`` where
+    no destination is valid."""
+    b = np.where(valid, benefit, -np.inf)
+    mb = b.max(axis=1)
+    tie = valid & (b == mb[:, None])
+    tt = np.where(tie, t_transfer_grid, np.inf)
+    tie = tie & (tt == tt.min(axis=1)[:, None])
+    return np.where(np.isfinite(mb), tie.argmax(axis=1), -1)
+
+
+_ARANGE: Dict[int, np.ndarray] = {}
+
+
+def _arange(n: int) -> np.ndarray:
+    got = _ARANGE.get(n)
+    if got is None:
+        got = _ARANGE[n] = np.arange(n)
+    return got
+
+
+def score_migrations(
+    state: ClusterState, cand: np.ndarray, bw_grid, *, alpha: float,
+    eps: float = 0.0, forecast_sigma_s: float = 0.0, gamma: float,
+    beta: float, queue_penalty_s: float, min_benefit_s: float,
+    s_i: Optional[np.ndarray] = None, sizes: Optional[np.ndarray] = None,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Fused stage 1 + stage 2 for the zero-reservation case: feasibility,
+    benefit and argbest destination in one pass (the composition of
+    :func:`feasibility_grid_arrays`, :func:`benefit_grid_arrays` and
+    :func:`pick_best_grid`, inlined to share gathers on the per-tick hot
+    path).  ``s_i``/``sizes`` accept the caller's pre-gathered columns.
+    Returns ``(ok_grid, t_transfer_grid, dest0)``."""
+    soa = state.soa
+    W = state.site_window_s
+    if s_i is None:
+        s_i = soa.site[cand]
+    if sizes is None:
+        sizes = soa.ckpt_bytes[cand][:, None]
+    with np.errstate(divide="ignore"):
+        tt = 8.0 * sizes / bw_grid
+    t_cost = tt + soa.t_load_s[cand][:, None] + fz.T_DOWNTIME_S
+    energy_ok = (fz.P_SYS_KW / fz.P_NODE_KW) * tt < W[None, :]
+    not_c = tt < fz.CLASS_B_MAX_S
+    if eps > 0.0 and forecast_sigma_s > 0.0:
+        window_lo = W[None, :] + _norm_ppf_cached(eps) * forecast_sigma_s
+        time_ok = t_cost < alpha * np.maximum(window_lo, 0.0)
+    else:
+        time_ok = t_cost < alpha * W[None, :]
+    ok = time_ok & energy_ok & not_c
+    # stage 2 benefit (reservation-free), arithmetic mirroring the scalar
+    # best_destination op for op
+    rem = soa.remaining_s[cand][:, None]
+    cur_green = np.where(state.site_renewable[s_i], W[s_i], 0.0)[:, None]
+    avoided = np.maximum(
+        0.0, np.minimum(W[None, :], rem) - np.minimum(cur_green, rem))
+    benefit = (gamma * avoided
+               - (beta * queue_penalty_s)
+               * (state.site_bq_load[None, :] - state.site_load[s_i][:, None]))
+    benefit = benefit + np.where(state.site_free_slots <= 0,
+                                 -queue_penalty_s, 0.0)[None, :]
+    valid = (ok
+             & (_arange(len(W))[None, :] != s_i[:, None])
+             & (benefit > np.maximum(t_cost, min_benefit_s)))
+    if not valid.any():  # the common tick: nothing beats staying put
+        return ok, tt, None
+    return ok, tt, pick_best_grid(benefit, tt, valid)
+
+
+def _row_view(soa: JobSoA, i: int) -> JobView:
+    """Materialize one JobView row (the reserved-aware scalar fallback
+    hands it to :func:`best_destination`)."""
+    from repro.core.state import _STATE_NAMES
+
+    return JobView(int(soa.jids[i]), int(soa.site[i]),
+                   float(soa.ckpt_bytes[i]), float(soa.remaining_s[i]),
+                   float(soa.t_load_s[i]), state=_STATE_NAMES[soa.state[i]],
+                   eligible=bool(soa.eligible[i]),
+                   power_frac=float(soa.power_frac[i]),
+                   defer_until_s=float(soa.defer_until_s[i]))
+
+
+# ---------------------------------------------------------------------------
 # Policies
 # ---------------------------------------------------------------------------
 
@@ -269,6 +430,32 @@ class EnergyOnlyPolicy(Policy):
     site; initiates transfers that cannot finish inside windows."""
 
     def decide(self, state: ClusterState) -> List[Action]:
+        """Vectorized: candidates are running+eligible jobs at dark sites;
+        since a candidate's own site is never green, the per-job green list
+        of the scalar oracle is one shared site set."""
+        soa = state.soa
+        if soa.count(STATE_RUNNING) == 0:
+            return []
+        renew = state.site_renewable
+        cand = ((soa.state == STATE_RUNNING) & soa.eligible
+                & ~renew[soa.site]).nonzero()[0]
+        if not len(cand):
+            return []
+        # spread over whatever is green right now (hash placement), with
+        # only a stale capacity check and NO feasibility filter (§VII.E:
+        # 'lacks awareness of transfer-time or energy-cost limits'):
+        # transfers near window end, Class C checkpoints and transient
+        # over-subscription all happen.
+        greens = np.flatnonzero(
+            renew & (state.site_slots - state.site_busy > 0))
+        if not len(greens):
+            return []
+        jids = soa.jids[cand]
+        dests = greens[jids % len(greens)]
+        return [Migrate(int(j), int(d)) for j, d in zip(jids, dests)]
+
+    def decide_scalar(self, state: ClusterState) -> List[Action]:
+        """Per-job reference implementation (parity oracle)."""
         out: List[Action] = []
         for job in state.migratable():
             cur = state.site(job.site)
@@ -281,11 +468,6 @@ class EnergyOnlyPolicy(Policy):
             ]
             if not greens:
                 continue
-            # spread over whatever is green right now (hash placement), with
-            # only a stale capacity check and NO feasibility filter (§VII.E:
-            # 'lacks awareness of transfer-time or energy-cost limits'):
-            # transfers near window end, Class C checkpoints and transient
-            # over-subscription all happen.
             dest = greens[job.jid % len(greens)]
             out.append(Migrate(job.jid, dest.sid))
         return out
@@ -316,6 +498,50 @@ class FeasibilityAwarePolicy(Policy):
     forecast_sigma_s: float = 0.0
 
     def decide(self, state: ClusterState) -> List[Action]:
+        """Vectorized Algorithm 1: one whole-grid numpy pass over the SoA
+        columns; rows decided after a same-tick reservation (rare) fall
+        back to the scalar stage 2.  Emits exactly the Action list of
+        :meth:`decide_scalar`."""
+        soa = state.soa
+        # a migration must pass the energy gate T_BE < window (T_BE >= 0),
+        # so no positive window anywhere means no feasible destination
+        if not state.site_window_s.max() > 0.0 or soa.count(STATE_RUNNING) == 0:
+            return []
+        cand = ((soa.state == STATE_RUNNING) & soa.eligible).nonzero()[0]
+        if not len(cand):
+            return []
+        ok, tt, dest0 = score_migrations(
+            state, cand, state.bandwidth_bps[soa.site[cand], :],
+            alpha=self.alpha, eps=self.eps,
+            forecast_sigma_s=self.forecast_sigma_s, gamma=self.gamma,
+            beta=self.beta, queue_penalty_s=self.queue_penalty_s,
+            min_benefit_s=self.min_benefit_s)
+        if dest0 is None:
+            return []
+        out: List[Action] = []
+        reserved: Optional[Dict[int, int]] = None  # built on first commit
+        for k, i in enumerate(cand):
+            if reserved is None:
+                dest = int(dest0[k])
+                if dest < 0:
+                    continue
+            else:
+                dest = best_destination(
+                    state, _row_view(soa, i), ok[k], tt[k], reserved,
+                    gamma=self.gamma, beta=self.beta,
+                    queue_penalty_s=self.queue_penalty_s,
+                    min_benefit_s=self.min_benefit_s)
+                if dest is None:
+                    continue
+            out.append(Migrate(int(soa.jids[i]), dest))
+            if reserved is None:
+                reserved = {s.sid: 0 for s in state.sites}
+            reserved[dest] += 1
+        return out
+
+    def decide_scalar(self, state: ClusterState) -> List[Action]:
+        """The per-job reference implementation (parity oracle for
+        :meth:`decide`)."""
         candidates = state.migratable()
         if not candidates:
             return []
@@ -357,6 +583,17 @@ class GridThrottlePolicy(Policy):
     power_frac: float = 0.5
 
     def decide(self, state: ClusterState) -> List[Action]:
+        soa = state.soa
+        if soa.count(STATE_RUNNING) == 0:
+            return []
+        want = np.where(state.site_renewable[soa.site], 1.0, self.power_frac)
+        mask = ((soa.state == STATE_RUNNING)
+                & (np.abs(soa.power_frac - want) > 1e-9))
+        return [Throttle(int(j), float(w))
+                for j, w in zip(soa.jids[mask], want[mask])]
+
+    def decide_scalar(self, state: ClusterState) -> List[Action]:
+        """Per-job reference implementation (parity oracle)."""
         out: List[Action] = []
         for job in state.running():
             green = state.site(job.site).renewable_active
@@ -411,10 +648,100 @@ class PlanAheadPolicy(Policy):
     min_pause_compute_s: float = 1800.0
     arrival_margin_s: float = 1800.0
 
-    # ---- stage 1: migration ------------------------------------------------
+    # ---- stage 1 (vectorized): migration -----------------------------------
     def _migrations(self, state: ClusterState, planned: set) -> List[Action]:
-        import numpy as np
+        """Whole-grid stage 1: outage hardening, feasibility, evacuation
+        scan and destination scoring as single numpy passes over the SoA;
+        only committed migrations (rare) run scalar follow-up work
+        (post-admission arrival check, reservation-aware re-scoring)."""
+        t = state.t
+        fc = state.forecast
+        soa = state.soa
+        W = state.site_window_s
+        # a migration must pass the energy gate T_BE < window (T_BE >= 0),
+        # so no positive window anywhere means no feasible destination
+        if not W.max() > 0.0 or soa.count(STATE_RUNNING) == 0:
+            return []
+        cand = ((soa.state == STATE_RUNNING) & soa.eligible).nonzero()[0]
+        if not len(cand):
+            return []
+        # pre-skip (pre-emptive-evacuation scan, vectorized): green
+        # candidates stay put unless the forecast says their uplink browns
+        # out before the current window ends; the grids below only score
+        # the survivors
+        s_i = soa.site[cand]
+        green = state.site_renewable[s_i]
+        if fc is None:
+            keep = ~green
+        else:
+            uplink = fc.next_uplink_outage_grid(t)
+            keep = ~(green & ((soa.remaining_s[cand] <= W[s_i])
+                              | (uplink[s_i] > t + W[s_i])))
+        if not keep.all():
+            cand = cand[keep]
+            if not len(cand):
+                return []
+            s_i = s_i[keep]
+        sizes = soa.ckpt_bytes[cand][:, None]
+        bw_grid = state.bandwidth_bps[s_i, :]  # fancy indexing: a copy
+        # forecast hardening: plan any transfer that would cross the first
+        # forecast outage on its link at the outage's degraded capacity
+        if fc is not None:
+            o_start, _, o_cap = fc.next_outage_grid(t)
+            os_rows = o_start[s_i, :]
+            with np.errstate(divide="ignore"):
+                tt0 = 8.0 * sizes / bw_grid
+            cross = (os_rows < t + tt0) & (bw_grid > 0.0)
+            bw_grid = np.where(cross, np.minimum(bw_grid, o_cap[s_i, :]),
+                               bw_grid)
+        ok, tt, dest0 = score_migrations(
+            state, cand, bw_grid, alpha=self.alpha, gamma=self.gamma,
+            beta=self.beta, queue_penalty_s=self.queue_penalty_s,
+            min_benefit_s=self.min_benefit_s, s_i=s_i, sizes=sizes)
+        if dest0 is None:
+            return []
+        start_after = (fc.next_outage_start_after_grid(t)
+                       if fc is not None else None)
 
+        out: List[Action] = []
+        flows = list(state.transfers)
+        reserved: Optional[Dict[int, int]] = None  # built on first commit
+        for k, i in enumerate(cand):
+            if reserved is None:
+                dest_sid = int(dest0[k])
+                if dest_sid < 0:
+                    continue
+            else:
+                dest_sid = best_destination(
+                    state, _row_view(soa, i), ok[k], tt[k], reserved,
+                    gamma=self.gamma, beta=self.beta,
+                    queue_penalty_s=self.queue_penalty_s,
+                    min_benefit_s=self.min_benefit_s)
+                if dest_sid is None:
+                    continue
+            src = int(s_i[k])
+            # arrival check at the post-admission rate — counting both the
+            # in-flight transfers and the migrations committed earlier this
+            # tick (see the scalar oracle for the full rationale)
+            rate = state.post_admission_bps(src, dest_sid, flows)
+            if rate <= 0.0:
+                continue
+            t_arrive = t + 8.0 * float(soa.ckpt_bytes[i]) / rate
+            if t_arrive + self.arrival_margin_s > t + W[dest_sid]:
+                continue
+            if fc is not None and start_after[src, dest_sid] < t_arrive:
+                continue
+            jid = int(soa.jids[i])
+            out.append(Migrate(jid, dest_sid))
+            flows.append((src, dest_sid))
+            if reserved is None:
+                reserved = {s.sid: 0 for s in state.sites}
+            reserved[dest_sid] += 1
+            planned.add(jid)
+        return out
+
+    # ---- stage 1 (scalar oracle) -------------------------------------------
+    def _migrations_scalar(self, state: ClusterState, planned: set) -> List[Action]:
         t = state.t
         fc = state.forecast
         candidates = state.migratable()
@@ -496,10 +823,67 @@ class PlanAheadPolicy(Policy):
         return out
 
     def decide(self, state: ClusterState) -> List[Action]:
+        """Vectorized four-stage plan (emits exactly the Action list of
+        :meth:`decide_scalar`): stage 1 via :meth:`_migrations`, stages
+        2–4 as SoA masks against per-site forecast grids instead of
+        per-job scalar horizon queries."""
+        t = state.t
+        fc = state.forecast
+        soa = state.soa
+        planned: set = set()
+        out: List[Action] = list(self._migrations(state, planned))
+
+        st = soa.state
+        n_running = soa.count(STATE_RUNNING)
+        n_queued = soa.count(STATE_QUEUED)
+        green_j = (state.site_renewable[soa.site]
+                   if n_running or n_queued else None)
+        nws = (fc.next_window_start_grid(t)
+               if fc is not None and (n_running or n_queued) else None)
+
+        # ---- stage 2: Pause-for-window (running jobs on grid power)
+        if fc is not None and n_running:
+            start_j = nws[soa.site]
+            pause = ((st == STATE_RUNNING) & ~green_j
+                     & (soa.remaining_s >= self.min_pause_compute_s)
+                     & (start_j > t) & (start_j <= t + self.pause_horizon_s))
+            for k in pause.nonzero()[0]:
+                jid = int(soa.jids[k])
+                if jid not in planned:
+                    out.append(Pause(jid))
+
+        # ---- stage 3: Resume at the (forecast) window start
+        if soa.count(STATE_PAUSED):
+            paused = (st == STATE_PAUSED).nonzero()[0]
+            if fc is None:
+                resume = np.ones(len(paused), dtype=bool)
+            else:
+                # resume when the site turned green, or the window we
+                # parked for moved out of reach (no stranding)
+                cn = fc.window_open_or_next_start_grid(t)
+                resume = (state.site_renewable[soa.site[paused]]
+                          | (cn[soa.site[paused]] > t + self.pause_horizon_s))
+            for k in paused[resume]:
+                out.append(Resume(int(soa.jids[k])))
+
+        # ---- stage 4: Defer queued jobs across the dark span
+        if n_queued:
+            start_s = nws if fc is not None else state.site_next_window_s
+            start_j = start_s[soa.site]
+            defer = ((st == STATE_QUEUED) & ~(soa.defer_until_s > t)
+                     & ~green_j & (start_j > t)
+                     & (start_j <= t + self.max_wait_s))
+            for k in defer.nonzero()[0]:
+                out.append(Defer(int(soa.jids[k]), float(start_j[k])))
+        return out
+
+    def decide_scalar(self, state: ClusterState) -> List[Action]:
+        """The per-job reference implementation (parity oracle for
+        :meth:`decide`)."""
         t = state.t
         fc = state.forecast
         planned: set = set()
-        out: List[Action] = list(self._migrations(state, planned))
+        out: List[Action] = list(self._migrations_scalar(state, planned))
 
         # ---- stage 2: Pause-for-window (running jobs on grid power)
         if fc is not None:
@@ -553,12 +937,25 @@ class DeferToWindowPolicy(Policy):
     max_wait_s: float = 4 * 3600.0
 
     def decide(self, state: ClusterState) -> List[Action]:
+        t = state.t
+        soa = state.soa
+        if soa.count(STATE_QUEUED) == 0:
+            return []
+        start = state.site_next_window_s[soa.site]
+        # held jobs (defer_until_s still in the future) are skipped —
+        # re-issuing Defer every tick is pure action noise (one Defer per
+        # (job, window); a job resurfaces here when the hold expires)
+        mask = ((soa.state == STATE_QUEUED) & ~(soa.defer_until_s > t)
+                & ~state.site_renewable[soa.site]
+                & (start > t) & (start <= t + self.max_wait_s))
+        return [Defer(int(j), float(s))
+                for j, s in zip(soa.jids[mask], start[mask])]
+
+    def decide_scalar(self, state: ClusterState) -> List[Action]:
+        """Per-job reference implementation (parity oracle)."""
         out: List[Action] = []
         for job in state.queued():
             if job.held(state.t):
-                # already holding for a window — re-issuing Defer every tick
-                # is pure action noise (one Defer per (job, window); the
-                # job resurfaces here when the hold expires)
                 continue
             site = state.site(job.site)
             if site.renewable_active:
@@ -575,5 +972,6 @@ __all__ = [
     "GridThrottlePolicy", "JobView", "OraclePolicy", "OrchestratorContext",
     "PlanAheadConfig", "PlanAheadPolicy", "Policy", "PolicyConfig",
     "SiteView", "StaticPolicy", "ThrottleConfig", "available_policies",
-    "make_policy", "policy_config_cls", "register_policy",
+    "benefit_grid_arrays", "feasibility_grid_arrays", "make_policy",
+    "pick_best_grid", "policy_config_cls", "register_policy",
 ]

@@ -67,7 +67,7 @@ import numpy as np
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
 from repro.core.orchestrator import Policy, PolicyConfig, make_policy
-from repro.core.state import ClusterState, JobView, SiteView
+from repro.core.state import ClusterState, JobSoA, JobView, SiteView
 from repro.core.traces import Forecaster, SiteTrace, TraceProfile, generate_trace
 from repro.core.wan import WanProfile, WanTopology
 
@@ -78,6 +78,16 @@ GB = 1e9
 # and "loading" are the two legs of a migration.
 JOB_STATES = ("pending", "queued", "running", "migrating", "loading",
               "paused", "done")
+# codes for the incremental state column; the live-state codes are taken
+# from state.py so the SoA column can never drift from what the policy
+# kernels compare against (STATE_QUEUED/RUNNING/PAUSED)
+from repro.core.state import _STATE_CODES as _LIVE_STATE_CODES
+
+_STATE_CODE = {**_LIVE_STATE_CODES, "pending": 3, "migrating": 4,
+               "loading": 5, "done": 6}
+# packed column indices (see ClusterSimulator.__init__)
+_CF_CKPT, _CF_COMPUTE, _CF_PROGRESS, _CF_POWER, _CF_DEFER, _CF_LASTMIG = range(6)
+_CI_SITE, _CI_STATE = range(2)
 
 
 @dataclass
@@ -184,6 +194,7 @@ class SimResult:
     rejected_actions: int = 0
     ticks: int = 0
     wall_time_s: float = 0.0
+    decide_s: float = 0.0  # cumulative wall time inside Policy.decide
     engine: str = "event"
 
     @property
@@ -238,6 +249,8 @@ class SimResult:
             "failures": self.failures,
             "rejected_actions": self.rejected_actions,
             "ticks_per_sec": round(self.ticks_per_sec, 1),
+            "decide_s": round(self.decide_s, 4),
+            "wall_s": round(self.wall_time_s, 4),
         }
 
 
@@ -273,7 +286,13 @@ class ClusterSimulator:
         traces: Optional[List[SiteTrace]] = None,
         jobs: Optional[List[SimJob]] = None,
         oracle_forecast: bool = False,
+        wan_topology: Optional[WanTopology] = None,
+        forecast_horizon=None,
     ):
+        """``wan_topology`` / ``forecast_horizon`` accept prebuilt shared
+        objects (the sweep engine builds them once per (scenario, seed)
+        cell); both constructions are deterministic, so passing them is
+        result-identical to letting the simulator build its own."""
         self.cfg = cfg
         self.policy = policy
         self.traces = traces or generate_trace(
@@ -293,7 +312,7 @@ class ClusterSimulator:
         self.ticks = 0
         # the one WAN object every consumer shares (transfer loop, snapshot
         # advertisement, and — via scenarios — dryrun --plan / serve)
-        self.wan_topology = cfg.wan_profile().build_topology(
+        self.wan_topology = wan_topology or cfg.wan_profile().build_topology(
             cfg.n_sites, cfg.days, cfg.seed)
         # the lookahead product (window + outage forecasts) attached to
         # every snapshot.  Built once: window noise is hash-deterministic
@@ -301,7 +320,7 @@ class ClusterSimulator:
         # which is what lets plan-ahead policies hold a plan across ticks.
         from repro.core.forecast import ForecastHorizon
 
-        self.forecast_horizon = ForecastHorizon.build(
+        self.forecast_horizon = forecast_horizon or ForecastHorizon.build(
             self.traces, wan=self.wan_topology,
             horizon_s=cfg.forecast_horizon_s, sigma_s=sigma,
             seed=cfg.seed + 7)
@@ -316,6 +335,35 @@ class ClusterSimulator:
         self._arrivals = sorted(self._by_state["pending"].values(),
                                 key=lambda j: (j.arrival_s, j.jid))
         self._arrival_ptr = 0
+        self.decide_s = 0.0  # cumulative wall time inside Policy.decide
+        # jid-indexed structure-of-arrays columns behind the snapshot's
+        # JobSoA: static facts filled once; volatile facts mirrored at
+        # their single mutation points (_move, _apply_action, migration
+        # end) except progress, which is refreshed for the running bucket
+        # at snapshot time (it advances continuously)
+        size = max((j.jid for j in self.jobs), default=-1) + 1
+        self._site_slots_arr = np.full(cfg.n_sites, cfg.slots_per_site,
+                                       dtype=np.int64)
+        self._tload_buf = np.full(max(size, 1), cfg.t_load_s)
+        # packed jid-row column matrices: one fancy-index gather per
+        # snapshot instead of one per column (float: _CF_* columns,
+        # int: _CI_* columns)
+        self._colf = np.zeros((size, 6))
+        self._coli = np.zeros((size, 2), dtype=np.int64)
+        self._colf[:, _CF_POWER] = 1.0
+        self._colf[:, _CF_DEFER] = -1e18
+        self._colf[:, _CF_LASTMIG] = -1e18
+        self._coli[:, _CI_STATE] = _STATE_CODE["pending"]
+        for j in self.jobs:
+            jid = j.jid
+            self._coli[jid, _CI_SITE] = j.site
+            self._coli[jid, _CI_STATE] = _STATE_CODE[j.state]
+            self._colf[jid, _CF_CKPT] = j.ckpt_bytes
+            self._colf[jid, _CF_COMPUTE] = j.compute_s
+            self._colf[jid, _CF_PROGRESS] = j.progress_s
+            self._colf[jid, _CF_POWER] = j.power_frac
+            self._colf[jid, _CF_DEFER] = j.defer_until_s
+            self._colf[jid, _CF_LASTMIG] = j.last_migration_end_s
 
     # -- (site, state) bucket maintenance -----------------------------------
     _SITE_STATES = ("queued", "running")
@@ -336,9 +384,15 @@ class ClusterSimulator:
               site: Optional[int] = None) -> None:
         self._index_remove(j)
         if state is not None:
+            if j.state == "running":
+                # progress only advances while running; sync the column as
+                # the job leaves (snapshot refreshes the running bucket)
+                self._colf[j.jid, _CF_PROGRESS] = j.progress_s
             j.state = state
+            self._coli[j.jid, _CI_STATE] = _STATE_CODE[state]
         if site is not None:
             j.site = site
+            self._coli[j.jid, _CI_SITE] = site
         self._index_add(j)
 
     def _running_count(self, sid: int) -> int:
@@ -361,9 +415,13 @@ class ClusterSimulator:
 
     # -- snapshot ------------------------------------------------------------
     def snapshot(self, t: float) -> ClusterState:
-        """Build the policy-facing ClusterState via the shared constructor.
-        The advertised bandwidth matrix comes from the same WanTopology
-        (and flow set) the transfer loop grants from."""
+        """Build the policy-facing ClusterState from the incremental SoA
+        columns (no per-job objects — ``state.jobs`` materializes lazily
+        if a scalar consumer asks).  The advertised bandwidth matrix comes
+        from the same WanTopology (and flow set) the transfer loop grants
+        from; the per-site forecasts are drawn batched, consuming the
+        forecaster's noise streams exactly as the per-site scalar calls
+        would."""
         cfg = self.cfg
         incoming = [0] * cfg.n_sites
         transfers: List[Tuple[int, int]] = []
@@ -372,38 +430,67 @@ class ClusterSimulator:
             transfers.append((j.site, j.transfer_dest))
         for j in self._by_state["loading"].values():
             incoming[j.site] += 1
-        sites = []
-        for s in range(cfg.n_sites):
-            tr = self.traces[s]
-            sites.append(
+        active, remaining, next_start = self.forecaster.snapshot_all(t)
+        busy = np.array([self._running_count(s) for s in range(cfg.n_sites)],
+                        dtype=np.int64)
+        queued = np.array([self._queued_count(s) for s in range(cfg.n_sites)],
+                          dtype=np.int64)
+        inc = np.array(incoming, dtype=np.int64)
+        slots = max(cfg.slots_per_site, 1)
+        site_arrays = {
+            "site_window_s": remaining,
+            "site_renewable": active,
+            "site_next_window_s": next_start,
+            "site_busy": busy,
+            "site_slots": self._site_slots_arr,
+            "site_load": (busy + queued + inc) / slots,
+            "site_free_slots": np.maximum(0, cfg.slots_per_site - busy - inc),
+            "site_bq_load": (busy + queued) / slots,
+        }
+        def sites_factory():  # scalar consumers only (lazy)
+            return [
                 SiteView(
                     sid=s,
                     slots=cfg.slots_per_site,
-                    busy=self._running_count(s),
-                    queued=self._queued_count(s),
-                    renewable_active=tr.active(t),
-                    window_remaining_s=self.forecaster.remaining(s, t),
+                    busy=int(busy[s]),
+                    queued=int(queued[s]),
+                    renewable_active=bool(active[s]),
+                    window_remaining_s=float(remaining[s]),
                     incoming=incoming[s],
-                    next_window_start_s=self.forecaster.next_window_start(s, t),
+                    next_window_start_s=float(next_start[s]),
                 )
-            )
-        views = []
-        for state_name in ("queued", "running", "paused"):
-            for j in self._by_state[state_name].values():
-                views.append(
-                    JobView(
-                        j.jid, j.site, j.ckpt_bytes, j.compute_s - j.progress_s,
-                        cfg.t_load_s, state=state_name,
-                        eligible=(t - j.last_migration_end_s
-                                  >= cfg.migration_cooldown_s),
-                        power_frac=j.power_frac,
-                        defer_until_s=j.defer_until_s,
-                    )
-                )
-        views.sort(key=lambda v: v.jid)
-        return ClusterState.build(t, views, sites, wan=self.wan_topology,
-                                  transfers=transfers,
-                                  forecast=self.forecast_horizon)
+                for s in range(cfg.n_sites)
+            ]
+        by = self._by_state
+        for j in by["running"].values():  # progress advances while running
+            self._colf[j.jid, _CF_PROGRESS] = j.progress_s
+        jid_list = list(by["queued"])
+        jid_list += by["running"]
+        jid_list += by["paused"]
+        jids = np.array(jid_list, dtype=np.int64)
+        jids.sort()
+        gf = self._colf[jids]  # one gather for all float columns
+        gi = self._coli[jids]
+        soa = JobSoA(
+            jids=jids,
+            site=gi[:, _CI_SITE],
+            ckpt_bytes=gf[:, _CF_CKPT],
+            remaining_s=gf[:, _CF_COMPUTE] - gf[:, _CF_PROGRESS],
+            t_load_s=self._tload_buf[:len(jids)],
+            state=gi[:, _CI_STATE],
+            eligible=t - gf[:, _CF_LASTMIG] >= cfg.migration_cooldown_s,
+            power_frac=gf[:, _CF_POWER],
+            defer_until_s=gf[:, _CF_DEFER],
+            n_queued=len(by["queued"]),
+            n_running=len(by["running"]),
+            n_paused=len(by["paused"]),
+        )
+        return ClusterState.build_soa(t, soa, sites_factory,
+                                      n_sites=cfg.n_sites,
+                                      wan=self.wan_topology,
+                                      transfers=transfers,
+                                      forecast=self.forecast_horizon,
+                                      site_arrays=site_arrays)
 
     def _has_live_jobs(self) -> bool:
         by = self._by_state
@@ -460,6 +547,7 @@ class ClusterSimulator:
                 self.rejected_actions += 1
                 return
             j.defer_until_s = max(t, float(action.until_s))
+            self._colf[j.jid, _CF_DEFER] = j.defer_until_s
         elif isinstance(action, Pause):
             if j.state != "running":
                 self.rejected_actions += 1
@@ -475,6 +563,7 @@ class ClusterSimulator:
                 self.rejected_actions += 1
                 return
             j.power_frac = float(min(1.0, max(0.0, action.power_frac)))
+            self._colf[j.jid, _CF_POWER] = j.power_frac
         else:
             self.rejected_actions += 1
 
@@ -500,6 +589,7 @@ class ClusterSimulator:
             rejected_actions=self.rejected_actions,
             ticks=self.ticks,
             wall_time_s=time.perf_counter() - wall_t0,
+            decide_s=self.decide_s,
             engine=self.cfg.engine,
         )
 
@@ -712,6 +802,7 @@ class ClusterSimulator:
                 j.load_remaining_s = 0.0
                 j.post_migration_wait = True
                 j.last_migration_end_s = t
+                self._colf[jid, _CF_LASTMIG] = t
                 self._move(j, state="queued")
                 j.anchor_s = t
                 dirty.add(j.site)
@@ -764,7 +855,10 @@ class ClusterSimulator:
                 if self._has_live_jobs():
                     flush_running(t)
                     state = self.snapshot(t)
-                    for action in self.policy.decide(state):
+                    d0 = time.perf_counter()
+                    actions = self.policy.decide(state)
+                    self.decide_s += time.perf_counter() - d0
+                    for action in actions:
                         j = (jobs_by_id.get(action.jid)
                              if isinstance(action, Action) else None)
                         pre = ((j.state, j.power_frac, j.defer_until_s)
@@ -841,6 +935,7 @@ class ClusterSimulator:
                     if j.load_remaining_s <= 0:
                         j.post_migration_wait = True
                         j.last_migration_end_s = t
+                        self._colf[j.jid, _CF_LASTMIG] = t
                         self._move(j, state="queued")
             # 4) scheduling: fill free slots FIFO (Defer holds jobs back)
             for s in range(cfg.n_sites):
@@ -898,7 +993,10 @@ class ClusterSimulator:
                 next_orch = t + cfg.orch_dt_s
                 if self._has_live_jobs():
                     state = self.snapshot(t)
-                    for action in self.policy.decide(state):
+                    d0 = time.perf_counter()
+                    actions = self.policy.decide(state)
+                    self.decide_s += time.perf_counter() - d0
+                    for action in actions:
                         self._apply_action(action, t, state, horizon)
             if len(by_state["done"]) == n_jobs:
                 break
@@ -942,36 +1040,32 @@ def run_policy_comparison(
     ``policy_configs`` maps policy name -> ``PolicyConfig`` (or kwargs dict),
     so per-policy knobs like stochastic feasibility ``eps`` /
     ``forecast_sigma_s`` reach the comparison path.
-    """
-    import copy
 
+    Implemented as a one-cell sweep through :mod:`repro.core.sweep`
+    (run inline, no process pool): the cell runner is what provides the
+    same-trace-same-jobs guarantee, for this comparison and for every
+    seed of a Monte-Carlo sweep alike.
+    """
+    from repro.core.sweep import run_cells
+
+    label = "config"
     if scenario is not None:
         if cfg is not None:
             raise ValueError(
                 "pass either cfg or scenario (+overrides), not both")
         from repro.core.scenarios import get_scenario
 
-        cfg = get_scenario(scenario).sim_config(**(overrides or {}))
+        scn = get_scenario(scenario)
+        label = scn.name
+        cfg = scn.sim_config(**(overrides or {}))
     elif overrides:
         cfg = dataclasses.replace(cfg or SimConfig(), **overrides)
     cfg = cfg or SimConfig()
-    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed, profile=cfg.trace)
-    base_jobs = generate_jobs(cfg)
-    policy_configs = policy_configs or {}
-    out: Dict[str, SimResult] = {}
-    for name in policies:
-        jobs = copy.deepcopy(base_jobs)
-        pconf = policy_configs.get(name)
-        if isinstance(pconf, dict):
-            pol = make_policy(name, **pconf)
-        else:
-            pol = make_policy(name, config=pconf)
-        sim = ClusterSimulator(
-            cfg, pol, traces=traces, jobs=jobs,
-            oracle_forecast=pol.wants_oracle_forecast,
-        )
-        out[name] = sim.run()
-    return out
+    res = run_cells(
+        [(cfg, label, cfg.seed, tuple(policies), dict(policy_configs or {}),
+          True)],
+        workers=1)
+    return {r.policy: r.result for r in res.runs}
 
 
 def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
@@ -990,6 +1084,7 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
                 "renewable_frac": round(r.renewable_fraction, 3),
                 "rejected_actions": r.rejected_actions,
                 "ticks_per_sec": round(r.ticks_per_sec, 1),
+                "decide_s": round(r.decide_s, 4),
             }
         )
     return rows

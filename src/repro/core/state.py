@@ -30,7 +30,9 @@ from __future__ import annotations
 
 from dataclasses import dataclass, field
 from functools import cached_property
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import (
+    Callable, Dict, Iterable, List, Optional, Sequence, Tuple, Union,
+)
 
 import numpy as np
 
@@ -61,6 +63,76 @@ class JobView:
         return self.defer_until_s > t
 
 
+# JobSoA state codes (order matters: queued < running < paused mirrors the
+# snapshot's bucket walk; names map 1:1 onto JobView.state strings)
+STATE_QUEUED, STATE_RUNNING, STATE_PAUSED = 0, 1, 2
+_STATE_NAMES = ("queued", "running", "paused")
+_STATE_CODES = {n: c for c, n in enumerate(_STATE_NAMES)}
+
+
+@dataclass(frozen=True, eq=False)
+class JobSoA:
+    """Structure-of-arrays view of every live job, jid-sorted.
+
+    The vectorized policy kernels read these columns directly; the
+    ``JobView`` tuple is materialized from them lazily only when a scalar
+    consumer (the parity oracles, tests, examples) touches ``state.jobs``.
+    All arrays share length ``m`` (live job count).
+    """
+
+    jids: np.ndarray  # (m,) int64 (jid-sorted on the simulator path)
+    site: np.ndarray  # (m,) int64
+    ckpt_bytes: np.ndarray  # (m,) float64
+    remaining_s: np.ndarray  # (m,) float64 remaining compute
+    t_load_s: np.ndarray  # (m,) float64
+    state: np.ndarray  # (m,) int8: STATE_QUEUED/RUNNING/PAUSED
+    eligible: np.ndarray  # (m,) bool (migration cooldown elapsed)
+    power_frac: np.ndarray  # (m,) float64
+    defer_until_s: np.ndarray  # (m,) float64
+    # per-state counts (zero-op emptiness checks for the policy kernels;
+    # -1 = unknown, derive from `state`)
+    n_queued: int = -1
+    n_running: int = -1
+    n_paused: int = -1
+
+    def __len__(self) -> int:
+        return len(self.jids)
+
+    def count(self, code: int) -> int:
+        n = (self.n_queued, self.n_running, self.n_paused)[code]
+        if n < 0:
+            n = int((self.state == code).sum())
+        return n
+
+    @classmethod
+    def from_views(cls, views: Sequence["JobView"]) -> "JobSoA":
+        """Column-ize ``views`` preserving their order (the scalar decide
+        paths iterate ``state.jobs`` in snapshot order; parity between the
+        vectorized and scalar kernels needs the same order here)."""
+        return cls(
+            jids=np.array([v.jid for v in views], dtype=np.int64),
+            site=np.array([v.site for v in views], dtype=np.int64),
+            ckpt_bytes=np.array([v.ckpt_bytes for v in views]),
+            remaining_s=np.array([v.remaining_compute_s for v in views]),
+            t_load_s=np.array([v.t_load_s for v in views]),
+            state=np.array([_STATE_CODES[v.state] for v in views],
+                           dtype=np.int8),
+            eligible=np.array([v.eligible for v in views], dtype=bool),
+            power_frac=np.array([v.power_frac for v in views]),
+            defer_until_s=np.array([v.defer_until_s for v in views]),
+        )
+
+    def views(self) -> Tuple["JobView", ...]:
+        return tuple(
+            JobView(int(j), int(s), float(cb), float(r), float(tl),
+                    state=_STATE_NAMES[st], eligible=bool(el),
+                    power_frac=float(pf), defer_until_s=float(du))
+            for j, s, cb, r, tl, st, el, pf, du in zip(
+                self.jids, self.site, self.ckpt_bytes, self.remaining_s,
+                self.t_load_s, self.state, self.eligible, self.power_frac,
+                self.defer_until_s))
+
+
 @dataclass(slots=True)
 class SiteView:
     sid: int
@@ -81,19 +153,24 @@ class SiteView:
         return max(0, self.slots - self.busy - self.incoming)
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, eq=False)
 class ClusterState:
     """Immutable cluster snapshot handed to ``Policy.decide``.
 
     ``jobs`` holds every live (queued/running/paused) job; policies that only
     migrate should iterate :meth:`migratable`, which reproduces the classic
-    "running jobs whose cooldown elapsed" view.  Vectorized numpy views over
-    jobs and sites are materialized lazily and cached on first access.
+    "running jobs whose cooldown elapsed" view.
+
+    Job facts live in one of two primary representations and the other is
+    materialized lazily on first access: the array-of-structs ``JobView``
+    tuple (:meth:`build`, the test/dryrun/serve path) or the
+    structure-of-arrays :class:`JobSoA` (:meth:`build_soa`, the simulator's
+    per-tick path — the vectorized policy kernels consume ``state.soa``
+    without ever constructing per-job objects).  Vectorized numpy views
+    over jobs and sites are likewise lazy and cached.
     """
 
     t: float
-    jobs: Tuple[JobView, ...]
-    sites: Tuple[SiteView, ...]
     bandwidth_bps: np.ndarray  # (n_sites, n_sites) advertised effective bw
     # the topology the matrix was derived from (None when an explicit
     # matrix or the legacy uniform nic_bps path was used)
@@ -107,6 +184,36 @@ class ClusterState:
     # lookahead forecast (upcoming windows + WAN outages); None when the
     # caller had no traces to forecast from
     forecast: Optional[ForecastHorizon] = None
+    # exactly one of these is set by the constructors; the other derives
+    jobs_aos: Optional[Tuple[JobView, ...]] = None
+    jobs_soa: Optional[JobSoA] = None
+    # SiteView tuple, or a zero-arg factory materialized lazily (the
+    # simulator's fast path defers SiteView construction to the rare
+    # scalar consumers)
+    sites_in: Union[Tuple[SiteView, ...], Callable[[], Tuple[SiteView, ...]]] = ()
+
+    @cached_property
+    def sites(self) -> Tuple[SiteView, ...]:
+        if callable(self.sites_in):
+            return tuple(self.sites_in())
+        return self.sites_in
+
+    @cached_property
+    def jobs(self) -> Tuple[JobView, ...]:
+        """Live jobs as ``JobView`` objects, jid-sorted (materialized from
+        the SoA columns when the snapshot was built via :meth:`build_soa`)."""
+        if self.jobs_aos is not None:
+            return self.jobs_aos
+        return self.jobs_soa.views()
+
+    @cached_property
+    def soa(self) -> JobSoA:
+        """Live jobs as jid-sorted :class:`JobSoA` columns (derived from
+        the ``JobView`` tuple when the snapshot was built via
+        :meth:`build`)."""
+        if self.jobs_soa is not None:
+            return self.jobs_soa
+        return JobSoA.from_views(self.jobs_aos)
 
     def site(self, sid: int) -> SiteView:
         return self.sites[sid]
@@ -146,7 +253,7 @@ class ClusterState:
 
     @property
     def n_sites(self) -> int:
-        return len(self.sites)
+        return self.bandwidth_bps.shape[0]
 
     def migratable(self) -> List[JobView]:
         """Running jobs past their migration cooldown, in jid order."""
@@ -164,16 +271,19 @@ class ClusterState:
     # ---- vectorized views (lazy, cached) ----------------------------------
     @cached_property
     def job_sites(self) -> np.ndarray:
-        return np.array([j.site for j in self.jobs], dtype=np.int64)
+        return self.soa.site
 
     @cached_property
     def job_ckpt_bytes(self) -> np.ndarray:
-        return np.array([j.ckpt_bytes for j in self.jobs], dtype=np.float64)
+        return self.soa.ckpt_bytes
 
     @cached_property
     def job_remaining_s(self) -> np.ndarray:
-        return np.array([j.remaining_compute_s for j in self.jobs], dtype=np.float64)
+        return self.soa.remaining_s
 
+    # (the site_* views are seeded directly by ClusterState.build_soa when
+    # the caller already holds the arrays — cached_property is a non-data
+    # descriptor, so a pre-set instance __dict__ entry wins)
     @cached_property
     def site_window_s(self) -> np.ndarray:
         return np.array([s.window_remaining_s for s in self.sites], dtype=np.float64)
@@ -189,6 +299,27 @@ class ClusterState:
     @cached_property
     def site_free_slots(self) -> np.ndarray:
         return np.array([s.free_slots for s in self.sites], dtype=np.int64)
+
+    @cached_property
+    def site_next_window_s(self) -> np.ndarray:
+        return np.array([s.next_window_start_s for s in self.sites],
+                        dtype=np.float64)
+
+    @cached_property
+    def site_slots(self) -> np.ndarray:
+        return np.array([s.slots for s in self.sites], dtype=np.int64)
+
+    @cached_property
+    def site_busy(self) -> np.ndarray:
+        return np.array([s.busy for s in self.sites], dtype=np.int64)
+
+    @cached_property
+    def site_bq_load(self) -> np.ndarray:
+        """(busy + queued) / max(slots, 1) per site — the reservation-free
+        destination-load term of the Algorithm-1 benefit."""
+        return np.array(
+            [(s.busy + s.queued) / max(s.slots, 1) for s in self.sites],
+            dtype=np.float64)
 
     # ---- the one constructor ----------------------------------------------
     @classmethod
@@ -239,10 +370,58 @@ class ClusterState:
             forecast = ForecastHorizon.build(
                 traces, wan=wan, horizon_s=forecast_horizon_s,
                 sigma_s=forecast_sigma_s, seed=forecast_seed)
-        return cls(t=t, jobs=tuple(jobs), sites=sites,
+        return cls(t=t, jobs_aos=tuple(jobs), sites_in=sites,
                    bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
                    wan=wan, transfers=transfers, forecast=forecast,
                    nic_bps=nic_bps)
+
+    @classmethod
+    def build_soa(
+        cls,
+        t: float,
+        soa: JobSoA,
+        sites: Union[Sequence[SiteView], Callable[[], Sequence[SiteView]]],
+        *,
+        n_sites: Optional[int] = None,
+        wan: Optional["WanTopology"] = None,
+        nic_bps: Optional[float] = None,
+        transfers: Sequence[Tuple[int, int]] = (),
+        bandwidth_bps: Optional[np.ndarray] = None,
+        forecast: Optional[ForecastHorizon] = None,
+        site_arrays: Optional[Dict[str, np.ndarray]] = None,
+    ) -> "ClusterState":
+        """Assemble a snapshot from :class:`JobSoA` columns (the simulator's
+        per-tick fast path — no per-job or per-site objects are
+        constructed unless a scalar consumer later touches ``state.jobs``
+        / ``state.sites``).  ``sites`` may be a zero-arg factory (then
+        pass ``n_sites``); bandwidth sources as in :meth:`build`.
+        ``site_arrays`` pre-seeds the cached ``site_*`` vector views
+        (keys = property names) for callers that already hold them as
+        arrays."""
+        transfers = tuple(transfers)
+        if callable(sites):
+            sites_in = sites
+            if n_sites is None:
+                raise ValueError("a sites factory needs explicit n_sites")
+        else:
+            sites_in = tuple(sites)
+            n_sites = len(sites_in)
+        if bandwidth_bps is None:
+            if wan is not None:
+                bandwidth_bps = wan.advertised_matrix(t, transfers)
+            elif nic_bps is not None:
+                bandwidth_bps = advertised_bandwidth(
+                    n_sites, nic_bps, transfers)
+            else:
+                raise ValueError(
+                    "need wan, nic_bps (with transfers) or bandwidth_bps")
+        st = cls(t=t, jobs_soa=soa, sites_in=sites_in,
+                 bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
+                 wan=wan, transfers=transfers, forecast=forecast,
+                 nic_bps=nic_bps)
+        if site_arrays:
+            st.__dict__.update(site_arrays)
+        return st
 
 
 def site_views_from_traces(
@@ -296,6 +475,7 @@ def advertised_bandwidth(
 
 
 __all__ = [
-    "ClusterState", "JobView", "SiteView", "advertised_bandwidth",
+    "ClusterState", "JobSoA", "JobView", "SiteView", "advertised_bandwidth",
     "nic_share_counts", "site_views_from_traces",
+    "STATE_PAUSED", "STATE_QUEUED", "STATE_RUNNING",
 ]

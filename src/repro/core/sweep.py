@@ -1,0 +1,219 @@
+"""Monte-Carlo sweep engine: scenarios × policies × seeds, fanned out
+over a process pool (the evaluation scale-up the ROADMAP's "as many
+scenarios as you can imagine" asks for; cf. Heron's multi-DC trace
+sweeps and Wiesner et al.'s multi-seed curtailment studies).
+
+A sweep is a grid of *cells*; one cell = one ``(scenario, seed)`` pair.
+Within a cell every policy runs against the **same** trace, job list, WAN
+topology and forecast horizon (built once, shared — the same-trace-
+same-jobs guarantee ``run_policy_comparison`` has always made, now for
+every seed), so per-policy differences are policy effects, not sampling
+noise.  Cells are independent and deterministic, so they parallelize
+perfectly: ``run_sweep(spec, workers=N)`` produces byte-identical
+per-run summaries to ``workers=1`` (tests/test_sweep.py), with results
+merged in spec order regardless of completion order.
+
+``run_policy_comparison`` is a 1-seed sweep through this engine;
+``python -m benchmarks.run --sweep`` prints the aggregate table
+(mean ± 95% CI per metric) for a multi-scenario many-seed grid.
+"""
+from __future__ import annotations
+
+import copy
+import math
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+
+#: summary keys that are wall-clock measurements, not model outputs —
+#: nondeterministic by nature, excluded from determinism comparisons
+TIMING_KEYS = ("ticks_per_sec", "decide_s", "wall_s")
+
+
+@dataclass(frozen=True)
+class SweepSpec:
+    """A scenarios × policies × seeds grid (+ SimConfig overrides applied
+    to every cell and per-policy configs)."""
+
+    scenarios: Tuple[str, ...]
+    policies: Tuple[str, ...]
+    seeds: Tuple[int, ...] = (0,)
+    overrides: Optional[Mapping[str, object]] = None
+    policy_configs: Optional[Mapping[str, object]] = None  # name -> PolicyConfig|dict
+
+    def cells(self, keep_results: bool = True) -> List[tuple]:
+        """Materialize the work list: one ``(cfg, label, seed, policies,
+        policy_configs, keep_results)`` tuple per (scenario, seed), in
+        spec order (the deterministic merge order)."""
+        from repro.core.scenarios import get_scenario
+
+        cells = []
+        pconf = dict(self.policy_configs or {})
+        for scn in self.scenarios:
+            s = get_scenario(scn)
+            for seed in self.seeds:
+                cfg = s.sim_config(**{**dict(self.overrides or {}),
+                                      "seed": seed})
+                cells.append((cfg, s.name, seed, tuple(self.policies), pconf,
+                              keep_results))
+        return cells
+
+
+@dataclass(frozen=True)
+class RunRecord:
+    """One simulation run inside a sweep."""
+
+    scenario: str
+    policy: str
+    seed: int
+    summary: dict  # SimResult.summary()
+    result: Optional[object] = None  # the full SimResult when kept
+
+
+@dataclass
+class SweepResult:
+    """All runs of a sweep plus aggregation helpers."""
+
+    runs: List[RunRecord]
+    wall_s: float = 0.0
+    workers: int = 1
+
+    def deterministic_summaries(self) -> List[dict]:
+        """Per-run summaries with wall-clock keys stripped — the object
+        the workers=N == workers=1 determinism guarantee covers."""
+        return [
+            {**{k: v for k, v in r.summary.items() if k not in TIMING_KEYS},
+             "scenario": r.scenario, "seed": r.seed}
+            for r in self.runs
+        ]
+
+    def aggregate(self) -> Dict[Tuple[str, str], Dict[str, dict]]:
+        """(scenario, policy) -> metric -> {mean, std, ci95, n} over
+        seeds (sample std, normal-approximation 95% CI)."""
+        groups: Dict[Tuple[str, str], List[dict]] = {}
+        for r in self.runs:
+            groups.setdefault((r.scenario, r.policy), []).append(r.summary)
+        out: Dict[Tuple[str, str], Dict[str, dict]] = {}
+        for key, summaries in groups.items():
+            metrics: Dict[str, dict] = {}
+            for name, v0 in summaries[0].items():
+                if not isinstance(v0, (int, float)) or isinstance(v0, bool):
+                    continue
+                vals = [float(s[name]) for s in summaries]
+                n = len(vals)
+                mean = sum(vals) / n
+                var = (sum((v - mean) ** 2 for v in vals) / (n - 1)
+                       if n > 1 else 0.0)
+                std = math.sqrt(var)
+                metrics[name] = {
+                    "mean": mean, "std": std,
+                    "ci95": 1.96 * std / math.sqrt(n), "n": n,
+                }
+            out[key] = metrics
+        return out
+
+    def table(self, metrics: Sequence[str] = (
+            "grid_kwh", "renewable_frac", "migrations", "failed_migrations",
+            "completed", "mean_jct_h")) -> str:
+        """Aggregate table: one row per (scenario, policy), mean ± ci95."""
+        agg = self.aggregate()
+        headers = ["scenario", "policy"] + [f"{m} (±ci95)" for m in metrics]
+        rows = []
+        for (scn, pol), ms in agg.items():
+            row = [scn, pol]
+            for m in metrics:
+                got = ms.get(m)
+                row.append("-" if got is None else
+                           f"{got['mean']:.2f} ±{got['ci95']:.2f}")
+            rows.append(row)
+        widths = [max(len(str(r[i])) for r in [headers] + rows)
+                  for i in range(len(headers))]
+        fmt = "  ".join(f"{{:<{w}}}" for w in widths)
+        return "\n".join([fmt.format(*headers)]
+                         + [fmt.format(*r) for r in rows])
+
+
+def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
+    """Run every policy of one (scenario, seed) cell on shared inputs;
+    yields ``(policy, SimResult-or-None, summary)`` triples.
+
+    Traces, the WAN topology and (per forecast sigma) the ForecastHorizon
+    are constructed once and shared across the cell's simulators; the job
+    list is deep-copied per run (simulators mutate it).  When the caller
+    does not keep full results, the per-job ``SimResult`` is dropped
+    *worker-side* — only the summary dict crosses the process boundary.
+    Top-level so the process pool can pickle it.
+    """
+    from repro.core.forecast import ForecastHorizon
+    from repro.core.orchestrator import make_policy
+    from repro.core.simulator import ClusterSimulator, generate_jobs
+    from repro.core.traces import generate_trace
+
+    cfg, label, seed, policies, policy_configs, keep_results = cell
+    traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed,
+                            profile=cfg.trace)
+    base_jobs = generate_jobs(cfg)
+    wan = cfg.wan_profile().build_topology(cfg.n_sites, cfg.days, cfg.seed)
+    horizons: Dict[float, ForecastHorizon] = {}
+    out: List[Tuple[str, object]] = []
+    for name in policies:
+        pconf = policy_configs.get(name)
+        if isinstance(pconf, dict):
+            pol = make_policy(name, **pconf)
+        else:
+            pol = make_policy(name, config=pconf)
+        sigma = 0.0 if pol.wants_oracle_forecast else cfg.forecast_sigma_s
+        horizon = horizons.get(sigma)
+        if horizon is None:
+            horizon = horizons[sigma] = ForecastHorizon.build(
+                traces, wan=wan, horizon_s=cfg.forecast_horizon_s,
+                sigma_s=sigma, seed=cfg.seed + 7)
+        sim = ClusterSimulator(
+            cfg, pol, traces=traces, jobs=copy.deepcopy(base_jobs),
+            oracle_forecast=pol.wants_oracle_forecast,
+            wan_topology=wan, forecast_horizon=horizon)
+        r = sim.run()
+        out.append((name, r if keep_results else None, r.summary()))
+    return label, seed, out
+
+
+def run_cells(cells: Sequence[tuple], *, workers: Optional[int] = None,
+              keep_results: bool = True) -> SweepResult:
+    """Execute prepared cells (see :meth:`SweepSpec.cells`) and merge in
+    submission order.  ``workers=1`` (or a single cell) runs inline —
+    no pool, no pickling; ``workers=None`` sizes the pool to
+    ``min(len(cells), cpu_count)``."""
+    t0 = time.perf_counter()
+    if workers is None:
+        workers = min(len(cells), os.cpu_count() or 1)
+    workers = max(1, min(workers, len(cells)))
+    if workers == 1:
+        results = [_run_cell(c) for c in cells]
+    else:
+        with ProcessPoolExecutor(max_workers=workers) as ex:
+            # map() yields in submission order — completion order never
+            # leaks into the merge
+            results = list(ex.map(_run_cell, cells))
+    runs = [
+        RunRecord(scenario=label, policy=name, seed=seed, summary=summary,
+                  result=r if keep_results else None)
+        for label, seed, cell_out in results
+        for name, r, summary in cell_out
+    ]
+    return SweepResult(runs=runs, wall_s=time.perf_counter() - t0,
+                       workers=workers)
+
+
+def run_sweep(spec: SweepSpec, *, workers: Optional[int] = None,
+              keep_results: bool = True) -> SweepResult:
+    """Fan a :class:`SweepSpec` out over the process pool."""
+    return run_cells(spec.cells(keep_results=keep_results), workers=workers,
+                     keep_results=keep_results)
+
+
+__all__ = [
+    "RunRecord", "SweepResult", "SweepSpec", "TIMING_KEYS", "run_cells",
+    "run_sweep",
+]

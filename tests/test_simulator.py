@@ -370,11 +370,16 @@ def test_defer_issued_once_per_job_window():
 
 
 def test_snapshot_exposes_defer_until():
+    from repro.core.actions import Defer
+
     cfg = small_cfg()
     sim = ClusterSimulator(cfg, make_policy("static"), jobs=generate_jobs(cfg))
     j = sim.jobs[0]
     sim._move(j, state="queued")
-    j.defer_until_s = 1234.5
+    # through the action path — the simulator mirrors job mutations into
+    # its SoA columns at the sanctioned mutation points
+    sim._apply_action(Defer(j.jid, 1234.5), 0.0, None, 1e12)
+    assert j.defer_until_s == 1234.5
     view = next(v for v in sim.snapshot(0.0).jobs if v.jid == j.jid)
     assert view.defer_until_s == 1234.5
     assert view.held(0.0) and not view.held(2000.0)

@@ -1,0 +1,361 @@
+"""Parity between the vectorized decide path and its scalar oracles.
+
+The SoA fast path (batched SiteTrace/Forecaster/ForecastHorizon queries,
+``score_migrations``, the vectorized ``Policy.decide`` bodies) must emit
+*exactly* what the per-job/per-call scalar implementations emit — same
+Action lists, same floats — on arbitrary inputs.  The scalar oracles
+(``decide_scalar``, the per-site bisect queries) are kept precisely so
+these tests stay meaningful.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # clean environments: deterministic tests still run
+    HAS_HYPOTHESIS = False
+
+from repro.core.forecast import ForecastHorizon, OutageForecast, WindowForecast
+from repro.core.orchestrator import (
+    DeferToWindowPolicy, EnergyOnlyPolicy, FeasibilityAwarePolicy,
+    GridThrottlePolicy, PlanAheadPolicy, algorithm1_grid,
+    benefit_grid_arrays, feasibility_grid_arrays, pick_best_grid,
+    score_migrations,
+)
+from repro.core.state import ClusterState, JobView, SiteView
+from repro.core.traces import Forecaster, SiteTrace, Window, stack_traces
+
+GB = 1e9
+HOUR = 3600.0
+
+
+# ---------------------------------------------------------------------------
+# deterministic fixtures
+# ---------------------------------------------------------------------------
+
+
+def make_traces(seed=0, n_sites=4, days=3):
+    rng = np.random.default_rng(seed)
+    traces = []
+    for s in range(n_sites):
+        wins, t0 = [], 0.0
+        for _ in range(rng.integers(0, days * 2 + 1)):
+            gap = float(rng.uniform(0.5, 8.0)) * HOUR
+            dur = float(rng.uniform(0.5, 6.0)) * HOUR
+            wins.append(Window(t0 + gap, t0 + gap + dur))
+            t0 += gap + dur
+        traces.append(SiteTrace(s, wins))
+    return traces
+
+
+def make_horizon(seed=0, n_sites=4, with_outages=True):
+    rng = np.random.default_rng(seed + 100)
+    site_windows = []
+    for s in range(n_sites):
+        wins, t0 = [], 0.0
+        for _ in range(int(rng.integers(0, 5))):
+            gap = float(rng.uniform(0.5, 8.0)) * HOUR
+            dur = float(rng.uniform(0.5, 6.0)) * HOUR
+            wins.append(WindowForecast(t0 + gap, t0 + gap + dur))
+            t0 += gap + dur
+        site_windows.append(tuple(wins))
+    outages = []
+    if with_outages:
+        for _ in range(int(rng.integers(0, 12))):
+            src = int(rng.integers(-1, n_sites))
+            dst = int(rng.integers(0, n_sites)) if src >= 0 else -1
+            if src == dst:
+                continue
+            a = float(rng.uniform(0, 40)) * HOUR
+            outages.append(OutageForecast(
+                a, a + float(rng.uniform(0.5, 4.0)) * HOUR,
+                src if src >= 0 else -1, dst, float(rng.uniform(0, 2e9))))
+    outages.sort(key=lambda o: (o.start_s, o.src, o.dst))
+    return ForecastHorizon(horizon_s=24 * HOUR, sigma_s=0.0,
+                           site_windows=tuple(site_windows),
+                           outages=tuple(outages))
+
+
+QUERY_TS = [0.0, 0.3 * HOUR, 1.0 * HOUR, 5.7 * HOUR, 12.0 * HOUR,
+            25.1 * HOUR, 47.9 * HOUR, 80.0 * HOUR]
+
+
+# ---------------------------------------------------------------------------
+# batched SiteTrace / Forecaster queries
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_trace_stack_point_queries_match_scalar(seed):
+    traces = make_traces(seed)
+    stack = stack_traces(traces)
+    for t in QUERY_TS:
+        act, rem, nxt = stack.point(t)
+        for s, tr in enumerate(traces):
+            assert bool(act[s]) == tr.active(t)
+            assert float(rem[s]) == tr.remaining(t)
+            nw = tr.next_window(t)
+            want = nw.start_s if nw is not None else float("inf")
+            assert float(nxt[s]) == want
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_trace_stack_renewable_seconds_matches_scalar(seed):
+    traces = make_traces(seed)
+    stack = stack_traces(traces)
+    rng = np.random.default_rng(seed)
+    sites = rng.integers(0, len(traces), 64)
+    t0s = rng.uniform(0, 60 * HOUR, 64)
+    t1 = 61 * HOUR
+    got = stack.renewable_seconds(sites, t0s, t1)
+    for k in range(64):
+        want = traces[int(sites[k])].renewable_seconds(float(t0s[k]), t1)
+        # cumulative-difference formulation: equal to float round-off
+        assert got[k] == pytest.approx(want, abs=1e-6)
+
+
+def test_forecaster_batched_draws_match_scalar_stream():
+    traces = make_traces(3)
+    t_seq = [0.0, 2 * HOUR, 7 * HOUR, 30 * HOUR]
+    fa = Forecaster(traces, sigma_s=900.0, seed=11)
+    fb = Forecaster(traces, sigma_s=900.0, seed=11)
+    for t in t_seq:
+        # scalar: per-site calls in site order (the old snapshot loop)
+        scalar_rem = [fa.remaining(s, t) for s in range(len(traces))]
+        scalar_nxt = [fa.next_window_start(s, t) for s in range(len(traces))]
+        act, rem, nxt = fb.snapshot_all(t)
+        assert [float(x) for x in rem] == scalar_rem
+        assert [float(x) for x in nxt] == scalar_nxt
+        assert [bool(a) for a in act] == [traces[s].active(t)
+                                         for s in range(len(traces))]
+
+
+# ---------------------------------------------------------------------------
+# batched ForecastHorizon grids
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_forecast_grids_match_scalar_queries(seed):
+    fc = make_horizon(seed)
+    n = fc.n_sites
+    for t in QUERY_TS:
+        o_start, o_end, o_cap = fc.next_outage_grid(t)
+        after = fc.next_outage_start_after_grid(t)
+        up = fc.next_uplink_outage_grid(t)
+        nws = fc.next_window_start_grid(t)
+        cn = fc.window_open_or_next_start_grid(t)
+        for s in range(n):
+            assert float(nws[s]) == fc.next_window_start_s(s, t)
+            w = fc.next_window(s, t)
+            assert float(cn[s]) == (w.start_s if w is not None
+                                    else float("inf"))
+            assert float(up[s]) == fc.next_uplink_outage_start_s(s, t)
+            for d in range(n):
+                o = fc.next_outage(s, d, t)
+                if o is None:
+                    assert float(o_start[s, d]) == float("inf")
+                else:
+                    assert float(o_start[s, d]) == o.start_s
+                    assert float(o_end[s, d]) == o.end_s
+                    assert float(o_cap[s, d]) == o.capacity_bps
+                assert float(after[s, d]) == fc.next_outage_start_after(
+                    s, d, t)
+
+
+def test_forecast_grids_fresh_after_reveal_edge():
+    """Regression: an epoch-cached grid queried exactly at a reveal edge
+    (t == start - horizon, where `start < t + horizon` is still False)
+    must not serve that pre-reveal value for later ticks in the same
+    epoch.  Orch ticks land exactly on hour-aligned edges all the time."""
+    w = WindowForecast(30 * HOUR, 33 * HOUR)
+    fc = ForecastHorizon(horizon_s=24 * HOUR, sigma_s=0.0,
+                         site_windows=((w,),), outages=())
+    t_edge = 6 * HOUR  # == start - horizon: window NOT yet visible
+    assert float(fc.next_window_start_grid(t_edge)[0]) == float("inf")
+    assert fc.next_window_start_s(0, t_edge) == float("inf")
+    t_in = t_edge + 600.0  # same epoch, window now inside the lookahead
+    assert float(fc.next_window_start_grid(t_in)[0]) == 30 * HOUR
+    assert fc.next_window_start_s(0, t_in) == 30 * HOUR
+    assert float(fc.window_open_or_next_start_grid(t_in)[0]) == 30 * HOUR
+    # outage grids: same shape of bug, via the dual-keyed cache
+    o = OutageForecast(30 * HOUR, 31 * HOUR, 0, 1, 1e9)
+    fo = ForecastHorizon(horizon_s=24 * HOUR, sigma_s=0.0,
+                         site_windows=((), ()), outages=(o,))
+    assert float(fo.next_outage_grid(t_edge)[0][0, 1]) == float("inf")
+    assert float(fo.next_outage_grid(t_in)[0][0, 1]) == 30 * HOUR
+    assert float(fo.next_outage_start_after_grid(t_edge)[0, 1]) == float("inf")
+    assert float(fo.next_outage_start_after_grid(t_in)[0, 1]) == 30 * HOUR
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_forecast_grids_match_scalar_on_shared_horizon_sequences(seed):
+    """Parity on ONE horizon object queried at an increasing tick
+    sequence that includes exact breakpoints — the access pattern the
+    simulator produces and the epoch caches must survive."""
+    fc = make_horizon(seed)
+    ts = sorted(set(
+        [o.start_s for o in fc.outages]
+        + [o.end_s for o in fc.outages]
+        + [o.start_s - fc.horizon_s for o in fc.outages]
+        + [w.start_s - fc.horizon_s for wins in fc.site_windows for w in wins]
+        + [w.start_s for wins in fc.site_windows for w in wins]
+        + list(np.linspace(0, 50 * HOUR, 23))))
+    ts = [t for t in ts if t >= 0] + [t + 1.0 for t in ts if t >= 0]
+    for t in sorted(ts):
+        nws = fc.next_window_start_grid(t)
+        after = fc.next_outage_start_after_grid(t)
+        o_start, _, _ = fc.next_outage_grid(t)
+        for s in range(fc.n_sites):
+            assert float(nws[s]) == fc.next_window_start_s(s, t), t
+            for d in range(fc.n_sites):
+                o = fc.next_outage(s, d, t)
+                want = o.start_s if o is not None else float("inf")
+                assert float(o_start[s, d]) == want, (t, s, d)
+                assert float(after[s, d]) == fc.next_outage_start_after(
+                    s, d, t), (t, s, d)
+
+
+def test_feasibility_grid_arrays_matches_algorithm1_grid():
+    jobs = [JobView(i, i % 3, float(sz) * GB, 8 * HOUR)
+            for i, sz in enumerate((2, 30, 250, 7, 90))]
+    sites = [SiteView(s, 4, s, 1, s % 2 == 0, [0.0, 2.5 * HOUR, 9 * HOUR][s])
+             for s in range(3)]
+    state = ClusterState.build(0.0, jobs, sites, nic_bps=1e9)
+    for eps, sigma in ((0.0, 0.0), (0.05, 900.0)):
+        ok_ref, tt_ref = algorithm1_grid(state, jobs, alpha=0.1, eps=eps,
+                                         forecast_sigma_s=sigma)
+        soa = state.soa
+        cand = np.arange(len(jobs))
+        ok, tt = feasibility_grid_arrays(
+            soa.ckpt_bytes[cand][:, None], soa.t_load_s[cand][:, None],
+            state.bandwidth_bps[soa.site[cand], :],
+            state.site_window_s[None, :], alpha=0.1, eps=eps,
+            forecast_sigma_s=sigma)
+        assert np.array_equal(np.asarray(ok_ref, bool), ok)
+        assert np.array_equal(np.asarray(tt_ref), tt)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_score_migrations_equals_composed_kernels(seed):
+    """The fused hot-path kernel must stay in lockstep with its readable
+    building blocks (feasibility_grid_arrays + benefit_grid_arrays +
+    pick_best_grid) — this is what keeps the three copies of the stage-2
+    arithmetic from drifting apart."""
+    state = random_state(seed, with_forecast=False)
+    soa = state.soa
+    cand = np.flatnonzero((soa.state == 1) & soa.eligible)
+    if not len(cand):
+        return
+    bw = state.bandwidth_bps[soa.site[cand], :]
+    kw = dict(alpha=0.1, gamma=1.0, beta=1.0, queue_penalty_s=7200.0,
+              min_benefit_s=1500.0)
+    ok, tt, dest0 = score_migrations(state, cand, bw, **kw)
+    ok_ref, tt_ref = feasibility_grid_arrays(
+        soa.ckpt_bytes[cand][:, None], soa.t_load_s[cand][:, None], bw,
+        state.site_window_s[None, :], alpha=kw["alpha"])
+    benefit, t_cost = benefit_grid_arrays(
+        state, cand, tt_ref, gamma=kw["gamma"], beta=kw["beta"],
+        queue_penalty_s=kw["queue_penalty_s"])
+    valid = (ok_ref
+             & (np.arange(state.n_sites)[None, :] != soa.site[cand][:, None])
+             & (benefit > np.maximum(t_cost, kw["min_benefit_s"])))
+    dest_ref = pick_best_grid(benefit, tt_ref, valid) if valid.any() else None
+    assert np.array_equal(ok, ok_ref) and np.array_equal(tt, tt_ref)
+    if dest_ref is None:
+        assert dest0 is None
+    else:
+        assert np.array_equal(dest0, dest_ref)
+
+
+# ---------------------------------------------------------------------------
+# vectorized Policy.decide == decide_scalar
+# ---------------------------------------------------------------------------
+
+POLICIES = [
+    FeasibilityAwarePolicy(),
+    FeasibilityAwarePolicy(min_benefit_s=0.0),
+    FeasibilityAwarePolicy(eps=0.05, forecast_sigma_s=900.0),
+    EnergyOnlyPolicy(),
+    GridThrottlePolicy(power_frac=0.5),
+    DeferToWindowPolicy(),
+    PlanAheadPolicy(),
+    PlanAheadPolicy(min_benefit_s=0.0, arrival_margin_s=0.0),
+]
+
+
+def random_state(seed, with_forecast=True, t=1.7 * HOUR):
+    rng = np.random.default_rng(seed)
+    n_sites = int(rng.integers(2, 6))
+    sites = []
+    for s in range(n_sites):
+        green = bool(rng.random() < 0.5)
+        sites.append(SiteView(
+            sid=s, slots=int(rng.integers(1, 5)), busy=int(rng.integers(0, 5)),
+            queued=int(rng.integers(0, 4)), renewable_active=green,
+            window_remaining_s=float(rng.uniform(0, 9 * HOUR)) if green else 0.0,
+            incoming=int(rng.integers(0, 2)),
+            next_window_start_s=(t + float(rng.uniform(0, 9 * HOUR))
+                                 if rng.random() < 0.8 else float("inf")),
+        ))
+    jobs = []
+    for j in range(int(rng.integers(0, 14))):
+        jobs.append(JobView(
+            jid=j, site=int(rng.integers(0, n_sites)),
+            ckpt_bytes=float(rng.uniform(0.1, 400)) * GB,
+            remaining_compute_s=float(rng.uniform(600, 24 * HOUR)),
+            state=("queued", "running", "paused")[int(rng.integers(0, 3))],
+            eligible=bool(rng.random() < 0.8),
+            power_frac=float(rng.choice([1.0, 0.5])),
+            defer_until_s=(t + float(rng.uniform(-1, 2)) * HOUR
+                           if rng.random() < 0.3 else -1e18),
+        ))
+    transfers = tuple(
+        (int(rng.integers(0, n_sites)), int(rng.integers(0, n_sites)))
+        for _ in range(int(rng.integers(0, 3))))
+    fc = make_horizon(seed, n_sites=n_sites) if with_forecast else None
+    return ClusterState.build(t, jobs, sites, nic_bps=2e9,
+                              transfers=transfers, forecast=fc)
+
+
+@pytest.mark.parametrize("with_forecast", [True, False])
+@pytest.mark.parametrize("seed", range(30))
+def test_vectorized_decide_matches_scalar_oracle(seed, with_forecast):
+    state = random_state(seed, with_forecast)
+    for pol in POLICIES:
+        got = pol.decide(state)
+        want = pol.decide_scalar(state)
+        assert got == want, (pol.name, got, want)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=120, deadline=None)
+    @given(st.integers(0, 10_000), st.booleans(),
+           st.floats(min_value=0.0, max_value=100 * HOUR))
+    def test_vectorized_decide_matches_scalar_oracle_hypothesis(
+            seed, with_forecast, t):
+        state = random_state(seed, with_forecast, t=t)
+        for pol in POLICIES:
+            assert pol.decide(state) == pol.decide_scalar(state), pol.name
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 10_000),
+           st.floats(min_value=0.0, max_value=60 * HOUR),
+           st.floats(min_value=0.0, max_value=60 * HOUR))
+    def test_trace_stack_matches_scalar_hypothesis(seed, t0, dt):
+        traces = make_traces(seed % 50, n_sites=3)
+        stack = stack_traces(traces)
+        act, rem, nxt = stack.point(t0)
+        for s, tr in enumerate(traces):
+            assert bool(act[s]) == tr.active(t0)
+            assert float(rem[s]) == tr.remaining(t0)
+        got = stack.renewable_seconds(
+            np.arange(len(traces)), np.full(len(traces), t0), t0 + dt)
+        for s, tr in enumerate(traces):
+            assert got[s] == pytest.approx(
+                tr.renewable_seconds(t0, t0 + dt), abs=1e-6)
+else:  # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_vectorized_decide_matches_scalar_oracle_hypothesis():
+        pass
