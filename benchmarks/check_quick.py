@@ -69,6 +69,18 @@ def main() -> int:
             print(f"[check_quick] FAIL {policy}: completed "
                   f"{cur['completed']} != baseline {b['completed']}")
             failed = True
+        # grid-signal accounting is seed-deterministic, but the trace
+        # generator goes through libm (exp) and numpy Gaussian draws, so
+        # cross-machine float drift at the last digits is possible — gate
+        # at a 0.1% band: accounting regressions move these numbers by
+        # percents, platform noise by parts per million
+        if "grid_gco2" in b:
+            got = cur.get("grid_gco2")
+            if got is None or abs(got - b["grid_gco2"]) > max(
+                    1e-3 * abs(b["grid_gco2"]), 0.2):
+                print(f"[check_quick] FAIL {policy}: grid_gco2 "
+                      f"{got} != baseline {b['grid_gco2']} (0.1% band)")
+                failed = True
     # mini-sweep row: regression gate on the *summed in-simulator wall*
     # (machine-normalized; the pool wall is spawn/import-dominated and
     # tracks runner provisioning, not the code) plus exact determinism of

@@ -1,7 +1,10 @@
 """Generate the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from
-the dry-run artifacts.
+the dry-run artifacts, plus the §Sweep Monte-Carlo aggregate
+(``SweepResult.table()``: mean ± 95% CI per (scenario, policy) —
+the statistical view the single-seed tables cannot give).
 
   PYTHONPATH=src python -m benchmarks.gen_report [--tag baseline] > tables.md
+  PYTHONPATH=src python -m benchmarks.gen_report --section sweep
 """
 from __future__ import annotations
 
@@ -70,19 +73,38 @@ def roofline_table(recs):
     return "\n".join(lines)
 
 
+def sweep_section(fast: bool = True) -> str:
+    """The Monte-Carlo aggregate table (run live — sweeps are seconds,
+    not artifacts): SweepResult.table() over the policy-comparison grid,
+    fenced for markdown embedding."""
+    from benchmarks.table6_policy import sweep_summary
+
+    return "```\n" + sweep_summary(fast=fast) + "\n```"
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="baseline")
-    ap.add_argument("--section", default="both", choices=["dryrun", "roofline", "both"])
+    ap.add_argument("--section", default="both",
+                    choices=["dryrun", "roofline", "both", "sweep", "all"])
+    ap.add_argument("--full-sweep", action="store_true",
+                    help="sweep section at full (4-seed, 4-day) size")
     args = ap.parse_args()
+    if args.section == "sweep":
+        print("### Monte-Carlo sweep (mean ± 95% CI)\n")
+        print(sweep_section(fast=not args.full_sweep))
+        return
     recs = [r for r in load_records(args.tag) if r.get("status") == "OK"]
     recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
-    if args.section in ("dryrun", "both"):
+    if args.section in ("dryrun", "both", "all"):
         print("### Dry-run matrix\n")
         print(dryrun_table(recs))
-    if args.section in ("roofline", "both"):
+    if args.section in ("roofline", "both", "all"):
         print("\n### Roofline table\n")
         print(roofline_table(recs))
+    if args.section == "all":
+        print("\n### Monte-Carlo sweep (mean ± 95% CI)\n")
+        print(sweep_section(fast=not args.full_sweep))
 
 
 if __name__ == "__main__":

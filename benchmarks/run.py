@@ -61,10 +61,12 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
     headline ``paper-table6`` scenario, the forecast-driven ``plan-ahead``
     policy on ``forecastable-brownouts`` (per-link outage calendar +
     ForecastHorizon grids every tick) at the paper's 5 sites and at the
-    25-site fleet scale, plus a mini Monte-Carlo sweep (2 scenarios x 2
-    policies x 2 seeds through the process-pool engine).  Ticks/sec =
-    processed events per second under the next-event engine; ``decide_s``
-    = cumulative wall time inside ``Policy.decide``."""
+    25-site fleet scale, the signal-aware ``receding-horizon`` planner on
+    ``carbon-peaks`` (multi-window plan search + carbon accounting every
+    span), plus a mini Monte-Carlo sweep (2 scenarios x 2 policies x 2
+    seeds through the process-pool engine).  Ticks/sec = processed events
+    per second under the next-event engine; ``decide_s`` = cumulative
+    wall time inside ``Policy.decide``."""
     from repro.core import ClusterSimulator
     from repro.core.sweep import SweepSpec, run_sweep
 
@@ -77,6 +79,7 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
         ("plan-ahead", "forecastable-brownouts", "plan-ahead", None),
         ("plan-ahead-fleet", "forecastable-brownouts", "plan-ahead",
          FLEET_OVERRIDES),
+        ("receding-horizon", "carbon-peaks", "receding-horizon", None),
     ):
         best = None
         for _ in range(2):  # best-of-2: shave scheduler noise off the gate
@@ -90,6 +93,7 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
         print(f"[quick] {label}@{scenario}: {r.wall_time_s:.2f}s wall for "
               f"{r.ticks} ticks ({r.ticks_per_sec:.0f} ticks/sec, "
               f"decide {r.decide_s:.2f}s) | grid={r.grid_kwh:.1f} kWh "
+              f"gco2={r.grid_gco2:.0f} g cost=${r.grid_cost:.2f} "
               f"renew_frac={r.renewable_fraction:.2f} migrations={r.migrations} "
               f"completed={r.completed} rejected={r.rejected_actions}")
         print(f"quick_{label},{r.wall_time_s * 1e6:.0f},"
@@ -102,6 +106,8 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
             "decide_s": round(r.decide_s, 4),
             "grid_kwh": round(r.grid_kwh, 1),
             "renewable_kwh": round(r.renewable_kwh, 1),
+            "grid_gco2": round(r.grid_gco2, 1),
+            "grid_cost": round(r.grid_cost, 2),
             "migrations": r.migrations,
             "completed": r.completed,
             "rejected_actions": r.rejected_actions,

@@ -18,10 +18,10 @@ PAPER = {
     "oracle": (0.40, 0.79, "<2%"),
 }
 
-# the paper's Table VI plus the beyond-paper plan-ahead row (forecast-driven
-# Pause/Defer/Migrate plans; no published reference numbers)
+# the paper's Table VI plus the beyond-paper plan-ahead and the
+# signal-aware receding-horizon rows (no published reference numbers)
 POLICIES = ("static", "energy-only", "feasibility-aware", "oracle",
-            "plan-ahead")
+            "plan-ahead", "receding-horizon")
 
 
 def one(rows, label):
@@ -29,7 +29,8 @@ def one(rows, label):
     for r in rows:
         pe, pj, po = PAPER.get(r["policy"], ("-", "-", "-"))
         out.append([
-            r["policy"], r["nonrenew_energy"], r["jct"],
+            r["policy"], r["nonrenew_energy"], r["grid_gco2"],
+            r["grid_cost"], r["jct"],
             f"{r['migration_overhead']:.1%}", f"{r['stall_overhead']:.1%}",
             f"{r['renewable_frac']:.1%}", r["rejected_actions"],
             f"{r['ticks_per_sec']:.0f}", f"{r['decide_s']:.3f}",
@@ -38,11 +39,28 @@ def one(rows, label):
     print(f"--- {label} ---")
     # 'rej' (rejected actions) makes action-validity regressions visible in
     # the table; 'ticks/s' tracks engine throughput and 'decide_s' the
-    # cumulative policy overhead alongside the metrics
-    print(table(out, ["policy", "nonrenew", "JCT", "migr-ovh", "stalls",
-                      "renew%", "rej", "ticks/s", "decide_s",
-                      "paper(e/jct/ovh)"]))
+    # cumulative policy overhead; 'gCO2'/'cost' are the grid-signal
+    # accounting normalized to static (grid kWh are not interchangeable —
+    # a dirty-peak kWh is not a curtailed-noon kWh)
+    print(table(out, ["policy", "nonrenew", "gCO2", "cost", "JCT",
+                      "migr-ovh", "stalls", "renew%", "rej", "ticks/s",
+                      "decide_s", "paper(e/jct/ovh)"]))
     return {r["policy"]: r for r in rows}
+
+
+def sweep_summary(fast: bool = False) -> str:
+    """The Monte-Carlo view of the same comparison: mean ± 95% CI per
+    (scenario, policy) through ``SweepResult.table()`` — the single-seed
+    table above cannot say whether an ordering is noise."""
+    from repro.core.sweep import SweepSpec, run_sweep
+
+    spec = SweepSpec(
+        scenarios=("paper-table6", "carbon-peaks"),
+        policies=("feasibility-aware", "plan-ahead", "receding-horizon"),
+        seeds=tuple(range(2 if fast else 4)),
+        overrides=dict(days=2 if fast else 4, n_jobs=60 if fast else 120))
+    sw = run_sweep(spec, keep_results=False)
+    return sw.table()
 
 
 def run(fast: bool = False):
@@ -68,6 +86,8 @@ def run(fast: bool = False):
             policy_configs={"feasibility-aware": FeasibilityConfig(
                 eps=0.05, forecast_sigma_s=900.0)})),
             "WAN 1 Gbps + stochastic feasibility (eps=0.05)")
+        print("--- Monte-Carlo sweep (mean ± 95% CI over seeds) ---")
+        print(sweep_summary(fast))
     fa10, fa1 = r10["feasibility-aware"], r1["feasibility-aware"]
     eo1, fs1 = r1["energy-only"], rs["feasibility-aware"]
     emit(

@@ -19,11 +19,16 @@ from repro.core.state import (  # noqa: F401
 from repro.core.orchestrator import (  # noqa: F401
     DeferConfig, DeferToWindowPolicy, EnergyOnlyPolicy, FeasibilityAwarePolicy,
     FeasibilityConfig, GridThrottlePolicy, OraclePolicy, OrchestratorContext,
-    PlanAheadConfig, PlanAheadPolicy, Policy, PolicyConfig, StaticPolicy,
+    PlanAheadConfig, PlanAheadPolicy, Policy, PolicyConfig,
+    RecedingHorizonConfig, RecedingHorizonPolicy, StaticPolicy,
     ThrottleConfig, available_policies, make_policy, register_policy,
 )
 from repro.core.forecast import (  # noqa: F401
     ForecastHorizon, OutageForecast, WindowForecast,
+)
+from repro.core.signals import (  # noqa: F401
+    CurtailRequest, GridSignals, SignalProfile, SignalStack,
+    curtail_requests_from_carbon, generate_signals, grid_signal_integral,
 )
 from repro.core.wan import (  # noqa: F401
     WanProfile, WanTopology, hub_spoke_links, partitioned_links,

@@ -15,7 +15,14 @@ The reactive snapshot fields (``SiteView.window_remaining_s``,
   * per-link brownout *outage* forecasts derived from a
     :class:`~repro.core.wan.WanTopology` calendar — brownout calendars are
     schedules (grid-operator curtailment notices, maintenance windows), so
-    they are forecast exactly, with the degraded capacity attached.
+    they are forecast exactly, with the degraded capacity attached, and
+  * grid-signal forecasts — the run's :class:`~repro.core.signals.
+    GridSignals` carbon/price stacks plus demand-response *curtail-request*
+    events.  Day-ahead carbon and price schedules are published by grid
+    operators, so (like brownout calendars) they are forecast exactly;
+    the planning queries (``grid_carbon_g``, ``carbon_grid``,
+    ``curtail_frac_grid``) are what lets the ``receding-horizon`` policy
+    score multi-window plans in grams instead of grid-seconds.
 
 Window noise is **hash-deterministic**: each (seed, site) pair seeds its
 own stream and jitters that site's windows in trace order, so every
@@ -38,6 +45,8 @@ from functools import cached_property
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+from repro.core.signals import CurtailRequest, GridSignals
 
 HOUR = 3600.0
 DAY = 24 * HOUR
@@ -116,6 +125,10 @@ class ForecastHorizon:
     sigma_s: float
     site_windows: Tuple[Tuple[WindowForecast, ...], ...]
     outages: Tuple[OutageForecast, ...]  # sorted by start_s
+    # grid-signal forecasts (carbon/price stacks + curtail-request events);
+    # None when the run carries no signals — every signal query then
+    # degrades to the zero-signal answer (0 g/kWh, $0, no DR spans)
+    signals: Optional[GridSignals] = None
 
     @property
     def n_sites(self) -> int:
@@ -165,6 +178,141 @@ class ForecastHorizon:
         t1 = min(t1, t0 + self.horizon_s)
         return sum(w.overlap_s(t0, t1) for w in self.site_windows[site]
                    if w.end_s > t0 and w.start_s < t1)
+
+    # -- grid-signal queries -------------------------------------------------
+    #
+    # Signals are exact (day-ahead schedules, like brownout calendars);
+    # the integrals extend past ``t + horizon_s`` by the stacks' constant
+    # extrapolation, but renewable-window *credit* against them is gated
+    # at the lookahead like every other window query — beyond the horizon
+    # a plan must assume grid power.
+
+    def carbon_value(self, site: int, t: float) -> float:
+        """Forecast carbon intensity (gCO2/kWh) at ``t`` (0 w/o signals)."""
+        sig = self.signals
+        return sig.carbon.value(site, t) if sig is not None else 0.0
+
+    def carbon_grid(self, t: float) -> np.ndarray:
+        """(n_sites,) batched :meth:`carbon_value` (read-only view)."""
+        sig = self.signals
+        if sig is not None:
+            return sig.carbon.value_grid(t)
+        return np.zeros(self.n_sites)
+
+    def price_value(self, site: int, t: float) -> float:
+        """Forecast grid price ($/kWh) at ``t`` (0 w/o signals)."""
+        sig = self.signals
+        return sig.price.value(site, t) if sig is not None else 0.0
+
+    def price_grid(self, t: float) -> np.ndarray:
+        sig = self.signals
+        if sig is not None:
+            return sig.price.value_grid(t)
+        return np.zeros(self.n_sites)
+
+    def carbon_integral(self, site: int, t0: float, t1: float) -> float:
+        """``∫ carbon dt`` over the whole span (grams·s/kWh·s — multiply
+        by kW/3600 for grams); the transfer-leg cost term (transfer power
+        is billed entirely to grid)."""
+        sig = self.signals
+        return sig.carbon.integral(site, t0, t1) if sig is not None else 0.0
+
+    def price_integral(self, site: int, t0: float, t1: float) -> float:
+        """``∫ price dt`` over the whole span — the transfer-leg $ term
+        (no renewable credit: transfer power is billed entirely to grid)."""
+        sig = self.signals
+        return sig.price.integral(site, t0, t1) if sig is not None else 0.0
+
+    def _grid_signal_integral(self, stack, site: int, t0: float,
+                              t1: float) -> float:
+        """``∫ signal dt`` over the forecast NON-renewable portion of
+        ``[t0, t1]``: the total integral minus the overlap with forecast
+        windows, window credit gated at ``t0 + horizon_s``."""
+        if t1 <= t0:
+            return 0.0
+        tot = stack.integral(site, t0, t1)
+        limit = min(t1, t0 + self.horizon_s)
+        for w in self.site_windows[site]:
+            if w.end_s > t0 and w.start_s < limit:
+                tot -= stack.integral(site, max(t0, w.start_s),
+                                      min(limit, w.end_s))
+        return tot
+
+    def grid_carbon_g(self, site: int, t0: float, t1: float,
+                      p_kw: float) -> float:
+        """Forecast gCO2 of drawing ``p_kw`` at ``site`` over ``[t0, t1]``
+        with renewable windows covering their overlap for free — the
+        planning analogue of the simulator's per-span accounting.  With no
+        signals, degrades to ``p_kw``-weighted *grid seconds* (constant
+        carbon 1), so signal-free plans still minimize grid time."""
+        sig = self.signals
+        if sig is None:
+            green = self.green_seconds(site, t0, t1)
+            return p_kw / HOUR * max(0.0, (t1 - t0) - green)
+        return p_kw / HOUR * self._grid_signal_integral(
+            sig.carbon, site, t0, t1)
+
+    def grid_price_usd(self, site: int, t0: float, t1: float,
+                       p_kw: float) -> float:
+        """Forecast $ cost of drawing ``p_kw`` at ``site`` over
+        ``[t0, t1]`` net of renewable-window overlap (0 w/o signals)."""
+        sig = self.signals
+        if sig is None:
+            return 0.0
+        return p_kw / HOUR * self._grid_signal_integral(
+            sig.price, site, t0, t1)
+
+    # -- demand-response curtail requests ------------------------------------
+    @cached_property
+    def _site_curtails(self) -> Tuple[Tuple[CurtailRequest, ...], ...]:
+        by: List[List[CurtailRequest]] = [[] for _ in range(self.n_sites)]
+        if self.signals is not None:
+            for c in self.signals.curtailments:
+                if 0 <= c.site < self.n_sites:
+                    by[c.site].append(c)
+        return tuple(tuple(sorted(v, key=lambda c: c.start_s)) for v in by)
+
+    def active_curtail(self, site: int, t: float) -> Optional[CurtailRequest]:
+        """The demand-response request covering ``t`` at ``site`` (None
+        when the operator is not asking for load shed right now)."""
+        for c in self._site_curtails[site]:
+            if c.start_s <= t < c.end_s:
+                return c
+            if c.start_s > t:
+                break
+        return None
+
+    def curtail_frac_grid(self, t: float) -> np.ndarray:
+        """(n_sites,) requested power cap at ``t`` (1.0 where no active
+        curtail request) — the batched :meth:`active_curtail`.  Cached per
+        curtail-edge epoch; treat as read-only."""
+        def compute():
+            out = np.ones(self.n_sites)
+            for s, cs in enumerate(self._site_curtails):
+                for c in cs:
+                    if c.start_s <= t < c.end_s:
+                        out[s] = c.power_frac
+                        break
+                    if c.start_s > t:
+                        break
+            return out
+
+        key = ("cf", bisect.bisect_right(self._curtail_edges, t))
+        return self._cached_grid(key, compute)
+
+    @cached_property
+    def _curtail_edges(self) -> List[float]:
+        return sorted({e for cs in self._site_curtails for c in cs
+                       for e in (c.start_s, c.end_s)})
+
+    def next_curtail_start_s(self, site: int, t: float) -> float:
+        """First curtail-request start strictly after ``t`` at ``site``
+        (inf when none inside the lookahead)."""
+        limit = t + self.horizon_s
+        for c in self._site_curtails[site]:
+            if c.start_s > t:
+                return c.start_s if c.start_s < limit else float("inf")
+        return float("inf")
 
     # -- WAN outage queries --------------------------------------------------
     @cached_property
@@ -425,12 +573,15 @@ class ForecastHorizon:
         traces: Sequence,
         *,
         wan=None,
+        signals: Optional[GridSignals] = None,
         horizon_s: float = DEFAULT_HORIZON_S,
         sigma_s: float = 0.0,
         seed: int = 0,
     ) -> "ForecastHorizon":
         """Materialize the forecast from site traces (+ optionally a
-        :class:`~repro.core.wan.WanTopology` brownout calendar).
+        :class:`~repro.core.wan.WanTopology` brownout calendar and the
+        run's :class:`~repro.core.signals.GridSignals` — signal forecasts
+        are exact day-ahead schedules, attached as-is).
 
         Window edges get i.i.d. Gaussian jitter N(0, sigma_s²) from a
         per-(seed, site) stream drawn in trace order — deterministic and
@@ -484,10 +635,11 @@ class ForecastHorizon:
                                 h0 * HOUR, h1 * HOUR, src, dst, cap))
         outages.sort(key=lambda o: (o.start_s, o.src, o.dst))
         return cls(horizon_s=float(horizon_s), sigma_s=float(sigma_s),
-                   site_windows=tuple(site_windows), outages=tuple(outages))
+                   site_windows=tuple(site_windows), outages=tuple(outages),
+                   signals=signals)
 
 
 __all__ = [
-    "DEFAULT_HORIZON_S", "ForecastHorizon", "OutageForecast",
-    "WindowForecast",
+    "DEFAULT_HORIZON_S", "CurtailRequest", "ForecastHorizon",
+    "OutageForecast", "WindowForecast",
 ]

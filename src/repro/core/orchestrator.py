@@ -31,6 +31,10 @@ Built-ins:
                     — Algorithm 1 hardened against forecast link outages,
                     Pause-for-window sequences, pre-emptive evacuation
                     ahead of uplink brownouts, horizon-bounded Defer
+  receding-horizon  beyond-paper: signal-aware multi-window plan search —
+                    every tick, stay/park(k)/migrate(d) branches scored in
+                    forecast gCO2 (grid-signal stacks), demand-response
+                    throttling through carbon peaks and curtail requests
 """
 from __future__ import annotations
 
@@ -82,6 +86,23 @@ class ThrottleConfig(PolicyConfig):
 @dataclass(frozen=True)
 class DeferConfig(PolicyConfig):
     max_wait_s: float = 4 * 3600.0  # never hold a queued job longer than this
+
+
+@dataclass(frozen=True)
+class RecedingHorizonConfig(PolicyConfig):
+    """Knobs for the signal-aware receding-horizon planner."""
+
+    alpha: float = fz.ALPHA
+    plan_windows: int = 4  # K: how many future windows a plan search tries
+    delay_cost_g_per_s: float = 0.01  # gCO2-equivalent per second of delay
+    min_benefit_g: float = 60.0  # hysteresis: act only for real gram wins
+    min_park_compute_s: float = 1800.0  # don't park nearly-done jobs
+    max_park_s: float = 12 * 3600.0  # Pause-plan lookahead bound
+    max_wait_s: float = 6 * 3600.0  # Defer bound for queued jobs
+    arrival_margin_s: float = 1800.0  # forecast-noise margin on arrivals
+    peak_threshold_g: float = 430.0  # Throttle grid compute above this
+    dr_power_frac: float = 0.3  # throttle level during peaks / DR spans
+    price_weight_g_per_usd: float = 0.0  # >0 folds $ into the objective
 
 
 @dataclass(frozen=True)
@@ -927,6 +948,337 @@ class PlanAheadPolicy(Policy):
         return out
 
 
+@register_policy("receding-horizon", aliases=("receding", "rh"),
+                 config=RecedingHorizonConfig)
+@dataclass
+class RecedingHorizonPolicy(Policy):
+    """Signal-aware receding-horizon planner: every tick, a small
+    enumerated *multi-window plan search* per job, scored in forecast
+    gCO2 (``state.forecast`` signal stacks) instead of grid-seconds —
+    the replacement for plan-ahead's greedy per-tick choice the ROADMAP
+    called for.
+
+    For each grid-powered running job the planner enumerates branches:
+
+      * **stay** — run to completion in place; cost = forecast gCO2 of
+        the grid portion of ``[t, t + rem]``;
+      * **park(k)** — Pause now, resume at the k-th forecast window
+        (k < ``plan_windows``, start within ``max_park_s``); cost = gCO2
+        of running from the window start plus ``delay_cost_g_per_s`` per
+        second of completion delay;
+      * **migrate(d)** — Algorithm-1-feasible destinations only, with
+        plan-ahead's post-admission arrival check; cost = transfer-leg
+        carbon at the source plus the run cost at ``d`` from arrival
+        plus the delay penalty.
+
+    The cheapest branch wins (ties keep the earlier-enumerated branch:
+    stay, then parks by window order, then destinations by sid) and only
+    a ``min_benefit_g`` improvement over *stay* triggers an action —
+    re-planned from scratch every tick against the sliding forecast
+    (receding horizon), so a plan that stops paying is abandoned, not
+    followed.  Paused jobs re-run the same search (Resume when *stay*
+    wins or the site turned green — no stranding); queued jobs at dark
+    sites Defer to the cheapest of the next ``plan_windows`` windows
+    (which may skip a short dirty-tail window for a cleaner later one).
+    Finally, running jobs on grid power are Throttled to
+    ``dr_power_frac`` while the local carbon signal tops
+    ``peak_threshold_g`` — or to the requested cap during an active
+    demand-response curtail request — and restored to full power
+    otherwise: power and speed scale together, so throttling never
+    changes a job's total energy, it *shifts* the draw out of exactly
+    the hours the carbon accounting prices highest.
+
+    Degrades gracefully: without signals the cost helpers weight grid
+    time at a constant 1 (a grid-seconds minimizer); without a forecast
+    it only resumes stranded paused jobs.
+    """
+
+    alpha: float = fz.ALPHA
+    plan_windows: int = 4
+    delay_cost_g_per_s: float = 0.01
+    min_benefit_g: float = 60.0
+    min_park_compute_s: float = 1800.0
+    max_park_s: float = 12 * 3600.0
+    max_wait_s: float = 6 * 3600.0
+    arrival_margin_s: float = 1800.0
+    peak_threshold_g: float = 430.0
+    dr_power_frac: float = 0.3
+    price_weight_g_per_usd: float = 0.0
+
+    # ---- shared branch-cost helpers (both decide paths call exactly
+    # these, so cost floats are identical by construction) -------------------
+    def _run_cost_g(self, fc, site: int, t0: float, rem: float) -> float:
+        """gCO2-equivalent of running ``rem`` compute-seconds at ``site``
+        from ``t0`` (forecast windows cover their overlap for free)."""
+        g = fc.grid_carbon_g(site, t0, t0 + rem, fz.P_NODE_KW)
+        if self.price_weight_g_per_usd > 0.0:
+            g += self.price_weight_g_per_usd * fc.grid_price_usd(
+                site, t0, t0 + rem, fz.P_NODE_KW)
+        return g
+
+    def _park_branches(self, fc, site: int, rem: float, t: float,
+                       bound_s: float):
+        """``(cost, window_start)`` for waiting at ``site`` for each of
+        the next ``plan_windows`` forecast windows starting within
+        ``bound_s`` (reveal-gated at the forecast horizon), start-sorted."""
+        out = []
+        limit = t + min(bound_s, fc.horizon_s)
+        for w in fc.site_windows[site]:
+            if w.start_s <= t:
+                continue
+            if w.start_s > limit:
+                break
+            cost = (self._run_cost_g(fc, site, w.start_s, rem)
+                    + self.delay_cost_g_per_s * (w.start_s - t))
+            out.append((cost, w.start_s))
+            if len(out) >= self.plan_windows:
+                break
+        return out
+
+    def _should_stay_parked(self, fc, site: int, rem: float,
+                            t: float) -> bool:
+        """Re-planned park decision for an already-paused job: keep
+        waiting only while some park branch is still *strictly* cheaper
+        than resuming now (no margin — the asymmetric hysteresis band
+        that stops Pause/Resume flapping)."""
+        if rem < self.min_park_compute_s:
+            return False
+        stay = self._run_cost_g(fc, site, t, rem)
+        for cost, _start in self._park_branches(fc, site, rem, t,
+                                                self.max_park_s):
+            if cost < stay:
+                return True
+        return False
+
+    def _want_power(self, green: bool, curtail_frac: float,
+                    carbon_now: float) -> float:
+        """Demand-response power target: full inside windows; the
+        operator's cap during an active curtail request; throttled
+        through local carbon peaks; full otherwise."""
+        if green:
+            return 1.0
+        if curtail_frac < 1.0:
+            return curtail_frac
+        if carbon_now >= self.peak_threshold_g:
+            return self.dr_power_frac
+        return 1.0
+
+    def _plan_one(self, state: ClusterState, fc, jid: int, site: int,
+                  ckpt_bytes: float, rem: float, ok_row, window_s,
+                  free_slots, flows, reserved) -> Optional[Action]:
+        """The per-candidate plan search (stage 1).  ``ok_row`` is the
+        job's Algorithm-1 feasibility row; ``window_s``/``free_slots``
+        are per-site arrays.  Returns the winning first action (or None
+        for *stay*) and updates ``flows``/``reserved`` on a commit."""
+        t = state.t
+        stay = self._run_cost_g(fc, site, t, rem)
+        best_cost = float("inf")
+        best: Optional[Tuple] = None
+        if rem >= self.min_park_compute_s:
+            for cost, _start in self._park_branches(fc, site, rem, t,
+                                                    self.max_park_s):
+                if cost < best_cost:
+                    best_cost, best = cost, ("pause",)
+        for d in range(state.n_sites):
+            if d == site or not ok_row[d]:
+                continue
+            if free_slots[d] - reserved[d] <= 0:
+                continue
+            rate = state.post_admission_bps(site, d, flows)
+            if rate <= 0.0:
+                continue
+            t_arr = t + 8.0 * ckpt_bytes / rate
+            # plan-ahead's arrival checks: land inside the destination
+            # window with margin, before any forecast outage on the link
+            if t_arr + self.arrival_margin_s > t + float(window_s[d]):
+                continue
+            if fc.next_outage_start_after(site, d, t) < t_arr:
+                continue
+            transfer_g = fz.P_SYS_KW / 3600.0 * fc.carbon_integral(
+                site, t, t_arr)
+            if self.price_weight_g_per_usd > 0.0:
+                # the $ the simulator will bill for the transfer leg — the
+                # same weighting _run_cost_g applies to the run legs
+                transfer_g += (self.price_weight_g_per_usd
+                               * fz.P_SYS_KW / 3600.0
+                               * fc.price_integral(site, t, t_arr))
+            cost = (transfer_g
+                    + self._run_cost_g(fc, d, t_arr, rem)
+                    + self.delay_cost_g_per_s * (t_arr - t))
+            if cost < best_cost:
+                best_cost, best = cost, ("migrate", d)
+        if best is None or not best_cost < stay - self.min_benefit_g:
+            return None
+        if best[0] == "pause":
+            return Pause(jid)
+        d = best[1]
+        flows.append((site, d))
+        reserved[d] += 1
+        return Migrate(jid, d)
+
+    # ---- vectorized decide -------------------------------------------------
+    def decide(self, state: ClusterState) -> List[Action]:
+        """SoA fast path (emits exactly :meth:`decide_scalar`'s Action
+        list): candidate masks, feasibility and the demand-response
+        power targets are whole-grid numpy passes; the K-branch plan
+        search runs per surviving candidate through the shared cost
+        helpers (few candidates pass the masks on a typical tick)."""
+        t = state.t
+        fc = state.forecast
+        soa = state.soa
+        st = soa.state
+        out: List[Action] = []
+        acted: set = set()
+        m = len(soa)
+        if m == 0:
+            return out
+        green_j = state.site_renewable[soa.site]
+
+        # ---- stage 1: plan search for grid-powered running jobs
+        if fc is not None and soa.count(STATE_RUNNING):
+            cand = ((st == STATE_RUNNING) & soa.eligible
+                    & ~green_j).nonzero()[0]
+            if len(cand):
+                s_i = soa.site[cand]
+                ok, _tt = feasibility_grid_arrays(
+                    soa.ckpt_bytes[cand][:, None],
+                    soa.t_load_s[cand][:, None],
+                    state.bandwidth_bps[s_i, :],
+                    state.site_window_s[None, :], alpha=self.alpha)
+                W = state.site_window_s
+                free = state.site_free_slots
+                flows = list(state.transfers)
+                reserved = {s: 0 for s in range(state.n_sites)}
+                for k, i in enumerate(cand):
+                    act = self._plan_one(
+                        state, fc, int(soa.jids[i]), int(s_i[k]),
+                        float(soa.ckpt_bytes[i]), float(soa.remaining_s[i]),
+                        ok[k], W, free, flows, reserved)
+                    if act is not None:
+                        out.append(act)
+                        acted.add(act.jid)
+
+        # ---- stage 2: paused jobs — resume, or keep waiting (re-planned)
+        if soa.count(STATE_PAUSED):
+            paused = (st == STATE_PAUSED).nonzero()[0]
+            for i in paused:
+                jid = int(soa.jids[i])
+                if green_j[i] or fc is None or not self._should_stay_parked(
+                        fc, int(soa.site[i]), float(soa.remaining_s[i]), t):
+                    out.append(Resume(jid))
+
+        # ---- stage 3: queued jobs — Defer to the cheapest nearby window
+        if fc is not None and soa.count(STATE_QUEUED):
+            queued = ((st == STATE_QUEUED) & ~(soa.defer_until_s > t)
+                      & ~green_j).nonzero()[0]
+            for i in queued:
+                site = int(soa.site[i])
+                rem = float(soa.remaining_s[i])
+                stay = self._run_cost_g(fc, site, t, rem)
+                best_cost, best_start = float("inf"), None
+                for cost, start in self._park_branches(fc, site, rem, t,
+                                                       self.max_wait_s):
+                    if cost < best_cost:
+                        best_cost, best_start = cost, start
+                if best_start is not None and \
+                        best_cost < stay - self.min_benefit_g:
+                    out.append(Defer(int(soa.jids[i]), best_start))
+
+        # ---- stage 4: demand response — throttle through peaks/DR spans
+        if soa.count(STATE_RUNNING):
+            if fc is None:
+                carb = np.zeros(state.n_sites)
+                cfrac = np.ones(state.n_sites)
+            else:
+                carb = fc.carbon_grid(t)
+                cfrac = fc.curtail_frac_grid(t)
+            green_s = state.site_renewable
+            # one _want_power per site (n_sites is small), not a numpy
+            # re-implementation — a single copy of the target logic is
+            # what keeps the two decide paths in lockstep by construction
+            want_site = np.array([
+                self._want_power(bool(green_s[s]), float(cfrac[s]),
+                                 float(carb[s]))
+                for s in range(state.n_sites)])
+            want_j = want_site[soa.site]
+            mask = ((st == STATE_RUNNING)
+                    & (np.abs(soa.power_frac - want_j) > 1e-9))
+            for i in mask.nonzero()[0]:
+                jid = int(soa.jids[i])
+                if jid not in acted:
+                    out.append(Throttle(jid, float(want_j[i])))
+        return out
+
+    # ---- scalar oracle -----------------------------------------------------
+    def decide_scalar(self, state: ClusterState) -> List[Action]:
+        """The per-job reference implementation (parity oracle for
+        :meth:`decide`)."""
+        t = state.t
+        fc = state.forecast
+        out: List[Action] = []
+        acted: set = set()
+
+        # ---- stage 1: plan search for grid-powered running jobs
+        if fc is not None:
+            cands = [j for j in state.migratable()
+                     if not state.site(j.site).renewable_active]
+            if cands:
+                ok_grid, _tt = algorithm1_grid(state, cands, alpha=self.alpha)
+                window_s = [s.window_remaining_s for s in state.sites]
+                free_slots = [s.free_slots for s in state.sites]
+                flows = list(state.transfers)
+                reserved = {s.sid: 0 for s in state.sites}
+                for i, job in enumerate(cands):
+                    act = self._plan_one(
+                        state, fc, job.jid, job.site, job.ckpt_bytes,
+                        job.remaining_compute_s, ok_grid[i], window_s,
+                        free_slots, flows, reserved)
+                    if act is not None:
+                        out.append(act)
+                        acted.add(act.jid)
+
+        # ---- stage 2: paused jobs — resume, or keep waiting (re-planned)
+        for job in state.paused():
+            green = state.site(job.site).renewable_active
+            if green or fc is None or not self._should_stay_parked(
+                    fc, job.site, job.remaining_compute_s, t):
+                out.append(Resume(job.jid))
+
+        # ---- stage 3: queued jobs — Defer to the cheapest nearby window
+        if fc is not None:
+            for job in state.queued():
+                if job.held(t):
+                    continue
+                if state.site(job.site).renewable_active:
+                    continue
+                rem = job.remaining_compute_s
+                stay = self._run_cost_g(fc, job.site, t, rem)
+                best_cost, best_start = float("inf"), None
+                for cost, start in self._park_branches(fc, job.site, rem, t,
+                                                       self.max_wait_s):
+                    if cost < best_cost:
+                        best_cost, best_start = cost, start
+                if best_start is not None and \
+                        best_cost < stay - self.min_benefit_g:
+                    out.append(Defer(job.jid, best_start))
+
+        # ---- stage 4: demand response — throttle through peaks/DR spans
+        for job in state.running():
+            if job.jid in acted:
+                continue
+            green = state.site(job.site).renewable_active
+            if fc is None:
+                cfrac, carbon = 1.0, 0.0
+            else:
+                c = fc.active_curtail(job.site, t)
+                cfrac = c.power_frac if c is not None else 1.0
+                carbon = fc.carbon_value(job.site, t)
+            want = self._want_power(green, cfrac, carbon)
+            if abs(job.power_frac - want) > 1e-9:
+                out.append(Throttle(job.jid, want))
+        return out
+
+
 @register_policy("defer-to-window", config=DeferConfig)
 @dataclass
 class DeferToWindowPolicy(Policy):
@@ -971,7 +1323,8 @@ __all__ = [
     "EnergyOnlyPolicy", "FeasibilityAwarePolicy", "FeasibilityConfig",
     "GridThrottlePolicy", "JobView", "OraclePolicy", "OrchestratorContext",
     "PlanAheadConfig", "PlanAheadPolicy", "Policy", "PolicyConfig",
-    "SiteView", "StaticPolicy", "ThrottleConfig", "available_policies",
+    "RecedingHorizonConfig", "RecedingHorizonPolicy", "SiteView",
+    "StaticPolicy", "ThrottleConfig", "available_policies",
     "benefit_grid_arrays", "feasibility_grid_arrays", "make_policy",
     "pick_best_grid", "policy_config_cls", "register_policy",
 ]

@@ -22,6 +22,13 @@ Built-ins:
   partitioned-wan    two island fabrics joined by thin 0.25 Gbps links
   forecastable-brownouts  per-link brownout calendars readable through
                      state.forecast — the plan-ahead policy's home turf
+  carbon-peaks       hard duck-curve carbon intensity (evening ~700
+                     gCO2/kWh over a midday trough) — the
+                     receding-horizon policy's home turf
+  price-spread       wide per-site wholesale price spread; grid_cost
+                     separates policies the kWh columns cannot
+  demand-response    advisory curtail-request events during carbon peaks,
+                     honoured only by signal-aware policies
 
 The WAN half of a scenario is a :class:`repro.core.wan.WanProfile`
 (per-site NIC rates, per-link capacity matrix, fabric- or per-link-scoped
@@ -44,6 +51,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Union
 
+from repro.core.signals import SignalProfile
 from repro.core.traces import SiteTrace, TraceProfile, generate_trace
 from repro.core.wan import (  # noqa: F401  (WanProfile re-exported)
     WanProfile, WanTopology, hub_spoke_links, partitioned_links,
@@ -90,6 +98,7 @@ class Scenario:
     wan: WanProfile = field(default_factory=WanProfile)
     failures: FailureRegime = field(default_factory=FailureRegime)
     forecast: ForecastNoise = field(default_factory=ForecastNoise)
+    signals: SignalProfile = field(default_factory=SignalProfile)
 
     def sim_config(self, **overrides):
         """Materialize a ``SimConfig`` for this scenario (overrides win).
@@ -124,6 +133,7 @@ class Scenario:
             checkpoint_interval_s=self.failures.checkpoint_interval_s,
             forecast_sigma_s=self.forecast.sigma_s,
             forecast_horizon_s=self.forecast.horizon_s,
+            signals=self.signals,
         )
         kw.update(overrides)
         if "wan" not in overrides:
@@ -151,6 +161,16 @@ class Scenario:
         simulator, ``dryrun --plan`` and ``serve --green-route`` share."""
         return self.wan.build_topology(
             self.n_sites, self.days, self.seed if seed is None else seed)
+
+    def build_signals(self, seed: Optional[int] = None):
+        """Materialize the scenario's grid signals (carbon/price traces +
+        demand-response curtail requests) — identical to what the
+        simulator bills against for this scenario/seed."""
+        from repro.core.signals import generate_signals
+
+        return generate_signals(self.n_sites, self.days,
+                                seed=self.seed if seed is None else seed,
+                                profile=self.signals)
 
     def replace(self, **kw) -> "Scenario":
         return dataclasses.replace(self, **kw)
@@ -267,6 +287,49 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="carbon-peaks",
+    description="Hard duck curve: evening carbon peaks near 700 gCO2/kWh "
+                "over a deep midday solar trough, with windows spread "
+                "wide in phase.  Grid kWh are NOT interchangeable here — "
+                "a kWh at 19:00 emits 3x one at 13:00 — so signal-aware "
+                "planning (park across the peak, throttle through it, "
+                "migrate toward the cleanest feasible site) beats "
+                "plan-ahead's grid-second minimization on gCO2: the "
+                "receding-horizon policy's home turf.",
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    signals=SignalProfile(carbon_evening=400.0, carbon_morning=150.0,
+                          carbon_midday_dip=200.0, carbon_noise=12.0,
+                          carbon_site_spread=0.15),
+))
+
+register_scenario(Scenario(
+    name="price-spread",
+    description="Wide per-site wholesale price spread (interconnection "
+                "seams: some micro-sites buy at a third of others' rate) "
+                "with only mild carbon variation — the scenario where the "
+                "grid_cost accounting separates policies the kWh and gCO2 "
+                "columns cannot.",
+    signals=SignalProfile(price_site_spread=0.6, price_coupling=0.3,
+                          carbon_evening=120.0, carbon_midday_dip=60.0,
+                          carbon_site_spread=0.05),
+))
+
+register_scenario(Scenario(
+    name="demand-response",
+    description="Grid-operator demand response: curtail-request events "
+                "published through state.forecast whenever a site's "
+                "carbon tops 500 gCO2/kWh (every evening ramp), asking "
+                "compute to cap at 40% power.  Requests are advisory — "
+                "only signal-aware policies (receding-horizon) honour "
+                "them, shifting energy out of exactly the hours the "
+                "carbon accounting prices highest.",
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    signals=SignalProfile(carbon_evening=350.0, carbon_midday_dip=180.0,
+                          carbon_noise=12.0, curtail_threshold=500.0,
+                          curtail_frac=0.4),
+))
+
+register_scenario(Scenario(
     name="partitioned-wan",
     description="Two island fabrics ({0,1,2} and {3,4}) joined by thin "
                 "0.25 Gbps links: intra-partition moves run at the full "
@@ -280,7 +343,8 @@ register_scenario(Scenario(
 
 
 __all__ = [
-    "FailureRegime", "ForecastNoise", "JobMix", "Scenario", "TraceProfile",
-    "WanProfile", "WanTopology", "available_scenarios", "get_scenario",
-    "hub_spoke_links", "partitioned_links", "register_scenario",
+    "FailureRegime", "ForecastNoise", "JobMix", "Scenario", "SignalProfile",
+    "TraceProfile", "WanProfile", "WanTopology", "available_scenarios",
+    "get_scenario", "hub_spoke_links", "partitioned_links",
+    "register_scenario",
 ]

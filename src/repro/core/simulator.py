@@ -67,6 +67,9 @@ import numpy as np
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
 from repro.core.orchestrator import Policy, PolicyConfig, make_policy
+from repro.core.signals import (
+    GridSignals, SignalProfile, generate_signals, grid_signal_integral,
+)
 from repro.core.state import ClusterState, JobSoA, JobView, SiteView
 from repro.core.traces import Forecaster, SiteTrace, TraceProfile, generate_trace
 from repro.core.wan import WanProfile, WanTopology
@@ -155,6 +158,10 @@ class SimConfig:
     migration_cooldown_s: float = 900.0  # orchestrator debounce per job
     # renewable-window process (scenario-composable)
     trace: TraceProfile = field(default_factory=TraceProfile)
+    # grid-signal process (carbon gCO2/kWh + price $/kWh traces, derived
+    # demand-response curtail requests) — always on: the signal accounting
+    # is a parallel integral, the kWh numbers it annotates never change
+    signals: SignalProfile = field(default_factory=SignalProfile)
     # WAN: a full WanProfile wins over the legacy uniform scalars below
     wan: Optional[WanProfile] = None
     # flaky-WAN regime: hourly brownouts to wan_degraded_gbps
@@ -196,6 +203,14 @@ class SimResult:
     wall_time_s: float = 0.0
     decide_s: float = 0.0  # cumulative wall time inside Policy.decide
     engine: str = "event"
+    # grid-signal accounting: gCO2 / $ of every grid-billed kWh, weighted
+    # by the per-site time-of-use signal at the moment the energy was
+    # drawn, plus the per-site breakdowns (each gram is billed to exactly
+    # one site; sums equal the totals to float precision)
+    grid_gco2: float = 0.0
+    grid_cost: float = 0.0
+    site_grid_gco2: Tuple[float, ...] = ()
+    site_grid_cost: Tuple[float, ...] = ()
 
     @property
     def mean_jct_s(self) -> float:
@@ -248,14 +263,22 @@ class SimResult:
             "completed": self.completed,
             "failures": self.failures,
             "rejected_actions": self.rejected_actions,
+            "grid_gco2": round(self.grid_gco2, 1),
+            "grid_cost": round(self.grid_cost, 2),
+            "site_grid_gco2": [round(x, 1) for x in self.site_grid_gco2],
+            "site_grid_cost": [round(x, 2) for x in self.site_grid_cost],
             "ticks_per_sec": round(self.ticks_per_sec, 1),
             "decide_s": round(self.decide_s, 4),
             "wall_s": round(self.wall_time_s, 4),
         }
 
 
-def generate_jobs(cfg: SimConfig) -> List[SimJob]:
-    rng = np.random.default_rng(cfg.seed + 1)
+def generate_jobs(cfg: SimConfig, *, seed: Optional[int] = None) -> List[SimJob]:
+    """The arrival process.  ``seed`` overrides the job-stream seed
+    (default ``cfg.seed``): the sweep engine's split-seed modes hold one
+    of {traces, jobs} fixed while the other varies (variance
+    decomposition); the default reproduces the coupled legacy stream."""
+    rng = np.random.default_rng((cfg.seed if seed is None else seed) + 1)
     horizon = cfg.days * 24 * HOUR
     arrivals = np.sort(rng.uniform(0, horizon * 0.75, cfg.n_jobs))
     skew = np.asarray(cfg.arrival_skew[: cfg.n_sites], float)
@@ -288,11 +311,13 @@ class ClusterSimulator:
         oracle_forecast: bool = False,
         wan_topology: Optional[WanTopology] = None,
         forecast_horizon=None,
+        grid_signals: Optional[GridSignals] = None,
     ):
-        """``wan_topology`` / ``forecast_horizon`` accept prebuilt shared
-        objects (the sweep engine builds them once per (scenario, seed)
-        cell); both constructions are deterministic, so passing them is
-        result-identical to letting the simulator build its own."""
+        """``wan_topology`` / ``forecast_horizon`` / ``grid_signals``
+        accept prebuilt shared objects (the sweep engine builds them once
+        per (scenario, seed) cell); the constructions are deterministic,
+        so passing them is result-identical to letting the simulator
+        build its own."""
         self.cfg = cfg
         self.policy = policy
         self.traces = traces or generate_trace(
@@ -305,6 +330,15 @@ class ClusterSimulator:
         self.grid_kwh = 0.0
         self.renewable_kwh = 0.0
         self.migration_kwh = 0.0
+        # grid-signal accounting (parallel to the kWh spine — the kWh
+        # numbers are never touched by it): per-site carbon/price traces,
+        # own RNG stream, so enabling signals changes no existing draw
+        self.signals = grid_signals or generate_signals(
+            cfg.n_sites, cfg.days, seed=cfg.seed, profile=cfg.signals)
+        self.grid_gco2 = 0.0
+        self.grid_cost = 0.0
+        self.site_grid_gco2 = np.zeros(cfg.n_sites)
+        self.site_grid_cost = np.zeros(cfg.n_sites)
         self.migrations = 0
         self.failed_migrations = 0
         self.failures = 0
@@ -321,7 +355,7 @@ class ClusterSimulator:
         from repro.core.forecast import ForecastHorizon
 
         self.forecast_horizon = forecast_horizon or ForecastHorizon.build(
-            self.traces, wan=self.wan_topology,
+            self.traces, wan=self.wan_topology, signals=self.signals,
             horizon_s=cfg.forecast_horizon_s, sigma_s=sigma,
             seed=cfg.seed + 7)
         # incremental (site, state) job index: jid-keyed dicts give
@@ -400,6 +434,43 @@ class ClusterSimulator:
 
     def _queued_count(self, sid: int) -> int:
         return len(self._site_jobs.get((sid, "queued"), ()))
+
+    # -- grid-signal billing -------------------------------------------------
+    def _bill_grid(self, site: int, p_kw: float, t0: float, t1: float,
+                   green_s: float = 0.0) -> None:
+        """Bill carbon (g) and cost ($) for ``p_kw`` drawn from GRID power
+        at ``site`` over the non-renewable portion of ``[t0, t1]``
+        (``green_s`` = renewable seconds already computed for the span).
+        Analytic per-span integration — exact for the piecewise-constant
+        signal traces; never touches the kWh accounting."""
+        span = t1 - t0
+        if span <= 0.0 or green_s >= span:
+            return
+        sig = self.signals
+        if green_s <= 0.0:  # fully dark span: straight integral
+            ci = sig.carbon.integral(site, t0, t1)
+            pi = sig.price.integral(site, t0, t1)
+        else:  # mixed span: subtract the window overlaps
+            ov = self.traces[site].overlaps(t0, t1)
+            ci = grid_signal_integral(sig.carbon, site, ov, t0, t1)
+            pi = grid_signal_integral(sig.price, site, ov, t0, t1)
+        g = p_kw / HOUR * ci
+        c = p_kw / HOUR * pi
+        self.grid_gco2 += g
+        self.grid_cost += c
+        self.site_grid_gco2[site] += g
+        self.site_grid_cost[site] += c
+
+    def _bill_grid_tick(self, site: int, e_kwh: float, carb, price) -> None:
+        """Fixed-dt billing: one Riemann term ``e_kwh * signal(t)`` (the
+        legacy engine's rectangle rule, parity reference for the event
+        engine's exact integrals)."""
+        g = e_kwh * float(carb[site])
+        c = e_kwh * float(price[site])
+        self.grid_gco2 += g
+        self.grid_cost += c
+        self.site_grid_gco2[site] += g
+        self.site_grid_cost[site] += c
 
     # -- WAN model -----------------------------------------------------------
     def _nic_bps(self, t: float) -> float:
@@ -591,6 +662,10 @@ class ClusterSimulator:
             wall_time_s=time.perf_counter() - wall_t0,
             decide_s=self.decide_s,
             engine=self.cfg.engine,
+            grid_gco2=self.grid_gco2,
+            grid_cost=self.grid_cost,
+            site_grid_gco2=tuple(float(x) for x in self.site_grid_gco2),
+            site_grid_cost=tuple(float(x) for x in self.site_grid_cost),
         )
 
     # -- next-event engine ---------------------------------------------------
@@ -659,6 +734,7 @@ class ClusterSimulator:
                 j.grid_kwh += e_b
                 self.renewable_kwh += e_g
                 self.grid_kwh += e_b
+                self._bill_grid(j.site, p_node * frac, j.anchor_s, t, g)
             elif st == "migrating":
                 j.transfer_remaining_bits -= j.rate_bps * span
                 j.pause_s += span
@@ -666,6 +742,7 @@ class ClusterSimulator:
                 e = p_sys * span / HOUR
                 self.migration_kwh += e
                 self.grid_kwh += e  # transfer power billed to grid
+                self._bill_grid(j.site, p_sys, j.anchor_s, t)
             elif st == "loading":
                 j.load_remaining_s -= span
                 j.pause_s += span
@@ -909,6 +986,10 @@ class ClusterSimulator:
                 self._arrival_ptr += 1
                 if j.state == "pending":
                     self._move(j, state="queued")
+            # per-tick signal samples (rectangle rule; the stacks cache
+            # the per-segment column, so this is one bisect per tick)
+            carb = self.signals.carbon.value_grid(t)
+            price = self.signals.price.value_grid(t)
             # 2) transfers progress
             if by_state["migrating"]:
                 transfers = list(by_state["migrating"].values())
@@ -921,6 +1002,7 @@ class ClusterSimulator:
                     e = cfg.p_sys_kw * dt / HOUR
                     self.migration_kwh += e
                     self.grid_kwh += e  # transfer power billed to grid
+                    self._bill_grid_tick(j.site, e, carb, price)
                     if j.transfer_remaining_bits <= 0:
                         dest = j.transfer_dest
                         j.transfer_dest = -1
@@ -968,6 +1050,7 @@ class ClusterSimulator:
                     else:
                         j.grid_kwh += e
                         self.grid_kwh += e
+                        self._bill_grid_tick(s, e, carb, price)
                     if j.progress_s - j.last_ckpt_progress_s >= cfg.checkpoint_interval_s:
                         j.last_ckpt_progress_s = j.progress_s
                     if cfg.failure_rate_per_slot_hour > 0.0:
@@ -1063,7 +1146,7 @@ def run_policy_comparison(
     cfg = cfg or SimConfig()
     res = run_cells(
         [(cfg, label, cfg.seed, tuple(policies), dict(policy_configs or {}),
-          True)],
+          True, cfg.seed)],
         workers=1)
     return {r.policy: r.result for r in res.runs}
 
@@ -1078,6 +1161,8 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
             {
                 "policy": name,
                 "nonrenew_energy": round(r.grid_kwh / base.grid_kwh, 2) if base.grid_kwh else 0.0,
+                "grid_gco2": round(r.grid_gco2 / base.grid_gco2, 2) if base.grid_gco2 else 0.0,
+                "grid_cost": round(r.grid_cost / base.grid_cost, 2) if base.grid_cost else 0.0,
                 "jct": round(r.mean_jct_s / base.mean_jct_s, 2),
                 "migration_overhead": round(r.migration_overhead, 3),
                 "stall_overhead": round(r.stall_overhead, 3),

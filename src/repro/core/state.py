@@ -321,6 +321,38 @@ class ClusterState:
             [(s.busy + s.queued) / max(s.slots, 1) for s in self.sites],
             dtype=np.float64)
 
+    # ---- grid-signal views (from the forecast's signal stacks) -------------
+    @cached_property
+    def site_carbon(self) -> np.ndarray:
+        """(n_sites,) current carbon intensity (gCO2/kWh); zeros when the
+        run carries no signals.  Read-only (epoch-cached stack view)."""
+        fc = self.forecast
+        if fc is None:
+            return np.zeros(self.n_sites)
+        return fc.carbon_grid(self.t)
+
+    @cached_property
+    def site_price(self) -> np.ndarray:
+        """(n_sites,) current grid price ($/kWh); zeros w/o signals."""
+        fc = self.forecast
+        if fc is None:
+            return np.zeros(self.n_sites)
+        return fc.price_grid(self.t)
+
+    @cached_property
+    def site_curtail_frac(self) -> np.ndarray:
+        """(n_sites,) active demand-response power cap (1.0 = no request)."""
+        fc = self.forecast
+        if fc is None:
+            return np.ones(self.n_sites)
+        return fc.curtail_frac_grid(self.t)
+
+    @cached_property
+    def job_carbon(self) -> np.ndarray:
+        """(m,) current carbon intensity at each live job's site — the
+        per-job signal column the vectorized decide kernels score against."""
+        return self.site_carbon[self.soa.site]
+
     # ---- the one constructor ----------------------------------------------
     @classmethod
     def build(
@@ -335,6 +367,7 @@ class ClusterState:
         bandwidth_bps: Optional[np.ndarray] = None,
         traces: Optional[Sequence] = None,
         forecast: Optional[ForecastHorizon] = None,
+        signals=None,
         forecast_sigma_s: float = 0.0,
         forecast_seed: int = 0,
         forecast_horizon_s: float = DEFAULT_HORIZON_S,
@@ -368,7 +401,8 @@ class ClusterState:
                     "need wan, nic_bps (with transfers) or bandwidth_bps")
         if forecast is None and traces is not None:
             forecast = ForecastHorizon.build(
-                traces, wan=wan, horizon_s=forecast_horizon_s,
+                traces, wan=wan, signals=signals,
+                horizon_s=forecast_horizon_s,
                 sigma_s=forecast_sigma_s, seed=forecast_seed)
         return cls(t=t, jobs_aos=tuple(jobs), sites_in=sites,
                    bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),

@@ -35,29 +35,55 @@ TIMING_KEYS = ("ticks_per_sec", "decide_s", "wall_s")
 @dataclass(frozen=True)
 class SweepSpec:
     """A scenarios × policies × seeds grid (+ SimConfig overrides applied
-    to every cell and per-policy configs)."""
+    to every cell and per-policy configs).
+
+    ``vary`` selects which random streams the sweep's seeds drive — the
+    variance-decomposition split the coupled legacy seeding could not
+    express:
+
+      * ``"both"`` (default) — the legacy behaviour: one seed varies the
+        environment (traces, WAN brownouts, failures, forecast noise,
+        signals) *and* the job arrival process together;
+      * ``"traces"`` — seeds vary only the environment; every cell runs
+        the identical job workload drawn from ``pin_seed``;
+      * ``"jobs"`` — seeds vary only the arrival process over the fixed
+        ``pin_seed`` environment.
+
+    Comparing the per-metric variance of a ``"traces"`` sweep against a
+    ``"jobs"`` sweep decomposes how much of the ``"both"`` spread each
+    stream contributes.
+    """
 
     scenarios: Tuple[str, ...]
     policies: Tuple[str, ...]
     seeds: Tuple[int, ...] = (0,)
     overrides: Optional[Mapping[str, object]] = None
     policy_configs: Optional[Mapping[str, object]] = None  # name -> PolicyConfig|dict
+    vary: str = "both"  # "both" | "traces" | "jobs"
+    pin_seed: int = 0  # the pinned stream's seed under a split mode
 
     def cells(self, keep_results: bool = True) -> List[tuple]:
         """Materialize the work list: one ``(cfg, label, seed, policies,
-        policy_configs, keep_results)`` tuple per (scenario, seed), in
-        spec order (the deterministic merge order)."""
+        policy_configs, keep_results, job_seed)`` tuple per
+        (scenario, seed), in spec order (the deterministic merge order).
+        ``cfg.seed`` carries the environment stream; ``job_seed`` the
+        arrival stream (equal under ``vary="both"``)."""
         from repro.core.scenarios import get_scenario
 
+        if self.vary not in ("both", "traces", "jobs"):
+            raise ValueError(
+                f"vary must be 'both', 'traces' or 'jobs', not {self.vary!r}")
         cells = []
         pconf = dict(self.policy_configs or {})
         for scn in self.scenarios:
             s = get_scenario(scn)
             for seed in self.seeds:
+                env_seed = self.pin_seed if self.vary == "jobs" else seed
+                job_seed = self.pin_seed if self.vary == "traces" else seed
                 cfg = s.sim_config(**{**dict(self.overrides or {}),
-                                      "seed": seed})
+                                      "seed": env_seed})
                 cells.append((cfg, s.name, seed, tuple(self.policies), pconf,
-                              keep_results))
+                              keep_results, job_seed))
         return cells
 
 
@@ -115,8 +141,8 @@ class SweepResult:
         return out
 
     def table(self, metrics: Sequence[str] = (
-            "grid_kwh", "renewable_frac", "migrations", "failed_migrations",
-            "completed", "mean_jct_h")) -> str:
+            "grid_kwh", "grid_gco2", "grid_cost", "renewable_frac",
+            "migrations", "completed", "mean_jct_h")) -> str:
         """Aggregate table: one row per (scenario, policy), mean ± ci95."""
         agg = self.aggregate()
         headers = ["scenario", "policy"] + [f"{m} (±ci95)" for m in metrics]
@@ -139,23 +165,29 @@ def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
     """Run every policy of one (scenario, seed) cell on shared inputs;
     yields ``(policy, SimResult-or-None, summary)`` triples.
 
-    Traces, the WAN topology and (per forecast sigma) the ForecastHorizon
-    are constructed once and shared across the cell's simulators; the job
-    list is deep-copied per run (simulators mutate it).  When the caller
-    does not keep full results, the per-job ``SimResult`` is dropped
-    *worker-side* — only the summary dict crosses the process boundary.
-    Top-level so the process pool can pickle it.
+    Traces, the WAN topology, the grid signals and (per forecast sigma)
+    the ForecastHorizon are constructed once and shared across the cell's
+    simulators; the job list is deep-copied per run (simulators mutate
+    it).  The trailing ``job_seed`` drives the arrival stream separately
+    from ``cfg.seed``'s environment stream (split-seed sweeps).  When the
+    caller does not keep full results, the per-job ``SimResult`` is
+    dropped *worker-side* — only the summary dict crosses the process
+    boundary.  Top-level so the process pool can pickle it.
     """
     from repro.core.forecast import ForecastHorizon
     from repro.core.orchestrator import make_policy
+    from repro.core.signals import generate_signals
     from repro.core.simulator import ClusterSimulator, generate_jobs
     from repro.core.traces import generate_trace
 
-    cfg, label, seed, policies, policy_configs, keep_results = cell
+    cfg, label, seed, policies, policy_configs, keep_results, *rest = cell
+    job_seed = rest[0] if rest else cfg.seed  # legacy 6-tuples: coupled
     traces = generate_trace(cfg.n_sites, cfg.days, seed=cfg.seed,
                             profile=cfg.trace)
-    base_jobs = generate_jobs(cfg)
+    base_jobs = generate_jobs(cfg, seed=job_seed)
     wan = cfg.wan_profile().build_topology(cfg.n_sites, cfg.days, cfg.seed)
+    signals = generate_signals(cfg.n_sites, cfg.days, seed=cfg.seed,
+                               profile=cfg.signals)
     horizons: Dict[float, ForecastHorizon] = {}
     out: List[Tuple[str, object]] = []
     for name in policies:
@@ -168,12 +200,13 @@ def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
         horizon = horizons.get(sigma)
         if horizon is None:
             horizon = horizons[sigma] = ForecastHorizon.build(
-                traces, wan=wan, horizon_s=cfg.forecast_horizon_s,
+                traces, wan=wan, signals=signals,
+                horizon_s=cfg.forecast_horizon_s,
                 sigma_s=sigma, seed=cfg.seed + 7)
         sim = ClusterSimulator(
             cfg, pol, traces=traces, jobs=copy.deepcopy(base_jobs),
             oracle_forecast=pol.wants_oracle_forecast,
-            wan_topology=wan, forecast_horizon=horizon)
+            wan_topology=wan, forecast_horizon=horizon, grid_signals=signals)
         r = sim.run()
         out.append((name, r if keep_results else None, r.summary()))
     return label, seed, out

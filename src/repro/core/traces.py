@@ -88,6 +88,24 @@ class SiteTrace:
         i = bisect.bisect_right(self._starts, t)
         return self.windows[i] if i < len(self.windows) else None
 
+    def overlaps(self, t0: float, t1: float) -> List[Tuple[float, float]]:
+        """Clipped ``(start, end)`` overlaps of surplus windows with
+        ``[t0, t1]`` (disjoint, sorted) — what the signal accounting
+        subtracts from a span's carbon/price integral
+        (:func:`repro.core.signals.grid_signal_integral`)."""
+        if t1 <= t0:
+            return []
+        self._refresh()
+        starts, ends = self._starts, self._ends
+        lo = bisect.bisect_right(ends, t0)
+        hi = bisect.bisect_left(starts, t1)
+        out = []
+        for k in range(lo, hi):
+            a, b = max(t0, starts[k]), min(t1, ends[k])
+            if b > a:
+                out.append((a, b))
+        return out
+
     def renewable_seconds(self, t0: float, t1: float) -> float:
         """Surplus seconds overlapping [t0, t1] — bisect over the sorted
         window-bounds cache, touching only windows that can overlap (the

@@ -339,7 +339,8 @@ def plan_orchestration(
     # (per-link caps, asymmetric NICs, brownout calendar at sim-time t),
     # plus the forecast horizon (σ=0: the planner reads the calendar as-is)
     state = ClusterState.build(t, views, sites, wan=scn.build_wan(),
-                               transfers=transfers, traces=traces)
+                               transfers=transfers, traces=traces,
+                               signals=scn.build_signals())
     jobs_by_id = {j.jid: j for j in state.jobs}
     flows = list(transfers)
     actions = []

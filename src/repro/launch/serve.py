@@ -43,16 +43,26 @@ def build_serving_state(scenario: str = "paper-table6", at_hour: float = 12.0,
                                    busy=busy_full)
     # the scenario's materialized WanTopology — identical to what the
     # simulator's transfer loop and the dry-run planner consume — plus the
-    # forecast horizon (windows + outage calendar) for lookahead routing
+    # forecast horizon (windows + outage calendar + grid signals) for
+    # lookahead / carbon-aware routing
     return ClusterState.build(t, [], sites, wan=scn.build_wan(),
-                              transfers=transfers, traces=traces)
+                              transfers=transfers, traces=traces,
+                              signals=scn.build_signals())
 
 
 def green_route(state, n_requests: int, *, origin: int = None,
-                min_gbps: float = 0.0) -> List[int]:
+                min_gbps: float = 0.0, lookahead_s: float = 0.0) -> List[int]:
     """Assign each request to the greenest feasible site: renewable sites
     with free slots first (longest remaining window wins), then spill by
     least relative load once renewable capacity is exhausted.
+
+    With ``lookahead_s`` > 0 the router consumes ``state.forecast``
+    instead of only the current snapshot: once current-green capacity is
+    exhausted, free-slot sites whose forecast window *starts within the
+    lookahead* take the next tier (soonest start wins — the request rides
+    the window that is about to open), and the final grid spill breaks
+    load ties by the current carbon signal (cleanest grid first; zeros
+    when the run carries no signals, reducing to the reactive order).
 
     With ``origin`` set, each request must ship its batch/KV state from
     ``origin`` to the chosen site, and a remote site is only admissible if
@@ -65,6 +75,11 @@ def green_route(state, n_requests: int, *, origin: int = None,
     counted."""
     load = {s.sid: s.busy for s in state.sites}
     flows = list(state.transfers)
+    fc = state.forecast if lookahead_s > 0.0 else None
+    next_start = (
+        {s.sid: fc.next_window_start_s(s.sid, state.t) for s in state.sites}
+        if fc is not None else {})
+    carbon = state.site_carbon if lookahead_s > 0.0 else None
 
     def admissible(s) -> bool:
         if origin is None or s.sid == origin or min_gbps <= 0.0:
@@ -80,12 +95,27 @@ def green_route(state, n_requests: int, *, origin: int = None,
             best = max(free_green,
                        key=lambda s: (s.window_remaining_s, -load[s.sid], -s.sid))
         else:
-            # non-empty: the origin site (or, with no origin, every site)
-            # is always admissible
-            spill = [s for s in state.sites if admissible(s)]
-            best = min(spill,
-                       key=lambda s: (load[s.sid] / max(s.slots, 1),
-                                      not s.renewable_active, s.sid))
+            best = None
+            if fc is not None:
+                # upcoming-window tier: a site about to turn green beats a
+                # grid spill — the request runs mostly inside the window
+                soon = [s for s in state.sites
+                        if load[s.sid] < s.slots and admissible(s)
+                        and state.t < next_start[s.sid]
+                        <= state.t + lookahead_s]
+                if soon:
+                    best = min(soon, key=lambda s: (
+                        next_start[s.sid], load[s.sid] / max(s.slots, 1),
+                        s.sid))
+            if best is None:
+                # non-empty: the origin site (or, with no origin, every
+                # site) is always admissible
+                spill = [s for s in state.sites if admissible(s)]
+                best = min(spill, key=lambda s: (
+                    load[s.sid] / max(s.slots, 1),
+                    not s.renewable_active,
+                    float(carbon[s.sid]) if carbon is not None else 0.0,
+                    s.sid))
         load[best.sid] += 1
         if origin is not None and best.sid != origin:
             flows.append((origin, best.sid))
@@ -125,19 +155,31 @@ def main(argv=None):
                     help="site requests originate from; remote routing then "
                          "requires post-admission bandwidth >= --min-gbps")
     ap.add_argument("--min-gbps", type=float, default=0.0)
+    ap.add_argument("--lookahead-h", type=float, default=2.0,
+                    help="route by *upcoming* forecast windows within this "
+                         "many hours (and break grid-spill ties by the "
+                         "carbon signal); 0 = reactive snapshot only")
     args = ap.parse_args(argv)
 
     if args.green_route > 0:
         state = build_serving_state(args.scenario, args.at_hour)
         routes = green_route(state, args.green_route, origin=args.origin,
-                             min_gbps=args.min_gbps)
+                             min_gbps=args.min_gbps,
+                             lookahead_s=args.lookahead_h * 3600.0)
         counts = {s.sid: routes.count(s.sid) for s in state.sites}
+        carbon = state.site_carbon
         print(f"[serve] green routing {args.green_route} requests "
-              f"({args.scenario} @ t={args.at_hour:.1f}h):")
+              f"({args.scenario} @ t={args.at_hour:.1f}h, "
+              f"lookahead={args.lookahead_h:.1f}h):")
         for s in state.sites:
             tag = "GREEN" if s.renewable_active else "grid "
+            nxt = (state.forecast.next_window_start_s(s.sid, state.t)
+                   if state.forecast is not None else float("inf"))
+            nxt_h = ((nxt - state.t) / 3600.0) if nxt < float("inf") else -1.0
             print(f"[serve]   site{s.sid} {tag} "
                   f"window={s.window_remaining_s / 3600:.2f}h "
+                  f"next_window_in={nxt_h:+.2f}h "
+                  f"carbon={carbon[s.sid]:.0f}g/kWh "
                   f"-> {counts[s.sid]} requests")
         return 0
 

@@ -51,6 +51,7 @@ def test_event_engine_matches_fixed_dt(scenario, policy):
     ("paper-table6", "grid-throttle"),
     ("paper-table6", "defer-to-window"),
     ("forecastable-brownouts", "plan-ahead"),
+    ("carbon-peaks", "receding-horizon"),
 ])
 def test_event_engine_parity_for_action_policies(scenario, policy):
     """Engine parity beyond migrate-style policies: Throttle, Defer and the
@@ -74,6 +75,12 @@ def test_event_engine_parity_for_action_policies(scenario, policy):
     if policy == "plan-ahead":
         assert paused_e > 0  # the Pause-for-window plans actually ran
         assert abs(event.failed_migrations - fixed.failed_migrations) <= 3
+    if policy == "receding-horizon":
+        # the signal accounting integrates identically across engines
+        # (analytic per-span vs per-tick rectangle rule)
+        assert paused_e > 0  # the park plans actually ran
+        assert event.grid_gco2 == pytest.approx(fixed.grid_gco2, rel=0.07)
+        assert event.grid_cost == pytest.approx(fixed.grid_cost, rel=0.07)
 
 
 def test_event_engine_deterministic_given_seed():

@@ -399,6 +399,40 @@ def test_green_route_admission_flips_on_saturated_uplink():
     assert unchecked != checked  # the admission check changed the verdict
 
 
+def test_green_route_lookahead_prefers_upcoming_window():
+    """ROADMAP PR 3 follow-up: with a lookahead the router consumes
+    state.forecast — a dark site whose window opens within the lookahead
+    beats a plain grid spill (the request runs mostly inside the window),
+    while the reactive default keeps the old least-loaded order."""
+    from repro.launch.serve import green_route
+
+    fc = fc_of([[], [], [(HOUR, 5 * HOUR)]])
+    sites = [dark(0), green(1, busy=4), dark(2, busy=1)]
+    st = state_of([], sites, fc)
+    assert green_route(st, 2) == [0, 0]  # reactive: least-loaded spill
+    assert green_route(st, 2, lookahead_s=2 * HOUR) == [2, 2]
+    # a lookahead too short to reveal the window falls back to the spill
+    assert green_route(st, 1, lookahead_s=0.25 * HOUR) == [0]
+
+
+def test_green_route_spill_breaks_ties_by_carbon():
+    """Signal-aware spill: equal-load dark sites order by the current
+    carbon signal under a lookahead (cleanest grid first), by sid
+    reactively."""
+    from repro.core.signals import GridSignals, SignalStack
+    from repro.launch.serve import green_route
+
+    edges = np.array([0.0, DAY])
+    sig = GridSignals(
+        carbon=SignalStack.from_values(edges, [[600.0], [200.0]]),
+        price=SignalStack.from_values(edges, [[0.1], [0.1]]))
+    fc = ForecastHorizon(horizon_s=DAY, sigma_s=0.0, site_windows=((), ()),
+                         outages=(), signals=sig)
+    st = state_of([], [dark(0), dark(1)], fc)
+    assert green_route(st, 1) == [0]  # reactive: sid tie-break
+    assert green_route(st, 1, lookahead_s=HOUR) == [1]  # cleaner grid
+
+
 def test_green_route_counts_flows_it_already_routed_without_wan():
     """On the legacy nic_bps path (state.wan is None) the admission floor
     must still see the flows this very call created: at nic=10 Gbps and a

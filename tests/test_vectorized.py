@@ -19,10 +19,11 @@ except ImportError:  # clean environments: deterministic tests still run
 from repro.core.forecast import ForecastHorizon, OutageForecast, WindowForecast
 from repro.core.orchestrator import (
     DeferToWindowPolicy, EnergyOnlyPolicy, FeasibilityAwarePolicy,
-    GridThrottlePolicy, PlanAheadPolicy, algorithm1_grid,
-    benefit_grid_arrays, feasibility_grid_arrays, pick_best_grid,
-    score_migrations,
+    GridThrottlePolicy, PlanAheadPolicy, RecedingHorizonPolicy,
+    algorithm1_grid, benefit_grid_arrays, feasibility_grid_arrays,
+    pick_best_grid, score_migrations,
 )
+from repro.core.signals import generate_signals
 from repro.core.state import ClusterState, JobView, SiteView
 from repro.core.traces import Forecaster, SiteTrace, Window, stack_traces
 
@@ -49,7 +50,7 @@ def make_traces(seed=0, n_sites=4, days=3):
     return traces
 
 
-def make_horizon(seed=0, n_sites=4, with_outages=True):
+def make_horizon(seed=0, n_sites=4, with_outages=True, with_signals=None):
     rng = np.random.default_rng(seed + 100)
     site_windows = []
     for s in range(n_sites):
@@ -72,9 +73,18 @@ def make_horizon(seed=0, n_sites=4, with_outages=True):
                 a, a + float(rng.uniform(0.5, 4.0)) * HOUR,
                 src if src >= 0 else -1, dst, float(rng.uniform(0, 2e9))))
     outages.sort(key=lambda o: (o.start_s, o.src, o.dst))
+    # roughly half the random horizons carry grid signals (some with
+    # demand-response events) so the signal-aware paths see both regimes
+    if with_signals is None:
+        with_signals = bool(rng.random() < 0.5)
+    signals = None
+    if with_signals:
+        thr = 500.0 if rng.random() < 0.5 else None
+        signals = generate_signals(n_sites, 3, seed=seed,
+                                   curtail_threshold=thr)
     return ForecastHorizon(horizon_s=24 * HOUR, sigma_s=0.0,
                            site_windows=tuple(site_windows),
-                           outages=tuple(outages))
+                           outages=tuple(outages), signals=signals)
 
 
 QUERY_TS = [0.0, 0.3 * HOUR, 1.0 * HOUR, 5.7 * HOUR, 12.0 * HOUR,
@@ -282,6 +292,10 @@ POLICIES = [
     DeferToWindowPolicy(),
     PlanAheadPolicy(),
     PlanAheadPolicy(min_benefit_s=0.0, arrival_margin_s=0.0),
+    RecedingHorizonPolicy(),
+    RecedingHorizonPolicy(min_benefit_g=0.0, delay_cost_g_per_s=0.0,
+                          peak_threshold_g=200.0),
+    RecedingHorizonPolicy(price_weight_g_per_usd=5000.0),
 ]
 
 
