@@ -81,6 +81,30 @@ def main() -> int:
                 print(f"[check_quick] FAIL {policy}: grid_gco2 "
                       f"{got} != baseline {b['grid_gco2']} (0.1% band)")
                 failed = True
+        # serving-plane rows: request accounting is seed-deterministic —
+        # served/dropped counts are exact integers; SLO violations get a
+        # tiny band (service jitter sits right at deadline boundaries on
+        # some platforms) and request carbon the same 0.1% band as above
+        if "requests_served" in b:
+            for k in ("requests_arrived", "requests_served",
+                      "requests_dropped"):
+                if cur.get(k) != b[k]:
+                    print(f"[check_quick] FAIL {policy}: {k} "
+                          f"{cur.get(k)} != baseline {b[k]}")
+                    failed = True
+            viol_band = max(1, round(0.005 * b["requests_served"]))
+            got_v = cur.get("slo_violations")
+            if got_v is None or abs(got_v - b["slo_violations"]) > viol_band:
+                print(f"[check_quick] FAIL {policy}: slo_violations "
+                      f"{got_v} != baseline {b['slo_violations']} "
+                      f"(band {viol_band})")
+                failed = True
+            got_g = cur.get("request_gco2")
+            if got_g is None or abs(got_g - b["request_gco2"]) > max(
+                    1e-3 * abs(b["request_gco2"]), 0.2):
+                print(f"[check_quick] FAIL {policy}: request_gco2 "
+                      f"{got_g} != baseline {b['request_gco2']} (0.1% band)")
+                failed = True
     # mini-sweep row: regression gate on the *summed in-simulator wall*
     # (machine-normalized; the pool wall is spawn/import-dominated and
     # tracks runner provisioning, not the code) plus exact determinism of

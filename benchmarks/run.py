@@ -63,8 +63,11 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
     ForecastHorizon grids every tick) at the paper's 5 sites and at the
     25-site fleet scale, the signal-aware ``receding-horizon`` planner on
     ``carbon-peaks`` (multi-window plan search + carbon accounting every
-    span), plus a mini Monte-Carlo sweep (2 scenarios x 2 policies x 2
-    seeds through the process-pool engine).  Ticks/sec = processed events
+    span) and on ``price-spread`` (scenario-scoped non-zero price
+    weight), the serving plane on ``train-plus-serve`` (carbon-slo
+    router: request events + replica queues interleaved with training
+    migrations), plus a mini Monte-Carlo sweep (2 scenarios x 2 policies
+    x 2 seeds through the process-pool engine).  Ticks/sec = processed events
     per second under the next-event engine; ``decide_s`` = cumulative
     wall time inside ``Policy.decide``."""
     from repro.core import ClusterSimulator
@@ -80,6 +83,8 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
         ("plan-ahead-fleet", "forecastable-brownouts", "plan-ahead",
          FLEET_OVERRIDES),
         ("receding-horizon", "carbon-peaks", "receding-horizon", None),
+        ("receding-horizon-price", "price-spread", "receding-horizon", None),
+        ("carbon-slo", "train-plus-serve", "feasibility-aware", None),
     ):
         best = None
         for _ in range(2):  # best-of-2: shave scheduler noise off the gate
@@ -112,6 +117,21 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
             "completed": r.completed,
             "rejected_actions": r.rejected_actions,
         }
+        if r.requests_arrived > 0:
+            print(f"[quick]   serving: served={r.requests_served}"
+                  f"/{r.requests_arrived} dropped={r.requests_dropped} "
+                  f"slo_violations={r.slo_violations} "
+                  f"p95={r.latency_p95_s:.2f}s "
+                  f"request_gco2={r.request_gco2:.1f} g")
+            record["policies"][label].update({
+                "requests_arrived": r.requests_arrived,
+                "requests_served": r.requests_served,
+                "requests_dropped": r.requests_dropped,
+                "slo_violations": r.slo_violations,
+                "request_gco2": round(r.request_gco2, 1),
+                "latency_p95_s": round(r.latency_p95_s, 3),
+            })
+            ok &= r.requests_served > 0
         ok &= r.completed == len(r.jobs)
     # mini-sweep: exercises the process-pool fan-out end to end in CI
     spec = SweepSpec(

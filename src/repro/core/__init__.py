@@ -33,6 +33,11 @@ from repro.core.signals import (  # noqa: F401
 from repro.core.wan import (  # noqa: F401
     WanProfile, WanTopology, hub_spoke_links, partitioned_links,
 )
+from repro.core.serving import (  # noqa: F401
+    DEFAULT_MODEL_CLASSES, ModelClass, Request, RequestBatch, Router,
+    ServingPlane, ServingProfile, ServingView, available_routers,
+    generate_requests, make_router, register_router,
+)
 from repro.core.scenarios import (  # noqa: F401
     FailureRegime, ForecastNoise, JobMix, Scenario,
     available_scenarios, get_scenario, register_scenario,

@@ -29,6 +29,10 @@ Built-ins:
                      separates policies the kWh columns cannot
   demand-response    advisory curtail-request events during carbon peaks,
                      honoured only by signal-aware policies
+  inference-diurnal  serving-dominated: evening-peaked request stream over
+                     a light training load, routed green-first
+  train-plus-serve   the combined fabric: paper-table6 training plus a
+                     carbon-slo-routed inference stream on the same WAN
 
 The WAN half of a scenario is a :class:`repro.core.wan.WanProfile`
 (per-site NIC rates, per-link capacity matrix, fabric- or per-link-scoped
@@ -49,8 +53,9 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Union
+from typing import Dict, List, Mapping, Optional, Union
 
+from repro.core.serving import ServingProfile
 from repro.core.signals import SignalProfile
 from repro.core.traces import SiteTrace, TraceProfile, generate_trace
 from repro.core.wan import (  # noqa: F401  (WanProfile re-exported)
@@ -99,6 +104,15 @@ class Scenario:
     failures: FailureRegime = field(default_factory=FailureRegime)
     forecast: ForecastNoise = field(default_factory=ForecastNoise)
     signals: SignalProfile = field(default_factory=SignalProfile)
+    # inference serving plane (None / disabled profile = training only)
+    serving: Optional[ServingProfile] = None
+    serving_router: str = "green-first"
+    # per-policy default config overrides, applied when the policy is
+    # resolved BY NAME for this scenario (an explicit Policy instance or
+    # per-call policy_configs entry wins) — lets a scenario exercise a
+    # policy knob (price-spread's price-primary objective) without
+    # moving that policy's digits on every other scenario
+    policy_configs: Mapping[str, Mapping] = field(default_factory=dict)
 
     def sim_config(self, **overrides):
         """Materialize a ``SimConfig`` for this scenario (overrides win).
@@ -134,6 +148,8 @@ class Scenario:
             forecast_sigma_s=self.forecast.sigma_s,
             forecast_horizon_s=self.forecast.horizon_s,
             signals=self.signals,
+            serving=self.serving,
+            serving_router=self.serving_router,
         )
         kw.update(overrides)
         if "wan" not in overrides:
@@ -253,12 +269,14 @@ register_scenario(Scenario(
 register_scenario(Scenario(
     name="hub-spoke-wan",
     description="Hub-and-spoke fabric: site 0 is a 40 Gbps exchange hub; "
-                "direct spoke-to-spoke links are capped at 1 Gbps, so "
-                "hub-adjacent moves stay cheap while a direct spoke hop "
-                "only fits class-A checkpoints.",
+                "direct spoke-to-spoke links are capped at 1 Gbps, but "
+                "multi-hop routing relays spoke-to-spoke transfers "
+                "through the hub at the full 10 Gbps spoke NIC rate "
+                "(contending with hub-adjacent traffic for the hub NICs).",
     wan=WanProfile(gbps=10.0,
                    nic_gbps=(40.0, 10.0, 10.0, 10.0, 10.0),
-                   link_gbps=hub_spoke_links(5, hub=0, spoke_gbps=1.0)),
+                   link_gbps=hub_spoke_links(5, hub=0, spoke_gbps=1.0),
+                   multi_hop=True),
 ))
 
 register_scenario(Scenario(
@@ -312,6 +330,10 @@ register_scenario(Scenario(
     signals=SignalProfile(price_site_spread=0.6, price_coupling=0.3,
                           carbon_evening=120.0, carbon_midday_dip=60.0,
                           carbon_site_spread=0.05),
+    # the price-primary objective is the point of this scenario: bias
+    # receding-horizon toward $ (2000 g per $ ~ the scenario's own
+    # carbon/price exchange rate) whenever it is resolved by name here
+    policy_configs={"receding-horizon": {"price_weight_g_per_usd": 2000.0}},
 ))
 
 register_scenario(Scenario(
@@ -330,6 +352,38 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="inference-diurnal",
+    description="Serving-dominated fabric: a light training load (60 jobs) "
+                "under an evening-peaked inference request stream (diurnal "
+                "Poisson, 0.01 req/s/site at base) routed green-first — "
+                "requests chase renewable windows while the peak lands "
+                "exactly on the duck-curve carbon ramp.",
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    jobs=JobMix(n_jobs=60),
+    signals=SignalProfile(carbon_evening=350.0, carbon_morning=150.0,
+                          carbon_midday_dip=180.0, carbon_noise=10.0,
+                          carbon_site_spread=0.15),
+    serving=ServingProfile(req_per_s_per_site=0.01),
+    serving_router="green-first",
+))
+
+register_scenario(Scenario(
+    name="train-plus-serve",
+    description="The combined fabric: the paper-table6 training load plus "
+                "an evening-peaked inference stream (0.004 req/s/site) "
+                "routed carbon-slo — training migrations and routed "
+                "request batches compete for the same WAN links and green "
+                "windows, and the router sheds load away from forecast "
+                "carbon peaks under the per-class latency SLOs.",
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    signals=SignalProfile(carbon_evening=350.0, carbon_morning=150.0,
+                          carbon_midday_dip=180.0, carbon_noise=10.0,
+                          carbon_site_spread=0.25),
+    serving=ServingProfile(req_per_s_per_site=0.004),
+    serving_router="carbon-slo",
+))
+
+register_scenario(Scenario(
     name="partitioned-wan",
     description="Two island fabrics ({0,1,2} and {3,4}) joined by thin "
                 "0.25 Gbps links: intra-partition moves run at the full "
@@ -343,8 +397,8 @@ register_scenario(Scenario(
 
 
 __all__ = [
-    "FailureRegime", "ForecastNoise", "JobMix", "Scenario", "SignalProfile",
-    "TraceProfile", "WanProfile", "WanTopology", "available_scenarios",
-    "get_scenario", "hub_spoke_links", "partitioned_links",
-    "register_scenario",
+    "FailureRegime", "ForecastNoise", "JobMix", "Scenario", "ServingProfile",
+    "SignalProfile", "TraceProfile", "WanProfile", "WanTopology",
+    "available_scenarios", "get_scenario", "hub_spoke_links",
+    "partitioned_links", "register_scenario",
 ]

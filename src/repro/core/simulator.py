@@ -67,6 +67,7 @@ import numpy as np
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
 from repro.core.orchestrator import Policy, PolicyConfig, make_policy
+from repro.core.serving import ServingPlane, ServingProfile, make_router
 from repro.core.signals import (
     GridSignals, SignalProfile, generate_signals, grid_signal_integral,
 )
@@ -177,6 +178,11 @@ class SimConfig:
     # beyond-paper fault injection
     failure_rate_per_slot_hour: float = 0.0
     checkpoint_interval_s: float = 1800.0
+    # inference serving plane (None or a disabled profile = training only;
+    # event engine only).  The plane's RNG lives entirely in the
+    # [seed, 151, ...] streams, so enabling it never moves a training draw.
+    serving: Optional[ServingProfile] = None
+    serving_router: str = "green-first"
 
     def wan_profile(self) -> WanProfile:
         """The authoritative WAN spec: ``wan`` if set, else the legacy
@@ -211,6 +217,29 @@ class SimResult:
     grid_cost: float = 0.0
     site_grid_gco2: Tuple[float, ...] = ()
     site_grid_cost: Tuple[float, ...] = ()
+    # serving-plane accounting (all zero when the run carries no serving
+    # plane; separate accumulators from the training spine — the kWh /
+    # gCO2 columns above never include request energy)
+    requests_arrived: int = 0
+    requests_served: int = 0
+    requests_dropped: int = 0
+    slo_violations: int = 0
+    request_gco2: float = 0.0
+    site_request_gco2: Tuple[float, ...] = ()
+    serve_grid_kwh: float = 0.0
+    serve_renewable_kwh: float = 0.0
+    latency_p50_s: float = 0.0
+    latency_p95_s: float = 0.0
+    latency_p99_s: float = 0.0
+    queue_depth_p95: float = 0.0
+
+    @property
+    def slo_attainment(self) -> float:
+        """Fraction of served requests that met their latency SLO (1.0
+        with no serving plane / nothing served)."""
+        if self.requests_served <= 0:
+            return 1.0
+        return 1.0 - self.slo_violations / self.requests_served
 
     @property
     def mean_jct_s(self) -> float:
@@ -267,6 +296,18 @@ class SimResult:
             "grid_cost": round(self.grid_cost, 2),
             "site_grid_gco2": [round(x, 1) for x in self.site_grid_gco2],
             "site_grid_cost": [round(x, 2) for x in self.site_grid_cost],
+            "requests_arrived": self.requests_arrived,
+            "requests_served": self.requests_served,
+            "requests_dropped": self.requests_dropped,
+            "slo_violations": self.slo_violations,
+            "slo_attainment": round(self.slo_attainment, 4),
+            "request_gco2": round(self.request_gco2, 1),
+            "serve_grid_kwh": round(self.serve_grid_kwh, 3),
+            "serve_renewable_kwh": round(self.serve_renewable_kwh, 3),
+            "latency_p50_s": round(self.latency_p50_s, 3),
+            "latency_p95_s": round(self.latency_p95_s, 3),
+            "latency_p99_s": round(self.latency_p99_s, 3),
+            "queue_depth_p95": round(self.queue_depth_p95, 1),
             "ticks_per_sec": round(self.ticks_per_sec, 1),
             "decide_s": round(self.decide_s, 4),
             "wall_s": round(self.wall_time_s, 4),
@@ -358,6 +399,21 @@ class ClusterSimulator:
             self.traces, wan=self.wan_topology, signals=self.signals,
             horizon_s=cfg.forecast_horizon_s, sigma_s=sigma,
             seed=cfg.seed + 7)
+        # inference serving plane (event engine only).  All serving RNG
+        # lives in the [seed, 151, ...] streams and routing reads a
+        # noise-free trace snapshot (never the forecaster), so a run with
+        # serving disabled is bit-identical to one without the plane.
+        self.serving: Optional[ServingPlane] = None
+        if cfg.serving is not None and cfg.serving.enabled:
+            from repro.core.traces import stack_traces
+
+            self.serving = ServingPlane(
+                cfg.serving, make_router(cfg.serving_router),
+                n_sites=cfg.n_sites, days=cfg.days, seed=cfg.seed,
+                topo=self.wan_topology, traces=self.traces,
+                signals=self.signals, state_fn=self._serving_state)
+            self._serve_stack = stack_traces(self.traces)
+            self._empty_soa = JobSoA.from_views([])
         # incremental (site, state) job index: jid-keyed dicts give
         # deterministic (insertion-ordered) iteration and O(1) moves
         self._by_state: Dict[str, Dict[int, SimJob]] = {s: {} for s in JOB_STATES}
@@ -501,6 +557,11 @@ class ClusterSimulator:
             transfers.append((j.site, j.transfer_dest))
         for j in self._by_state["loading"].values():
             incoming[j.site] += 1
+        if self.serving is not None:
+            # routed request batches occupy the same WAN resources as
+            # checkpoint transfers — the advertised matrix must dilute
+            # against them too
+            transfers.extend(self.serving.flow_pairs())
         active, remaining, next_start = self.forecaster.snapshot_all(t)
         busy = np.array([self._running_count(s) for s in range(cfg.n_sites)],
                         dtype=np.int64)
@@ -561,7 +622,54 @@ class ClusterSimulator:
                                       wan=self.wan_topology,
                                       transfers=transfers,
                                       forecast=self.forecast_horizon,
-                                      site_arrays=site_arrays)
+                                      site_arrays=site_arrays,
+                                      serving=(self.serving.view()
+                                               if self.serving is not None
+                                               else None))
+
+    def _serving_state(self, t: float) -> ClusterState:
+        """Light routing snapshot for the serving plane's per-batch
+        dispatch.  Unlike :meth:`snapshot` it reads the *noise-free*
+        trace stack (``TraceStack.point``), NOT the forecaster — batch
+        dispatches happen at request-driven times, and drawing forecast
+        noise there would shift the forecaster's RNG stream and break
+        the serving-off ⇒ bit-identical guarantee.  Jobs are omitted
+        (routers read sites, forecast, WAN and the serving view only)."""
+        cfg = self.cfg
+        topo = self.wan_topology
+        active, remaining, next_start = self._serve_stack.point(t)
+        busy = np.array([self._running_count(s) for s in range(cfg.n_sites)],
+                        dtype=np.int64)
+        site_arrays = {
+            "site_window_s": remaining,
+            "site_renewable": active,
+            "site_next_window_s": next_start,
+            "site_busy": busy,
+            "site_slots": self._site_slots_arr,
+        }
+        transfers = [(j.site, j.transfer_dest)
+                     for j in self._by_state["migrating"].values()]
+        transfers += self.serving.flow_pairs()
+
+        def sites_factory():  # scalar consumers only (rare)
+            return [
+                SiteView(sid=s, slots=cfg.slots_per_site, busy=int(busy[s]),
+                         queued=self._queued_count(s),
+                         renewable_active=bool(active[s]),
+                         window_remaining_s=float(remaining[s]),
+                         next_window_start_s=float(next_start[s]))
+                for s in range(cfg.n_sites)
+            ]
+
+        # bandwidth: the uncontended capacity matrix (cached per link
+        # state) — routers do admission via post_admission_bps, which
+        # re-splits against `transfers` through the topology anyway
+        return ClusterState.build_soa(
+            t, self._empty_soa, sites_factory, n_sites=cfg.n_sites,
+            wan=topo, transfers=tuple(transfers),
+            bandwidth_bps=topo.capacity_matrix(t),
+            forecast=self.forecast_horizon, site_arrays=site_arrays,
+            serving=self.serving.view())
 
     def _has_live_jobs(self) -> bool:
         by = self._by_state
@@ -602,8 +710,10 @@ class ClusterSimulator:
             # the snapshot's pre-admission matrix is systematically
             # optimistic for exactly this query.
             mig = list(self._by_state["migrating"].values())
-            rates = self.wan_topology.shared_rates(
-                [(x.site, x.transfer_dest) for x in mig], t)
+            pairs = [(x.site, x.transfer_dest) for x in mig]
+            if self.serving is not None:
+                pairs += self.serving.flow_pairs()  # requests dilute too
+            rates = self.wan_topology.shared_rates(pairs, t)
             rate = next(float(r) for x, r in zip(mig, rates) if x.jid == j.jid)
             t_arrive = (t + j.transfer_remaining_bits / rate if rate > 0.0
                         else float("inf"))
@@ -648,6 +758,23 @@ class ClusterSimulator:
             f"unknown engine {self.cfg.engine!r}; use 'event' or 'fixed-dt'")
 
     def _result(self, wall_t0: float) -> SimResult:
+        serving_kw = {}
+        if self.serving is not None:
+            srv = self.serving
+            p50, p95, p99 = srv.latency_percentiles()
+            serving_kw = dict(
+                requests_arrived=srv.arrived,
+                requests_served=srv.served,
+                requests_dropped=srv.dropped,
+                slo_violations=srv.slo_violations,
+                request_gco2=srv.request_gco2,
+                site_request_gco2=tuple(float(x)
+                                        for x in srv.site_request_gco2),
+                serve_grid_kwh=srv.serve_grid_kwh,
+                serve_renewable_kwh=srv.serve_renewable_kwh,
+                latency_p50_s=p50, latency_p95_s=p95, latency_p99_s=p99,
+                queue_depth_p95=srv.queue_depth_p95(),
+            )
         return SimResult(
             policy=self.policy.name,
             jobs=self.jobs,
@@ -666,6 +793,7 @@ class ClusterSimulator:
             grid_cost=self.grid_cost,
             site_grid_gco2=tuple(float(x) for x in self.site_grid_gco2),
             site_grid_cost=tuple(float(x) for x in self.site_grid_cost),
+            **serving_kw,
         )
 
     # -- next-event engine ---------------------------------------------------
@@ -694,6 +822,7 @@ class ClusterSimulator:
         jobs_by_id = self._jobs_by_id
         topo = self.wan_topology
         traces = self.traces
+        serving = self.serving
         n_jobs = len(self.jobs)
         p_node, p_sys = cfg.p_node_kw, cfg.p_sys_kw
 
@@ -769,12 +898,15 @@ class ClusterSimulator:
 
         def refresh_transfers(t: float) -> None:
             """Re-split in-flight transfer rates (flow set / link state
-            changed) and requeue their completion events."""
+            changed) and requeue their completion events.  Checkpoint
+            migrations and routed request batches form ONE flow set over
+            the shared topology — each dilutes the other."""
             mig = list(by_state["migrating"].values())
-            if not mig:
+            srv_pairs = serving.flow_pairs() if serving is not None else []
+            if not mig and not srv_pairs:
                 return
             rates = topo.shared_rates(
-                [(j.site, j.transfer_dest) for j in mig], t)
+                [(j.site, j.transfer_dest) for j in mig] + srv_pairs, t)
             for j, r in zip(mig, rates):
                 flush(j, t)
                 j.rate_bps = float(r)
@@ -786,6 +918,8 @@ class ClusterSimulator:
                          j.jid, j.ver))
                 # rate 0 (no link / browned out to zero): no completion
                 # until a link-state change re-rates the flow
+            if serving is not None and srv_pairs:
+                serving.rerate(t, rates[len(mig):])
 
         def push_run_completion(j: SimJob, t: float) -> None:
             j.ver += 1
@@ -826,15 +960,17 @@ class ClusterSimulator:
 
         arrivals = self._arrivals
         t = 0.0
-        while len(by_state["done"]) < n_jobs:
+        while (len(by_state["done"]) < n_jobs
+               or (serving is not None and serving.pending())):
             t_arr = (arrivals[self._arrival_ptr].arrival_s
                      if self._arrival_ptr < len(arrivals) else INF)
             t_ld = load_heap[0][0] if load_heap else INF
             t_df = defer_heap[0][0] if defer_heap else INF
             t_ed = edges[eptr] if eptr < len(edges) else INF
+            t_srv = serving.next_event_s() if serving is not None else INF
             t_next = min(t_arr, peek(transfer_heap, "migrating"), t_ld, t_df,
                          peek(done_heap, "running"), t_ed, next_brownout,
-                         next_failure, next_orch)
+                         next_failure, next_orch, t_srv)
             if t_next > t_end:
                 flush_live(t_end)  # account the unfinished tail to horizon
                 break
@@ -919,6 +1055,11 @@ class ClusterSimulator:
             #    integrated analytically, so only the pointer advances)
             while eptr < len(edges) and edges[eptr] <= t + EPS:
                 eptr += 1
+            # 8b) serving events: request arrivals, batch closes, routed-
+            #     batch landings, service completions.  A changed flow set
+            #     re-splits EVERY WAN rate below (migrations included)
+            if serving is not None and t_srv <= t + EPS:
+                transfers_dirty |= serving.process(t, EPS)
             if transfers_dirty:
                 refresh_transfers(t)
                 transfers_dirty = False
@@ -967,6 +1108,11 @@ class ClusterSimulator:
 
     # -- legacy fixed-dt engine (parity reference) ---------------------------
     def _run_fixed_dt(self) -> SimResult:
+        if self.serving is not None:
+            raise ValueError(
+                "the serving plane requires the next-event engine; "
+                "use engine='event' (fixed-dt is the training-only "
+                "parity reference)")
         cfg = self.cfg
         wall_t0 = time.perf_counter()
         horizon = cfg.days * 24 * HOUR
@@ -1098,12 +1244,20 @@ class ClusterSimulator:
         traces: Optional[List[SiteTrace]] = None,
     ) -> "ClusterSimulator":
         """Build a simulator from a registered scenario name (or Scenario)
-        and a registered policy name (or Policy instance)."""
+        and a registered policy name (or Policy instance).  When the
+        policy is resolved by name, the scenario's ``policy_configs``
+        entry for it (if any) supplies constructor kwargs — an explicit
+        Policy instance is used as-is."""
         from repro.core.scenarios import get_scenario
 
         scn = get_scenario(scenario)
         cfg = scn.sim_config(**(overrides or {}))
-        pol = make_policy(policy) if isinstance(policy, str) else policy
+        if isinstance(policy, str):
+            pconf = scn.policy_configs.get(
+                policy.lower().replace("_", "-"), {})
+            pol = make_policy(policy, **dict(pconf))
+        else:
+            pol = policy
         return cls(cfg, pol, jobs=jobs, traces=traces,
                    oracle_forecast=getattr(pol, "wants_oracle_forecast", False))
 
@@ -1141,6 +1295,11 @@ def run_policy_comparison(
         scn = get_scenario(scenario)
         label = scn.name
         cfg = scn.sim_config(**(overrides or {}))
+        if scn.policy_configs:
+            # scenario-scoped defaults; explicit policy_configs win
+            merged = {k: dict(v) for k, v in scn.policy_configs.items()}
+            merged.update(dict(policy_configs or {}))
+            policy_configs = merged
     elif overrides:
         cfg = dataclasses.replace(cfg or SimConfig(), **overrides)
     cfg = cfg or SimConfig()
@@ -1155,21 +1314,26 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
     """Paper Table VI/VIII format: normalized to the static baseline, plus
     the action-validity and engine-throughput columns benchmarks surface."""
     base = results["static"]
+    any_serving = any(r.requests_arrived > 0 for r in results.values())
     rows = []
     for name, r in results.items():
-        rows.append(
-            {
-                "policy": name,
-                "nonrenew_energy": round(r.grid_kwh / base.grid_kwh, 2) if base.grid_kwh else 0.0,
-                "grid_gco2": round(r.grid_gco2 / base.grid_gco2, 2) if base.grid_gco2 else 0.0,
-                "grid_cost": round(r.grid_cost / base.grid_cost, 2) if base.grid_cost else 0.0,
-                "jct": round(r.mean_jct_s / base.mean_jct_s, 2),
-                "migration_overhead": round(r.migration_overhead, 3),
-                "stall_overhead": round(r.stall_overhead, 3),
-                "renewable_frac": round(r.renewable_fraction, 3),
-                "rejected_actions": r.rejected_actions,
-                "ticks_per_sec": round(r.ticks_per_sec, 1),
-                "decide_s": round(r.decide_s, 4),
-            }
-        )
+        row = {
+            "policy": name,
+            "nonrenew_energy": round(r.grid_kwh / base.grid_kwh, 2) if base.grid_kwh else 0.0,
+            "grid_gco2": round(r.grid_gco2 / base.grid_gco2, 2) if base.grid_gco2 else 0.0,
+            "grid_cost": round(r.grid_cost / base.grid_cost, 2) if base.grid_cost else 0.0,
+            "jct": round(r.mean_jct_s / base.mean_jct_s, 2),
+            "migration_overhead": round(r.migration_overhead, 3),
+            "stall_overhead": round(r.stall_overhead, 3),
+            "renewable_frac": round(r.renewable_fraction, 3),
+            "rejected_actions": r.rejected_actions,
+            "ticks_per_sec": round(r.ticks_per_sec, 1),
+            "decide_s": round(r.decide_s, 4),
+        }
+        if any_serving:
+            row["requests_served"] = r.requests_served
+            row["slo_attainment"] = round(r.slo_attainment, 4)
+            row["request_gco2"] = round(r.request_gco2, 1)
+            row["latency_p95_s"] = round(r.latency_p95_s, 3)
+        rows.append(row)
     return rows

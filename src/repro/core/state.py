@@ -191,6 +191,12 @@ class ClusterState:
     # simulator's fast path defers SiteView construction to the rare
     # scalar consumers)
     sites_in: Union[Tuple[SiteView, ...], Callable[[], Tuple[SiteView, ...]]] = ()
+    # per-site serving-plane summary (replica pools, queue depths); None
+    # when the run carries no serving plane.  String-annotated: no
+    # runtime import of repro.core.serving (it imports nothing from
+    # state, but keeping state serving-free avoids a cycle if routers
+    # ever grow state helpers).
+    serving: Optional["ServingView"] = None  # noqa: F821
 
     @cached_property
     def sites(self) -> Tuple[SiteView, ...]:
@@ -371,6 +377,7 @@ class ClusterState:
         forecast_sigma_s: float = 0.0,
         forecast_seed: int = 0,
         forecast_horizon_s: float = DEFAULT_HORIZON_S,
+        serving=None,
     ) -> "ClusterState":
         """Assemble a snapshot.
 
@@ -407,7 +414,7 @@ class ClusterState:
         return cls(t=t, jobs_aos=tuple(jobs), sites_in=sites,
                    bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
                    wan=wan, transfers=transfers, forecast=forecast,
-                   nic_bps=nic_bps)
+                   nic_bps=nic_bps, serving=serving)
 
     @classmethod
     def build_soa(
@@ -423,6 +430,7 @@ class ClusterState:
         bandwidth_bps: Optional[np.ndarray] = None,
         forecast: Optional[ForecastHorizon] = None,
         site_arrays: Optional[Dict[str, np.ndarray]] = None,
+        serving=None,
     ) -> "ClusterState":
         """Assemble a snapshot from :class:`JobSoA` columns (the simulator's
         per-tick fast path — no per-job or per-site objects are
@@ -452,7 +460,7 @@ class ClusterState:
         st = cls(t=t, jobs_soa=soa, sites_in=sites_in,
                  bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
                  wan=wan, transfers=transfers, forecast=forecast,
-                 nic_bps=nic_bps)
+                 nic_bps=nic_bps, serving=serving)
         if site_arrays:
             st.__dict__.update(site_arrays)
         return st

@@ -82,8 +82,12 @@ class SweepSpec:
                 job_seed = self.pin_seed if self.vary == "traces" else seed
                 cfg = s.sim_config(**{**dict(self.overrides or {}),
                                       "seed": env_seed})
-                cells.append((cfg, s.name, seed, tuple(self.policies), pconf,
-                              keep_results, job_seed))
+                # scenario-scoped policy defaults; spec-level configs win
+                cell_pconf = {**{k: dict(v)
+                                 for k, v in s.policy_configs.items()},
+                              **pconf}
+                cells.append((cfg, s.name, seed, tuple(self.policies),
+                              cell_pconf, keep_results, job_seed))
         return cells
 
 

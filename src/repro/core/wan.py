@@ -86,6 +86,10 @@ class WanProfile:
                      ``"per-link"`` (each link draws its own calendar)
       sharing        ``"conservative"`` (single-round split, legacy) or
                      ``"waterfill"`` (full max-min water-filling)
+      multi_hop      allow one-relay paths: a ``src -> dst`` transfer may
+                     traverse ``src -> h -> dst`` when that path's base
+                     capacity strictly beats the direct link (hub-and-
+                     spoke fabrics: spoke->spoke rides the hub)
     """
 
     gbps: float = 10.0
@@ -96,6 +100,7 @@ class WanProfile:
     link_gbps: Optional[Tuple[Tuple[Optional[float], ...], ...]] = None
     brownout_scope: str = "fabric"
     sharing: str = "conservative"
+    multi_hop: bool = False
 
     @property
     def is_uniform(self) -> bool:
@@ -151,7 +156,7 @@ class WanProfile:
                     f"brownout_scope must be 'fabric' or 'per-link', "
                     f"got {self.brownout_scope!r}")
         return WanTopology(nic_out, nic_in, link, mask,
-                           self.degraded_bps, self.sharing)
+                           self.degraded_bps, self.sharing, self.multi_hop)
 
     @property
     def degraded_bps(self) -> float:
@@ -174,6 +179,7 @@ class WanTopology:
     brownout_mask: Optional[np.ndarray] = None  # (n_hours,) or (n_hours, n, n)
     degraded_bps: float = 0.0
     sharing: str = "conservative"  # or "waterfill" (full max-min)
+    multi_hop: bool = False  # allow one-relay src->h->dst paths
 
     def __post_init__(self):
         n = len(self.nic_out_bps)
@@ -268,18 +274,68 @@ class WanTopology:
         legacy ``ClusterSimulator._nic_bps`` scalar."""
         return float(self.resources_at(t)[0].max())
 
+    # -- multi-hop relay table -----------------------------------------------
+    @cached_property
+    def relay(self) -> Optional[np.ndarray]:
+        """(n, n) relay table for ``multi_hop`` fabrics: ``relay[s, d]`` is
+        the relay site ``h`` when the one-hop path ``s -> h -> d`` has
+        strictly more *base* capacity (min over all six traversed
+        resources) than the direct link, else ``-1`` (direct).  Chosen
+        from base (structural) capacities so the routing is deterministic
+        across brownouts; among equal-capacity relays the lowest ``h``
+        wins.  ``None`` when multi-hop is off — every query then takes
+        the single-leg fast path unchanged."""
+        if not self.multi_hop:
+            return None
+        n = self.n_sites
+        out, in_, link = self.nic_out_bps, self.nic_in_bps, self.link_bps
+        rel = np.full((n, n), -1, dtype=np.int64)
+        for s in range(n):
+            for d in range(n):
+                if s == d:
+                    continue
+                best = min(out[s], in_[d], link[s, d])
+                for h in range(n):
+                    if h == s or h == d:
+                        continue
+                    cap = min(out[s], in_[h], link[s, h],
+                              out[h], in_[d], link[h, d])
+                    if cap > best:
+                        best = cap
+                        rel[s, d] = h
+        return rel
+
+    def _path(self, src: int, dst: int) -> Tuple[Tuple[int, int], ...]:
+        """The legs a ``src -> dst`` flow traverses: ``((src, dst),)``
+        direct, or ``((src, h), (h, dst))`` through the relay."""
+        r = self.relay
+        if r is None:
+            return ((src, dst),)
+        h = int(r[src, dst])
+        if h < 0:
+            return ((src, dst),)
+        return ((src, h), (h, dst))
+
     # -- capacity / sharing --------------------------------------------------
     def capacity(self, src: int, dst: int, t: float) -> float:
-        """Uncontended point-to-point capacity src -> dst at time t."""
+        """Uncontended point-to-point capacity src -> dst at time t (over
+        the relay path on multi-hop fabrics)."""
         out, in_, link = self.resources_at(t)
-        return float(min(out[src], in_[dst], link[src, dst]))
+        return float(min(
+            min(out[a], in_[b], link[a, b])
+            for a, b in self._path(src, dst)))
 
     def reachable(self, src: int, dst: int) -> bool:
         """Whether src -> dst has any *structural* capacity (base NICs and
         link, brownouts ignored — a browned-out link recovers, a 0-capacity
-        link never does).  Migrations to unreachable sites are invalid."""
-        return bool(min(self.nic_out_bps[src], self.nic_in_bps[dst],
-                        self.link_bps[src, dst]) > 0.0)
+        link never does).  Migrations to unreachable sites are invalid.
+        On multi-hop fabrics a zero direct link with a live relay path is
+        reachable."""
+        if min(self.nic_out_bps[src], self.nic_in_bps[dst],
+               self.link_bps[src, dst]) > 0.0:
+            return True
+        r = self.relay
+        return r is not None and r[src, dst] >= 0
 
     @cached_property
     def _capacity_cache(self) -> dict:
@@ -294,6 +350,12 @@ class WanTopology:
             return cached
         out, in_, link = self.resources_at(t)
         cap = np.minimum(np.minimum(out[:, None], in_[None, :]), link)
+        r = self.relay
+        if r is not None:
+            for s, d in zip(*np.nonzero(r >= 0)):
+                h = int(r[s, d])
+                cap[s, d] = min(out[s], in_[h], link[s, h],
+                                out[h], in_[d], link[h, d])
         self._capacity_cache[key] = cap
         return cap
 
@@ -310,15 +372,35 @@ class WanTopology:
         ``min(nic/src_flows, nic/dst_flows)`` on uniform topologies.
 
         ``"waterfill"``: full max-min (see :meth:`_waterfill_rates`) —
-        per-flow rates dominate the conservative split."""
+        per-flow rates dominate the conservative split.
+
+        On multi-hop fabrics a relayed flow traverses *both* legs'
+        resources (six in total) and its grant is the minimum split over
+        all of them — relayed traffic and direct hub traffic contend for
+        the same hub NICs, so no resource is ever oversubscribed."""
         if not len(flows):
             return np.zeros(0)
         out, in_, link = self.resources_at(t)
         if self.sharing == "waterfill":
             return self._waterfill_rates(flows, out, in_, link)
-        n_src: Dict[int, int] = {}
-        n_dst: Dict[int, int] = {}
-        n_link: Dict[Tuple[int, int], int] = {}
+        if self.relay is not None:
+            paths = [self._path(s, d) for s, d in flows]
+            n_src: Dict[int, int] = {}
+            n_dst: Dict[int, int] = {}
+            n_link: Dict[Tuple[int, int], int] = {}
+            for path in paths:
+                for a, b in path:
+                    n_src[a] = n_src.get(a, 0) + 1
+                    n_dst[b] = n_dst.get(b, 0) + 1
+                    n_link[(a, b)] = n_link.get((a, b), 0) + 1
+            return np.array([
+                min(min(out[a] / n_src[a], in_[b] / n_dst[b],
+                        link[a, b] / n_link[(a, b)]) for a, b in path)
+                for path in paths
+            ])
+        n_src = {}
+        n_dst = {}
+        n_link = {}
         for s, d in flows:
             n_src[s] = n_src.get(s, 0) + 1
             n_dst[d] = n_dst.get(d, 0) + 1
@@ -331,12 +413,13 @@ class WanTopology:
 
     @staticmethod
     def _waterfill_table(
-        flows: Sequence[Tuple[int, int]],
+        paths: Sequence[Tuple[Tuple[int, int], ...]],
         out: np.ndarray, in_: np.ndarray, link: np.ndarray,
     ) -> Tuple[List[float], List[List[int]], Dict[Tuple, int]]:
         """Resource table for :meth:`_waterfill_solve`: capacities + member
-        flow indices per (src NIC, dst NIC, link) resource
-        (infinite-capacity links are omitted — they can never bind)."""
+        flow indices per (src NIC, dst NIC, link) resource, over each
+        flow's leg path (one leg direct, two through a relay;
+        infinite-capacity links are omitted — they can never bind)."""
         caps: List[float] = []
         members: List[List[int]] = []
         index: Dict[Tuple, int] = {}
@@ -350,11 +433,12 @@ class WanTopology:
                 members.append([])
             members[k].append(i)
 
-        for i, (s, d) in enumerate(flows):
-            add(("o", s), out[s], i)
-            add(("i", d), in_[d], i)
-            if np.isfinite(link[s, d]):
-                add(("l", s, d), link[s, d], i)
+        for i, path in enumerate(paths):
+            for a, b in path:
+                add(("o", a), out[a], i)
+                add(("i", b), in_[b], i)
+                if np.isfinite(link[a, b]):
+                    add(("l", a, b), link[a, b], i)
         return caps, members, index
 
     def _waterfill_rates(
@@ -362,7 +446,8 @@ class WanTopology:
         flows: Sequence[Tuple[int, int]],
         out: np.ndarray, in_: np.ndarray, link: np.ndarray,
     ) -> np.ndarray:
-        caps, members, _ = self._waterfill_table(flows, out, in_, link)
+        paths = [self._path(s, d) for s, d in flows]
+        caps, members, _ = self._waterfill_table(paths, out, in_, link)
         return self._waterfill_solve(len(flows), caps, members)
 
     @staticmethod
@@ -425,7 +510,8 @@ class WanTopology:
         out, in_, link = self.resources_at(t)
         if self.sharing == "waterfill":
             m = len(flows)
-            caps, members, index = self._waterfill_table(flows, out, in_, link)
+            paths = [self._path(s, d) for s, d in flows]
+            caps, members, index = self._waterfill_table(paths, out, in_, link)
             rates = self._waterfill_solve(m, caps, members)
             adv = np.array(self.capacity_matrix(t), copy=True)
             loaded = {}
@@ -440,23 +526,48 @@ class WanTopology:
                     elif adv[s, d] > 0.0:
                         # post-admission solve for the idle pair: reuse the
                         # base resource table, appending only the candidate
-                        # flow's three resources (no per-pair rebuild)
+                        # flow's own leg resources (no per-pair rebuild)
                         caps2 = list(caps)
                         members2 = [list(mem) for mem in members]
-                        for key, cap in ((("o", s), out[s]), (("i", d), in_[d]),
-                                         (("l", s, d), link[s, d])):
-                            if key[0] == "l" and not np.isfinite(cap):
-                                continue
-                            k = index.get(key)
-                            if k is None:
-                                caps2.append(float(cap))
-                                members2.append([m])
-                            else:
-                                members2[k].append(m)
+                        for a, b in self._path(s, d):
+                            for key, cap in ((("o", a), out[a]),
+                                             (("i", b), in_[b]),
+                                             (("l", a, b), link[a, b])):
+                                if key[0] == "l" and not np.isfinite(cap):
+                                    continue
+                                k = index.get(key)
+                                if k is None:
+                                    caps2.append(float(cap))
+                                    members2.append([m])
+                                else:
+                                    members2[k].append(m)
                         adv[s, d] = self._waterfill_solve(
                             m + 1, caps2, members2)[-1]
             return adv
         n = self.n_sites
+        if self.relay is not None:
+            # leg-aware current-grant matrix: count every flow on every
+            # resource its path traverses, then advertise each pair the
+            # min split over its own path (idle resources = full rate)
+            n_src: Dict[int, int] = {}
+            n_dst: Dict[int, int] = {}
+            n_link: Dict[Tuple[int, int], int] = {}
+            for s, d in flows:
+                for a, b in self._path(s, d):
+                    n_src[a] = n_src.get(a, 0) + 1
+                    n_dst[b] = n_dst.get(b, 0) + 1
+                    n_link[(a, b)] = n_link.get((a, b), 0) + 1
+            adv = np.array(self.capacity_matrix(t), copy=True)
+            for s in range(n):
+                for d in range(n):
+                    if s == d:
+                        continue
+                    adv[s, d] = min(
+                        min(out[a] / max(n_src.get(a, 1), 1),
+                            in_[b] / max(n_dst.get(b, 1), 1),
+                            link[a, b] / max(n_link.get((a, b), 1), 1))
+                        for a, b in self._path(s, d))
+            return adv
         src_n = np.ones(n)
         dst_n = np.ones(n)
         link_n = np.ones((n, n))

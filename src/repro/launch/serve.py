@@ -159,9 +159,14 @@ def main(argv=None):
                     help="route by *upcoming* forecast windows within this "
                          "many hours (and break grid-spill ties by the "
                          "carbon signal); 0 = reactive snapshot only")
+    ap.add_argument("--router", default="green-first",
+                    help="serving-plane router for the simulated horizon "
+                         "(see repro.core.serving.available_routers)")
     args = ap.parse_args(argv)
 
     if args.green_route > 0:
+        # t=0 view: the snapshot router over one shared ClusterState —
+        # same output as before the serving plane existed
         state = build_serving_state(args.scenario, args.at_hour)
         routes = green_route(state, args.green_route, origin=args.origin,
                              min_gbps=args.min_gbps,
@@ -181,6 +186,43 @@ def main(argv=None):
                   f"next_window_in={nxt_h:+.2f}h "
                   f"carbon={carbon[s.sid]:.0f}g/kWh "
                   f"-> {counts[s.sid]} requests")
+        # then play the same burst through the event-driven serving plane:
+        # replica queues, batch formation, WAN transfer of remote batches,
+        # SLO accounting — over a short simulated horizon
+        import math
+
+        from repro.core.scenarios import get_scenario
+        from repro.core.serving import ServingProfile
+        from repro.core.simulator import ClusterSimulator
+
+        n_sites = len(state.sites)
+        t0 = args.at_hour * 3600.0
+        trace = tuple(
+            (t0 + 1e-3 * i,
+             args.origin if args.origin is not None else i % n_sites)
+            for i in range(args.green_route))
+        prof = ServingProfile(arrival_trace=trace)
+        # keep the scenario's own horizon so the simulator's traces are
+        # the exact ones the t=0 view above was built from
+        days = max(get_scenario(args.scenario).days,
+                   math.ceil(args.at_hour / 24.0 + 0.5))
+        sim = ClusterSimulator.from_scenario(
+            args.scenario, "static",
+            overrides=dict(n_jobs=0, engine="event", days=days,
+                           serving=prof, serving_router=args.router))
+        res = sim.run()
+        plane = sim.serving
+        p50, p95, _ = plane.latency_percentiles()
+        print(f"[serve] simulated horizon (router={args.router}): "
+              f"served={res.requests_served}/{res.requests_arrived} "
+              f"dropped={res.requests_dropped} "
+              f"slo_violations={res.slo_violations} "
+              f"p50={p50:.2f}s p95={p95:.2f}s "
+              f"request_gco2={res.request_gco2:.1f}g")
+        for sid in range(n_sites):
+            print(f"[serve]   site{sid} routed={plane.site_routed[sid]} "
+                  f"served={plane.site_served[sid]} "
+                  f"gco2={plane.site_request_gco2[sid]:.1f}g")
         return 0
 
     cfg = get_config(args.arch)

@@ -1,0 +1,239 @@
+"""Serving plane: request generation, router registry, queue/batch
+conservation invariants, Little's-law accounting on a stationary Poisson
+stream, sweep determinism across worker counts, the serving-off ==
+bit-identical guarantee, and the headline acceptance claim (carbon-slo
+routes strictly less request carbon than nearest at equal SLO attainment
+on train-plus-serve, 8 seeds, mean +/- 95% CI)."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.serving import (
+    DEFAULT_MODEL_CLASSES, ModelClass, Router, ServingProfile,
+    available_routers, generate_requests, make_router, register_router,
+)
+from repro.core.simulator import ClusterSimulator
+from repro.core.sweep import SweepSpec, run_sweep
+
+HOUR = 3600.0
+
+
+# ---------------------------------------------------------------------------
+# request generation
+# ---------------------------------------------------------------------------
+
+def test_generate_requests_deterministic_and_sorted():
+    prof = ServingProfile(req_per_s_per_site=0.01)
+    a = generate_requests(prof, 4, 1, seed=3)
+    b = generate_requests(prof, 4, 1, seed=3)
+    assert len(a) == len(b) > 0
+    assert [(r.t_arrival_s, r.origin, r.cls.name) for r in a] == \
+           [(r.t_arrival_s, r.origin, r.cls.name) for r in b]
+    ts = [r.t_arrival_s for r in a]
+    assert ts == sorted(ts)
+    assert {r.origin for r in a} <= set(range(4))
+    # a different seed reshuffles the stream
+    c = generate_requests(prof, 4, 1, seed=4)
+    assert [(r.t_arrival_s, r.origin) for r in a] != \
+           [(r.t_arrival_s, r.origin) for r in c]
+
+
+def test_generate_requests_trace_mode_replays_verbatim():
+    trace = ((10.0, 1), (20.0, 0), (30.0, 2), (40.0, 99))  # 99 out of range
+    prof = ServingProfile(arrival_trace=trace)
+    reqs = generate_requests(prof, 3, 1, seed=0)
+    assert [(r.t_arrival_s, r.origin) for r in reqs] == \
+           [(10.0, 1), (20.0, 0), (30.0, 2)]
+    for r in reqs:
+        assert r.deadline_s == pytest.approx(r.t_arrival_s + r.cls.slo_s)
+
+
+def test_diurnal_peak_concentrates_arrivals():
+    prof = ServingProfile(req_per_s_per_site=0.02, diurnal_amplitude=1.0,
+                          peak_hour=20.0, peak_width_h=2.0, site_spread=0.0)
+    reqs = generate_requests(prof, 2, 4, seed=0)
+    hod = np.array([(r.t_arrival_s / HOUR) % 24.0 for r in reqs])
+    near_peak = ((hod > 18.0) & (hod < 22.0)).mean()
+    off_peak = ((hod > 6.0) & (hod < 10.0)).mean()
+    assert near_peak > 1.5 * off_peak
+
+
+# ---------------------------------------------------------------------------
+# router registry
+# ---------------------------------------------------------------------------
+
+def test_router_registry_round_trip():
+    names = available_routers()
+    assert {"nearest", "green-first", "carbon-slo"} <= set(names)
+    for name in names:
+        r = make_router(name)
+        assert isinstance(r, Router)
+    # aliases resolve to the same class as the canonical name
+    assert type(make_router("green")) is type(make_router("green-first"))
+    assert type(make_router("carbon")) is type(make_router("carbon-slo"))
+    assert type(make_router("latency")) is type(make_router("nearest"))
+    # normalization: case / underscores
+    assert type(make_router("Green_First")) is type(make_router("green-first"))
+
+
+def test_make_router_unknown_lists_available():
+    with pytest.raises(KeyError, match="carbon-slo"):
+        make_router("no-such-router")
+
+
+def test_register_router_rejects_duplicates():
+    with pytest.raises(ValueError):
+        @register_router("nearest")
+        class Dup(Router):  # pragma: no cover - registration fails first
+            def route(self, batch, state):
+                return batch.origin
+
+
+# ---------------------------------------------------------------------------
+# conservation + Little's law (serving-only runs)
+# ---------------------------------------------------------------------------
+
+def serving_only_sim(prof, scenario="paper-table6", router="nearest",
+                     **overrides):
+    return ClusterSimulator.from_scenario(
+        scenario, "static",
+        overrides=dict(n_jobs=0, engine="event", serving=prof,
+                       serving_router=router, **overrides))
+
+
+def test_request_conservation_with_audit():
+    prof = ServingProfile(req_per_s_per_site=0.01, validate=True)
+    sim = serving_only_sim(prof, days=1)
+    res = sim.run()
+    plane = sim.serving
+    assert res.requests_arrived == len(plane.requests) > 0
+    assert res.requests_arrived == res.requests_served + res.requests_dropped
+    assert plane.in_flight == 0
+    assert sum(plane.site_served) == res.requests_served
+    assert sum(plane.site_routed) == res.requests_served + res.requests_dropped
+    assert len(plane.latencies) == res.requests_served
+    assert res.request_gco2 == pytest.approx(sum(plane.site_request_gco2))
+
+
+def test_littles_law_on_stationary_poisson():
+    """With all requests eventually served, integral N dt must equal the
+    summed sojourn times — L = lambda * W as an accounting identity."""
+    cls = (ModelClass("uni", 1.0, 0.3, 0.05, 60.0, 1e5),)
+    prof = ServingProfile(req_per_s_per_site=0.02, diurnal_amplitude=0.0,
+                          site_spread=0.0, model_classes=cls)
+    sim = serving_only_sim(prof, days=1)
+    res = sim.run()
+    plane = sim.serving
+    assert res.requests_served > 100
+    assert res.requests_dropped == 0
+    W = float(np.mean(plane.latencies))
+    T = 1 * 24 * HOUR
+    lam = res.requests_served / T
+    L = plane.area_request_s / T
+    assert L == pytest.approx(lam * W, rel=0.05)
+
+
+def test_queue_overflow_drops_requests():
+    # one replica, long service, tiny queue: the flood must shed load
+    cls = (ModelClass("heavy", 1.0, 50.0, 10.0, 30.0, 1e5),)
+    trace = tuple((float(i), 0) for i in range(200))
+    prof = ServingProfile(arrival_trace=trace, model_classes=cls,
+                          replicas_per_site=1, max_batch=2,
+                          max_queue_batches=2, validate=True)
+    sim = serving_only_sim(prof, days=1)
+    res = sim.run()
+    assert res.requests_dropped > 0
+    assert res.requests_arrived == res.requests_served + res.requests_dropped
+
+
+# ---------------------------------------------------------------------------
+# integration with the training engine
+# ---------------------------------------------------------------------------
+
+def test_serving_disabled_is_bit_identical():
+    """A zero-rate serving profile must not perturb a training run at all:
+    the plane is never constructed and no RNG stream is consumed."""
+    base = ClusterSimulator.from_scenario(
+        "paper-table6", "feasibility-aware",
+        overrides=dict(days=2, n_jobs=24)).run()
+    off = ClusterSimulator.from_scenario(
+        "paper-table6", "feasibility-aware",
+        overrides=dict(days=2, n_jobs=24,
+                       serving=ServingProfile(req_per_s_per_site=0.0))).run()
+    wallclock = {"wall_s", "ticks_per_sec", "decide_s"}
+    trim = lambda s: {k: v for k, v in s.items() if k not in wallclock}
+    assert trim(off.summary()) == trim(base.summary()) != {}
+    assert base.requests_arrived == 0
+
+
+def test_fixed_dt_engine_rejects_serving():
+    prof = ServingProfile(req_per_s_per_site=0.01)
+    sim = ClusterSimulator.from_scenario(
+        "paper-table6", "static",
+        overrides=dict(days=1, n_jobs=4, engine="fixed-dt", serving=prof))
+    with pytest.raises(ValueError, match="next-event"):
+        sim.run()
+
+
+def test_train_plus_serve_scenario_runs_and_reports():
+    sim = ClusterSimulator.from_scenario(
+        "train-plus-serve", "feasibility-aware",
+        overrides=dict(days=2, n_jobs=24))
+    res = sim.run()
+    s = res.summary()
+    assert res.completed == 24
+    assert s["requests_arrived"] > 0
+    assert s["requests_served"] + s["requests_dropped"] == s["requests_arrived"]
+    assert 0.0 <= s["slo_attainment"] <= 1.0
+    assert s["latency_p50_s"] <= s["latency_p95_s"] <= s["latency_p99_s"]
+    # served energy is billed separately from training energy
+    assert s["serve_grid_kwh"] + s["serve_renewable_kwh"] > 0.0
+
+
+def test_sweep_determinism_across_worker_counts():
+    spec = SweepSpec(scenarios=("inference-diurnal",),
+                     policies=("feasibility-aware",), seeds=(0, 1),
+                     overrides=dict(days=1, n_jobs=8))
+    a = run_sweep(spec, workers=1)
+    b = run_sweep(spec, workers=2)
+    wallclock = {"wall_s", "ticks_per_sec", "decide_s"}
+
+    def key(res):
+        return sorted(
+            (r.scenario, r.seed,
+             tuple(sorted((k, v) for k, v in r.summary.items()
+                          if k not in wallclock)))
+            for r in res.runs)
+
+    assert key(a) == key(b)
+    assert all(r.summary["requests_served"] > 0 for r in a.runs)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: carbon-slo beats nearest on request carbon at equal SLO
+# ---------------------------------------------------------------------------
+
+def test_carbon_slo_beats_nearest_on_train_plus_serve():
+    """ISSUE acceptance: over 8 seeds of train-plus-serve, the carbon-slo
+    router posts lower total request grid gCO2 than nearest at
+    equal-or-better p95 SLO attainment (mean + 95% CI via the sweep
+    engine)."""
+    def sweep(router):
+        spec = SweepSpec(scenarios=("train-plus-serve",),
+                         policies=("feasibility-aware",),
+                         seeds=tuple(range(8)),
+                         overrides=dict(days=2, n_jobs=24,
+                                        serving_router=router))
+        res = run_sweep(spec, workers=4)
+        return res.aggregate()[("train-plus-serve", "feasibility-aware")]
+
+    near = sweep("nearest")
+    slo = sweep("carbon-slo")
+    g_near, g_slo = near["request_gco2"], slo["request_gco2"]
+    # non-overlapping 95% confidence intervals, not just a lower mean
+    assert g_slo["mean"] + g_slo["ci95"] < g_near["mean"] - g_near["ci95"]
+    assert slo["slo_attainment"]["mean"] >= \
+        near["slo_attainment"]["mean"] - 1e-9
+    # same arrival stream per seed regardless of router
+    assert slo["requests_arrived"]["mean"] == near["requests_arrived"]["mean"]

@@ -326,3 +326,83 @@ if HAS_HYPOTHESIS:
         np.testing.assert_allclose(
             waterfill_of(topo).shared_rates(flows),
             topo.shared_rates(flows))
+
+
+# ---------------------------------------------------------------------------
+# multi-hop relaying
+# ---------------------------------------------------------------------------
+
+def hub_spoke_topo(multi_hop=True, sharing="conservative"):
+    prof = WanProfile(gbps=10.0,
+                      nic_gbps=(40.0, 10.0, 10.0, 10.0, 10.0),
+                      link_gbps=hub_spoke_links(5, hub=0, spoke_gbps=1.0),
+                      sharing=sharing, multi_hop=multi_hop)
+    return prof.build_topology(5, days=1, seed=0)
+
+
+def test_multi_hop_relays_spokes_through_hub():
+    topo = hub_spoke_topo()
+    r = topo.relay
+    assert r is not None
+    # every spoke pair relays through the hub; hub-adjacent pairs stay direct
+    for s in range(1, 5):
+        for d in range(1, 5):
+            if s != d:
+                assert r[s, d] == 0
+        assert r[0, s] == -1 and r[s, 0] == -1
+    assert topo.capacity(1, 2, 0.0) == pytest.approx(10 * GBPS)
+    assert topo.reachable(1, 2)
+    cm = np.asarray(topo.capacity_matrix(0.0))
+    assert cm[1, 2] == pytest.approx(10 * GBPS)
+    assert cm[0, 1] == pytest.approx(10 * GBPS)  # direct, spoke NIC bound
+
+
+def test_multi_hop_off_keeps_direct_caps():
+    topo = hub_spoke_topo(multi_hop=False)
+    assert topo.relay is None
+    assert topo.capacity(1, 2, 0.0) == pytest.approx(1 * GBPS)
+    assert np.asarray(topo.capacity_matrix(0.0))[1, 2] == pytest.approx(1 * GBPS)
+
+
+def test_multi_hop_keeps_direct_when_not_strictly_better():
+    # uniform fabric: relaying never beats the direct NIC-bound path
+    prof = WanProfile(gbps=10.0, multi_hop=True)
+    topo = prof.build_topology(4, days=1, seed=0)
+    assert (topo.relay == -1).all()
+    rates = topo.shared_rates([(0, 2), (0, 3), (1, 3)])
+    ref = WanProfile(gbps=10.0).build_topology(4, days=1, seed=0)
+    np.testing.assert_allclose(rates, ref.shared_rates([(0, 2), (0, 3), (1, 3)]))
+
+
+@pytest.mark.parametrize("sharing", ["conservative", "waterfill"])
+def test_multi_hop_capacity_conservation(sharing):
+    """Per-leg accounting: summing each relayed flow's rate over every NIC
+    and link on its path never oversubscribes any resource."""
+    topo = hub_spoke_topo(sharing=sharing)
+    flows = [(1, 2), (1, 3), (2, 4), (3, 4), (0, 1), (4, 0)]
+    rates = topo.shared_rates(flows, 0.0)
+    assert (np.asarray(rates) > 0).all()
+    out, in_, link = topo.resources_at(0.0)
+    tol = 1e-6
+    use_out = np.zeros(5)
+    use_in = np.zeros(5)
+    use_link = np.zeros((5, 5))
+    for (s, d), r in zip(flows, rates):
+        for a, b in topo._path(s, d):
+            use_out[a] += r
+            use_in[b] += r
+            use_link[a, b] += r
+    assert (use_out <= out * (1 + tol)).all()
+    assert (use_in <= in_ * (1 + tol)).all()
+    finite = np.isfinite(link)
+    assert (use_link[finite] <= link[finite] * (1 + tol)).all()
+
+
+def test_multi_hop_hub_nic_contention():
+    """Four relayed spoke flows all traverse the hub: each leg consumes the
+    hub's 40 Gbps NICs, so the per-flow grant reflects the extra hops."""
+    topo = hub_spoke_topo()
+    flows = [(1, 2), (1, 2)]  # two flows on the same relayed pair
+    rates = topo.shared_rates(flows, 0.0)
+    # both share site 1's 10 Gbps egress NIC on the first leg
+    np.testing.assert_allclose(rates, 5 * GBPS)
