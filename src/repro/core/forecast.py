@@ -262,6 +262,103 @@ class ForecastHorizon:
         return p_kw / HOUR * self._grid_signal_integral(
             sig.price, site, t0, t1)
 
+    # -- batched planning-cost rows ------------------------------------------
+    #
+    # Elementwise mirrors of the scalar cost queries over broadcastable
+    # ``(site, t0, t1)`` arrays — the receding-horizon planner's
+    # whole-grid branch-cost tensors.  Every mirror repeats the scalar's
+    # float operations in the scalar's order (window credits subtract
+    # sequentially in window order; masked lanes evaluate on dummy
+    # arguments and are then where-masked), so each lane is bit-identical
+    # to the corresponding scalar call — the property the
+    # action-for-action parity oracle (``decide_scalar``) checks.
+
+    def carbon_integral_rows(self, sites, t0s, t1s) -> np.ndarray:
+        """Elementwise :meth:`carbon_integral` (whole-span, no window
+        credit — the transfer-leg term)."""
+        sig = self.signals
+        if sig is None:
+            return np.zeros(np.broadcast(
+                np.asarray(sites), np.asarray(t0s), np.asarray(t1s)).shape)
+        return sig.carbon.integral_rows(sites, t0s, t1s)
+
+    def price_integral_rows(self, sites, t0s, t1s) -> np.ndarray:
+        """Elementwise :meth:`price_integral`."""
+        sig = self.signals
+        if sig is None:
+            return np.zeros(np.broadcast(
+                np.asarray(sites), np.asarray(t0s), np.asarray(t1s)).shape)
+        return sig.price.integral_rows(sites, t0s, t1s)
+
+    def _signal_integral_rows(self, stack, sites, t0s, t1s) -> np.ndarray:
+        """Elementwise :meth:`_grid_signal_integral`.  Window credit
+        subtracts per window column *sequentially* (``tot - credit_j`` in
+        window order) because float subtraction is not associative and
+        the scalar subtracts one window at a time; non-qualifying lanes
+        subtract exactly ``0.0`` (a bit-exact identity)."""
+        sites = np.asarray(sites)
+        t0s = np.asarray(t0s, dtype=np.float64)
+        t1s = np.asarray(t1s, dtype=np.float64)
+        sites, t0s, t1s = np.broadcast_arrays(sites, t0s, t1s)
+        tot = stack.integral_rows(sites, t0s, t1s)
+        limit = np.minimum(t1s, t0s + self.horizon_s)
+        starts, ends = self._window_mats
+        wsr = starts[sites]
+        wer = ends[sites]
+        qual = (wer > t0s[..., None]) & (wsr < limit[..., None])
+        for j in range(wsr.shape[-1]):
+            qj = qual[..., j]
+            if not qj.any():
+                continue
+            a = np.where(qj, np.maximum(t0s, wsr[..., j]), t0s)
+            b = np.where(qj, np.minimum(limit, wer[..., j]), t0s)
+            tot = tot - np.where(qj, stack.integral_rows(sites, a, b), 0.0)
+        return np.where(t1s <= t0s, 0.0, tot)
+
+    def _green_seconds_rows(self, sites, t0s, t1s) -> np.ndarray:
+        """Elementwise :meth:`green_seconds` (overlaps accumulate in
+        window order, like the scalar's ``sum``)."""
+        sites = np.asarray(sites)
+        t0s = np.asarray(t0s, dtype=np.float64)
+        t1s = np.asarray(t1s, dtype=np.float64)
+        sites, t0s, t1s = np.broadcast_arrays(sites, t0s, t1s)
+        t1c = np.minimum(t1s, t0s + self.horizon_s)
+        starts, ends = self._window_mats
+        wsr = starts[sites]
+        wer = ends[sites]
+        qual = (wer > t0s[..., None]) & (wsr < t1c[..., None])
+        tot = np.zeros(t0s.shape)
+        for j in range(wsr.shape[-1]):
+            qj = qual[..., j]
+            if not qj.any():
+                continue
+            ov = np.maximum(0.0, np.minimum(t1c, wer[..., j])
+                            - np.maximum(t0s, wsr[..., j]))
+            tot = tot + np.where(qj, ov, 0.0)
+        return tot
+
+    def grid_carbon_g_rows(self, sites, t0s, t1s, p_kw: float) -> np.ndarray:
+        """Elementwise :meth:`grid_carbon_g`."""
+        sig = self.signals
+        if sig is None:
+            sites = np.asarray(sites)
+            t0s = np.asarray(t0s, dtype=np.float64)
+            t1s = np.asarray(t1s, dtype=np.float64)
+            sites, t0s, t1s = np.broadcast_arrays(sites, t0s, t1s)
+            green = self._green_seconds_rows(sites, t0s, t1s)
+            return p_kw / HOUR * np.maximum(0.0, (t1s - t0s) - green)
+        return p_kw / HOUR * self._signal_integral_rows(
+            sig.carbon, sites, t0s, t1s)
+
+    def grid_price_usd_rows(self, sites, t0s, t1s, p_kw: float) -> np.ndarray:
+        """Elementwise :meth:`grid_price_usd`."""
+        sig = self.signals
+        if sig is None:
+            return np.zeros(np.broadcast(
+                np.asarray(sites), np.asarray(t0s), np.asarray(t1s)).shape)
+        return p_kw / HOUR * self._signal_integral_rows(
+            sig.price, sites, t0s, t1s)
+
     # -- demand-response curtail requests ------------------------------------
     @cached_property
     def _site_curtails(self) -> Tuple[Tuple[CurtailRequest, ...], ...]:

@@ -40,12 +40,14 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple, Type
+from typing import Dict, List, Optional, Sequence, Tuple, Type
 
 import numpy as np
 
 from repro.core import feasibility as fz
+from repro.core import policy_kernels as pk
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
+from repro.core.policy_kernels import _norm_ppf_cached
 from repro.core.state import (
     STATE_PAUSED, STATE_QUEUED, STATE_RUNNING, ClusterState, JobSoA, JobView,
     SiteView,
@@ -270,18 +272,6 @@ def best_destination(state: ClusterState, job: JobView, ok_row,
 # parity oracles — tests/test_vectorized.py asserts identical Action lists)
 # ---------------------------------------------------------------------------
 
-_PPF_CACHE: Dict[float, float] = {}
-
-
-def _norm_ppf_cached(eps: float) -> float:
-    got = _PPF_CACHE.get(eps)
-    if got is None:
-        import statistics
-
-        got = _PPF_CACHE[eps] = statistics.NormalDist().inv_cdf(eps)
-    return got
-
-
 def feasibility_grid_arrays(
     sizes, t_loads, bw_grid, windows, *, alpha: float, eps: float = 0.0,
     forecast_sigma_s: float = 0.0,
@@ -432,6 +422,15 @@ class Policy:
     def decide(self, state: ClusterState) -> List[Action]:
         raise NotImplementedError
 
+    def decide_batch(self, states: Sequence[ClusterState]) -> List[List[Action]]:
+        """Decide for many independent cells at once (the batched sweep
+        runner's entry point).  The default just loops :meth:`decide`;
+        grid policies override it to score every cell's candidate rows in
+        one fused :mod:`repro.core.policy_kernels` pass.  Policies must
+        be stateless w.r.t. ``self`` (all built-ins are): the runner
+        calls one instance for every cell of a config-identical group."""
+        return [self.decide(s) for s in states]
+
     # Comparison harnesses use this instead of string-matching on the name.
     wants_oracle_forecast = False
 
@@ -518,19 +517,110 @@ class FeasibilityAwarePolicy(Policy):
     eps: float = 0.0
     forecast_sigma_s: float = 0.0
 
-    def decide(self, state: ClusterState) -> List[Action]:
-        """Vectorized Algorithm 1: one whole-grid numpy pass over the SoA
-        columns; rows decided after a same-tick reservation (rare) fall
-        back to the scalar stage 2.  Emits exactly the Action list of
-        :meth:`decide_scalar`."""
+    def _params(self) -> pk.ScoreParams:
+        return pk.ScoreParams(
+            alpha=self.alpha, gamma=self.gamma, beta=self.beta,
+            queue_penalty_s=self.queue_penalty_s,
+            min_benefit_s=self.min_benefit_s, eps=self.eps,
+            forecast_sigma_s=self.forecast_sigma_s)
+
+    def _prep(self, state: ClusterState) -> Optional[np.ndarray]:
+        """Candidate rows for one cell, or ``None`` when the tick is
+        trivially migration-free (all-dark, nothing running)."""
         soa = state.soa
         # a migration must pass the energy gate T_BE < window (T_BE >= 0),
         # so no positive window anywhere means no feasible destination
-        if not state.site_window_s.max() > 0.0 or soa.count(STATE_RUNNING) == 0:
-            return []
+        if not state.site_window_s.max() > 0.0:
+            return None
         cand = ((soa.state == STATE_RUNNING) & soa.eligible).nonzero()[0]
-        if not len(cand):
+        return cand if len(cand) else None
+
+    def _commit(self, state: ClusterState, cand: np.ndarray,
+                dest0: np.ndarray, ok: Optional[np.ndarray],
+                tt: Optional[np.ndarray]) -> List[Action]:
+        """Turn argbest destinations into Actions under same-tick slot
+        reservations, without leaving numpy.  Each commit to site ``d``
+        bumps the reservation count and re-scores ONLY column ``d`` (a
+        reserved column's benefit only drops, so every other row's
+        argbest is provably unchanged); the later rows that pointed at
+        ``d`` are then re-picked as one small grid.  Compiled backends
+        hand in ``ok=tt=None`` and the numpy grids are materialized
+        lazily on the first commit (rare).  Emits exactly the Action
+        list of the scalar reservation walk in :meth:`decide_scalar`."""
+        if not (dest0 >= 0).any():  # the common tick: nothing moves
             return []
+        soa = state.soa
+        jids = soa.jids
+        out: List[Action] = []
+        dest = np.asarray(dest0).astype(np.int64, copy=True)
+        res: Optional[np.ndarray] = None  # built on first commit
+        k = len(cand)
+        # re-picks only ever shrink the committed set (columns only get
+        # worse), so the rows worth visiting are fixed up front
+        for r in np.flatnonzero(dest >= 0):
+            d = int(dest[r])
+            if d < 0:  # re-picked away by an earlier reservation
+                continue
+            out.append(Migrate(int(jids[cand[r]]), d))
+            if res is None:
+                # first commit this tick: materialize the grids the
+                # reservation-aware column updates need
+                if ok is None:
+                    ok, tt = feasibility_grid_arrays(
+                        soa.ckpt_bytes[cand][:, None],
+                        soa.t_load_s[cand][:, None],
+                        state.bandwidth_bps[soa.site[cand], :],
+                        state.site_window_s[None, :], alpha=self.alpha,
+                        eps=self.eps,
+                        forecast_sigma_s=self.forecast_sigma_s)
+                benefit, t_cost = benefit_grid_arrays(
+                    state, cand, tt, gamma=self.gamma, beta=self.beta,
+                    queue_penalty_s=self.queue_penalty_s)
+                W = state.site_window_s
+                s_i = soa.site[cand]
+                rem = soa.remaining_s[cand]
+                cur_green = np.where(state.site_renewable[s_i], W[s_i], 0.0)
+                load_src = state.site_load[s_i]
+                bq_raw = state.site_bq_raw
+                res = np.zeros(len(W), dtype=np.int64)
+            res[d] += 1
+            # column d under the new reservation count, with the exact
+            # scalar float-op order of best_destination
+            dest_load = (int(bq_raw[d]) + int(res[d])) / max(
+                int(state.site_slots[d]), 1)
+            avoided = np.maximum(
+                0.0, np.minimum(W[d], rem) - np.minimum(cur_green, rem))
+            col = (self.gamma * avoided
+                   - self.beta * self.queue_penalty_s
+                   * (dest_load - load_src))
+            if int(state.site_free_slots[d]) - int(res[d]) <= 0:
+                col = col - self.queue_penalty_s  # would have to queue
+            benefit[:, d] = col
+            if r + 1 < k:
+                stale = np.flatnonzero(dest[r + 1:] == d) + (r + 1)
+                if len(stale):
+                    valid = (ok[stale]
+                             & (s_i[stale, None] != _arange(len(W))[None, :])
+                             & (benefit[stale] > np.maximum(
+                                 t_cost[stale], self.min_benefit_s)))
+                    dest[stale] = pick_best_grid(
+                        benefit[stale], tt[stale], valid)
+        return out
+
+    def decide(self, state: ClusterState) -> List[Action]:
+        """Vectorized Algorithm 1: one whole-grid pass over the SoA
+        columns (numpy by default, the fused jit/pallas kernel when that
+        backend is selected); rows decided after a same-tick reservation
+        (rare) fall back to the scalar stage 2.  Emits exactly the Action
+        list of :meth:`decide_scalar`."""
+        cand = self._prep(state)
+        if cand is None:
+            return []
+        if pk.backend() != "numpy":
+            dest0 = pk.score_rows([pk.rows_from_state(state, cand)],
+                                  self._params())[0]
+            return self._commit(state, cand, dest0, None, None)
+        soa = state.soa
         ok, tt, dest0 = score_migrations(
             state, cand, state.bandwidth_bps[soa.site[cand], :],
             alpha=self.alpha, eps=self.eps,
@@ -539,25 +629,22 @@ class FeasibilityAwarePolicy(Policy):
             min_benefit_s=self.min_benefit_s)
         if dest0 is None:
             return []
-        out: List[Action] = []
-        reserved: Optional[Dict[int, int]] = None  # built on first commit
-        for k, i in enumerate(cand):
-            if reserved is None:
-                dest = int(dest0[k])
-                if dest < 0:
-                    continue
-            else:
-                dest = best_destination(
-                    state, _row_view(soa, i), ok[k], tt[k], reserved,
-                    gamma=self.gamma, beta=self.beta,
-                    queue_penalty_s=self.queue_penalty_s,
-                    min_benefit_s=self.min_benefit_s)
-                if dest is None:
-                    continue
-            out.append(Migrate(int(soa.jids[i]), dest))
-            if reserved is None:
-                reserved = {s.sid: 0 for s in state.sites}
-            reserved[dest] += 1
+        return self._commit(state, cand, dest0, ok, tt)
+
+    def decide_batch(self, states: Sequence[ClusterState]) -> List[List[Action]]:
+        """All cells' candidate rows scored in ONE fused kernel pass
+        (bit-identical to per-cell :meth:`decide` — see
+        :mod:`repro.core.policy_kernels` on padding lanes)."""
+        cands = [self._prep(s) for s in states]
+        live = [i for i, c in enumerate(cands) if c is not None]
+        dests = iter(pk.score_states([states[i] for i in live],
+                                     [cands[i] for i in live],
+                                     self._params()))
+        out: List[List[Action]] = []
+        for s, c in zip(states, cands):
+            d0 = None if c is None else next(dests)
+            out.append([] if d0 is None
+                       else self._commit(s, c, d0, None, None))
         return out
 
     def decide_scalar(self, state: ClusterState) -> List[Action]:
@@ -669,12 +756,17 @@ class PlanAheadPolicy(Policy):
     min_pause_compute_s: float = 1800.0
     arrival_margin_s: float = 1800.0
 
+    def _params(self) -> pk.ScoreParams:
+        return pk.ScoreParams(
+            alpha=self.alpha, gamma=self.gamma, beta=self.beta,
+            queue_penalty_s=self.queue_penalty_s,
+            min_benefit_s=self.min_benefit_s)
+
     # ---- stage 1 (vectorized): migration -----------------------------------
-    def _migrations(self, state: ClusterState, planned: set) -> List[Action]:
-        """Whole-grid stage 1: outage hardening, feasibility, evacuation
-        scan and destination scoring as single numpy passes over the SoA;
-        only committed migrations (rare) run scalar follow-up work
-        (post-admission arrival check, reservation-aware re-scoring)."""
+    def _mig_prep(self, state: ClusterState) -> Optional[tuple]:
+        """Candidate selection, evacuation pre-skip and outage hardening
+        for one cell: ``(cand, s_i, sizes, bw_grid)``, or ``None`` when
+        the tick is trivially migration-free."""
         t = state.t
         fc = state.forecast
         soa = state.soa
@@ -682,10 +774,10 @@ class PlanAheadPolicy(Policy):
         # a migration must pass the energy gate T_BE < window (T_BE >= 0),
         # so no positive window anywhere means no feasible destination
         if not W.max() > 0.0 or soa.count(STATE_RUNNING) == 0:
-            return []
+            return None
         cand = ((soa.state == STATE_RUNNING) & soa.eligible).nonzero()[0]
         if not len(cand):
-            return []
+            return None
         # pre-skip (pre-emptive-evacuation scan, vectorized): green
         # candidates stay put unless the forecast says their uplink browns
         # out before the current window ends; the grids below only score
@@ -701,7 +793,7 @@ class PlanAheadPolicy(Policy):
         if not keep.all():
             cand = cand[keep]
             if not len(cand):
-                return []
+                return None
             s_i = s_i[keep]
         sizes = soa.ckpt_bytes[cand][:, None]
         bw_grid = state.bandwidth_bps[s_i, :]  # fancy indexing: a copy
@@ -715,12 +807,48 @@ class PlanAheadPolicy(Policy):
             cross = (os_rows < t + tt0) & (bw_grid > 0.0)
             bw_grid = np.where(cross, np.minimum(bw_grid, o_cap[s_i, :]),
                                bw_grid)
+        return cand, s_i, sizes, bw_grid
+
+    def _migrations(self, state: ClusterState, planned: set) -> List[Action]:
+        """Whole-grid stage 1: outage hardening, feasibility, evacuation
+        scan and destination scoring as single grid passes over the SoA
+        (numpy by default, the fused compiled kernel when selected); only
+        committed migrations (rare) run scalar follow-up work
+        (post-admission arrival check, reservation-aware re-scoring)."""
+        prep = self._mig_prep(state)
+        if prep is None:
+            return []
+        cand, s_i, sizes, bw_grid = prep
+        if pk.backend() != "numpy":
+            dest0 = pk.score_rows(
+                [pk.rows_from_state(state, cand, bw_grid)],
+                self._params())[0]
+            return self._mig_commit(state, planned, cand, s_i, bw_grid,
+                                    dest0, None, None)
         ok, tt, dest0 = score_migrations(
             state, cand, bw_grid, alpha=self.alpha, gamma=self.gamma,
             beta=self.beta, queue_penalty_s=self.queue_penalty_s,
             min_benefit_s=self.min_benefit_s, s_i=s_i, sizes=sizes)
         if dest0 is None:
             return []
+        return self._mig_commit(state, planned, cand, s_i, bw_grid, dest0,
+                                ok, tt)
+
+    def _mig_commit(self, state: ClusterState, planned: set,
+                    cand: np.ndarray, s_i: np.ndarray, bw_grid: np.ndarray,
+                    dest0: np.ndarray, ok: Optional[np.ndarray],
+                    tt: Optional[np.ndarray]) -> List[Action]:
+        """Argbest destinations -> Actions: post-admission arrival checks
+        plus same-tick slot reservations (first commit switches remaining
+        rows to the reservation-aware scalar stage 2; compiled backends
+        hand in ``ok=tt=None`` and the numpy grids — against the SAME
+        outage-hardened ``bw_grid`` — are recomputed lazily then)."""
+        if not (dest0 >= 0).any():  # the common tick: nothing moves
+            return []
+        t = state.t
+        fc = state.forecast
+        soa = state.soa
+        W = state.site_window_s
         start_after = (fc.next_outage_start_after_grid(t)
                        if fc is not None else None)
 
@@ -733,6 +861,11 @@ class PlanAheadPolicy(Policy):
                 if dest_sid < 0:
                     continue
             else:
+                if ok is None:
+                    ok, tt = feasibility_grid_arrays(
+                        soa.ckpt_bytes[cand][:, None],
+                        soa.t_load_s[cand][:, None], bw_grid, W[None, :],
+                        alpha=self.alpha)
                 dest_sid = best_destination(
                     state, _row_view(soa, i), ok[k], tt[k], reserved,
                     gamma=self.gamma, beta=self.beta,
@@ -848,11 +981,36 @@ class PlanAheadPolicy(Policy):
         :meth:`decide_scalar`): stage 1 via :meth:`_migrations`, stages
         2–4 as SoA masks against per-site forecast grids instead of
         per-job scalar horizon queries."""
+        planned: set = set()
+        out: List[Action] = list(self._migrations(state, planned))
+        return self._stages234(state, planned, out)
+
+    def decide_batch(self, states: Sequence[ClusterState]) -> List[List[Action]]:
+        """Stage 1 of every cell scored in ONE fused kernel pass; the
+        (cheap, already-vectorized) stages 2–4 run per cell."""
+        preps = [self._mig_prep(s) for s in states]
+        live = [i for i, p in enumerate(preps) if p is not None]
+        dests = iter(pk.score_states(
+            [states[i] for i in live], [preps[i][0] for i in live],
+            self._params(), bw_grids=[preps[i][3] for i in live]))
+        out: List[List[Action]] = []
+        for s, p in zip(states, preps):
+            planned: set = set()
+            migs: List[Action] = []
+            if p is not None:
+                cand, s_i, _sizes, bw_grid = p
+                d0 = next(dests)
+                if d0 is not None:
+                    migs = self._mig_commit(s, planned, cand, s_i,
+                                            bw_grid, d0, None, None)
+            out.append(self._stages234(s, planned, migs))
+        return out
+
+    def _stages234(self, state: ClusterState, planned: set,
+                   out: List[Action]) -> List[Action]:
         t = state.t
         fc = state.forecast
         soa = state.soa
-        planned: set = set()
-        out: List[Action] = list(self._migrations(state, planned))
 
         st = soa.state
         n_running = soa.count(STATE_RUNNING)
@@ -1063,6 +1221,124 @@ class RecedingHorizonPolicy(Policy):
             return self.dr_power_frac
         return 1.0
 
+    # ---- whole-grid branch-cost tensors (the PR 7 vectorized plan
+    # search).  Each helper mirrors its scalar twin op for op — masked
+    # lanes evaluate on dummy arguments and are where-masked to inf, so
+    # every live lane's float is bit-identical to the scalar call and
+    # the branch argmin reproduces the scalar first-strictly-smaller
+    # scan (numpy argmin keeps the first occurrence).  ----------------------
+    def _run_cost_g_rows(self, fc, sites: np.ndarray, t0s: np.ndarray,
+                         rems: np.ndarray) -> np.ndarray:
+        """Elementwise :meth:`_run_cost_g` over broadcastable arrays."""
+        g = fc.grid_carbon_g_rows(sites, t0s, t0s + rems, fz.P_NODE_KW)
+        if self.price_weight_g_per_usd > 0.0:
+            g = g + self.price_weight_g_per_usd * fc.grid_price_usd_rows(
+                sites, t0s, t0s + rems, fz.P_NODE_KW)
+        return g
+
+    def _park_cost_rows(self, fc, sites: np.ndarray, rems: np.ndarray,
+                        t: float, bound_s: float
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+        """All rows' :meth:`_park_branches` as ``(m, Kw)`` cost / start
+        tensors (inf on lanes the scalar would not enumerate: windows
+        already open, past the bound, or beyond ``plan_windows``)."""
+        starts, _ = fc._window_mats
+        ws = starts[sites]  # (m, Kw), +inf padded, start-sorted
+        limit = t + min(bound_s, fc.horizon_s)
+        elig = (ws > t) & (ws <= limit)
+        take = elig & (np.cumsum(elig, axis=1) <= self.plan_windows)
+        st = np.where(take, ws, t)
+        cost = (self._run_cost_g_rows(fc, sites[:, None], st, rems[:, None])
+                + self.delay_cost_g_per_s * (st - t))
+        return (np.where(take, cost, np.inf),
+                np.where(take, ws, np.inf))
+
+    def _plan_grid(self, state: ClusterState, fc, cand: np.ndarray,
+                   s_i: np.ndarray, ok: np.ndarray, flows: list,
+                   reserved: Dict[int, int]) -> List[Action]:
+        """Stage 1 as one ``(jobs × branches)`` cost tensor: columns are
+        [parks in window order, migrates by sid] — the scalar
+        enumeration order, so first-occurrence argmin ≡ the scalar
+        strict-< scan.  The tensor assumes the tick's *initial*
+        ``flows``/``reserved``; a committed migration invalidates that
+        for later rows, so the remaining rows fall back to the scalar
+        :meth:`_plan_one` (Pause commits mutate nothing and keep the
+        grid valid)."""
+        t = state.t
+        soa = state.soa
+        m = len(cand)
+        n = state.n_sites
+        rem = soa.remaining_s[cand]
+        ckpt = soa.ckpt_bytes[cand]
+        W = state.site_window_s
+        free = state.site_free_slots
+        t_row = np.full(m, t)
+        stay = self._run_cost_g_rows(fc, s_i, t_row, rem)
+
+        pcost, _ = self._park_cost_rows(fc, s_i, rem, t, self.max_park_s)
+        pcost = np.where(rem[:, None] >= self.min_park_compute_s,
+                         pcost, np.inf)
+        kw = pcost.shape[1]
+
+        # migrate branches: the scalar's sequential gates as one mask
+        rate = np.empty((m, n))
+        rate_rows: Dict[int, np.ndarray] = {}
+        for r in range(m):
+            src = int(s_i[r])
+            row = rate_rows.get(src)
+            if row is None:
+                row = rate_rows[src] = np.array([
+                    state.post_admission_bps(src, d, flows)
+                    for d in range(n)])
+            rate[r] = row
+        feas = (ok & (np.arange(n)[None, :] != s_i[:, None])
+                & (free[None, :] > 0) & (rate > 0.0))
+        t_arr = t + 8.0 * ckpt[:, None] / np.where(feas, rate, 1.0)
+        feas &= ~(t_arr + self.arrival_margin_s > t + W[None, :])
+        feas &= ~(fc.next_outage_start_after_grid(t)[s_i, :] < t_arr)
+        ta = np.where(feas, t_arr, t)
+        s_rep = np.broadcast_to(s_i[:, None], (m, n))
+        t_rep = np.broadcast_to(t_row[:, None], (m, n))
+        transfer = fz.P_SYS_KW / 3600.0 * fc.carbon_integral_rows(
+            s_rep, t_rep, ta)
+        if self.price_weight_g_per_usd > 0.0:
+            transfer = transfer + (self.price_weight_g_per_usd
+                                   * fz.P_SYS_KW / 3600.0
+                                   * fc.price_integral_rows(s_rep, t_rep, ta))
+        d_rep = np.broadcast_to(np.arange(n)[None, :], (m, n))
+        mcost = ((transfer + self._run_cost_g_rows(fc, d_rep, ta,
+                                                   rem[:, None]))
+                 + self.delay_cost_g_per_s * (ta - t))
+        mcost = np.where(feas, mcost, np.inf)
+
+        costs = np.concatenate([pcost, mcost], axis=1)
+        k = np.argmin(costs, axis=1)
+        bc = costs[np.arange(m), k]
+        act = bc < stay - self.min_benefit_g  # inf lanes never pass
+
+        out: List[Action] = []
+        fallback = False
+        for r, i in enumerate(cand):
+            jid = int(soa.jids[i])
+            if fallback:
+                a = self._plan_one(
+                    state, fc, jid, int(s_i[r]), float(ckpt[r]),
+                    float(rem[r]), ok[r], W, free, flows, reserved)
+                if a is not None:
+                    out.append(a)
+                continue
+            if not act[r]:
+                continue
+            if k[r] < kw:
+                out.append(Pause(jid))
+            else:
+                d = int(k[r] - kw)
+                out.append(Migrate(jid, d))
+                flows.append((int(s_i[r]), d))
+                reserved[d] += 1
+                fallback = True
+        return out
+
     def _plan_one(self, state: ClusterState, fc, jid: int, site: int,
                   ckpt_bytes: float, rem: float, ok_row, window_s,
                   free_slots, flows, reserved) -> Optional[Action]:
@@ -1145,44 +1421,53 @@ class RecedingHorizonPolicy(Policy):
                     soa.t_load_s[cand][:, None],
                     state.bandwidth_bps[s_i, :],
                     state.site_window_s[None, :], alpha=self.alpha)
-                W = state.site_window_s
-                free = state.site_free_slots
                 flows = list(state.transfers)
                 reserved = {s: 0 for s in range(state.n_sites)}
-                for k, i in enumerate(cand):
-                    act = self._plan_one(
-                        state, fc, int(soa.jids[i]), int(s_i[k]),
-                        float(soa.ckpt_bytes[i]), float(soa.remaining_s[i]),
-                        ok[k], W, free, flows, reserved)
-                    if act is not None:
-                        out.append(act)
-                        acted.add(act.jid)
+                for act in self._plan_grid(state, fc, cand, s_i, ok,
+                                           flows, reserved):
+                    out.append(act)
+                    acted.add(act.jid)
 
         # ---- stage 2: paused jobs — resume, or keep waiting (re-planned)
         if soa.count(STATE_PAUSED):
             paused = (st == STATE_PAUSED).nonzero()[0]
-            for i in paused:
-                jid = int(soa.jids[i])
-                if green_j[i] or fc is None or not self._should_stay_parked(
-                        fc, int(soa.site[i]), float(soa.remaining_s[i]), t):
-                    out.append(Resume(jid))
+            if fc is None:
+                resume = np.ones(len(paused), dtype=bool)
+            else:
+                # batched _should_stay_parked: keep waiting only while
+                # some park branch is still strictly cheaper than
+                # resuming now (same no-margin hysteresis)
+                sites_p = soa.site[paused]
+                rem_p = soa.remaining_s[paused]
+                stay_p = self._run_cost_g_rows(
+                    fc, sites_p, np.full(len(paused), t), rem_p)
+                pcost, _ = self._park_cost_rows(fc, sites_p, rem_p, t,
+                                                self.max_park_s)
+                keep = ((rem_p >= self.min_park_compute_s)
+                        & (pcost < stay_p[:, None]).any(axis=1))
+                resume = green_j[paused] | ~keep
+            for i, r in zip(paused, resume):
+                if r:
+                    out.append(Resume(int(soa.jids[i])))
 
         # ---- stage 3: queued jobs — Defer to the cheapest nearby window
         if fc is not None and soa.count(STATE_QUEUED):
             queued = ((st == STATE_QUEUED) & ~(soa.defer_until_s > t)
                       & ~green_j).nonzero()[0]
-            for i in queued:
-                site = int(soa.site[i])
-                rem = float(soa.remaining_s[i])
-                stay = self._run_cost_g(fc, site, t, rem)
-                best_cost, best_start = float("inf"), None
-                for cost, start in self._park_branches(fc, site, rem, t,
-                                                       self.max_wait_s):
-                    if cost < best_cost:
-                        best_cost, best_start = cost, start
-                if best_start is not None and \
-                        best_cost < stay - self.min_benefit_g:
-                    out.append(Defer(int(soa.jids[i]), best_start))
+            if len(queued):
+                sites_q = soa.site[queued]
+                rem_q = soa.remaining_s[queued]
+                stay_q = self._run_cost_g_rows(
+                    fc, sites_q, np.full(len(queued), t), rem_q)
+                pcost, pstart = self._park_cost_rows(fc, sites_q, rem_q, t,
+                                                     self.max_wait_s)
+                kq = np.argmin(pcost, axis=1)
+                rr = np.arange(len(queued))
+                bc, bs = pcost[rr, kq], pstart[rr, kq]
+                go = np.isfinite(bs) & (bc < stay_q - self.min_benefit_g)
+                for i, g, s0 in zip(queued, go, bs):
+                    if g:
+                        out.append(Defer(int(soa.jids[i]), float(s0)))
 
         # ---- stage 4: demand response — throttle through peaks/DR spans
         if soa.count(STATE_RUNNING):

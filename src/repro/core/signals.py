@@ -185,6 +185,34 @@ class SignalStack:
             return np.zeros(self.n_sites)
         return self._cum_at_grid(t1) - self._cum_at_grid(t0)
 
+    def cum_at_rows(self, sites: np.ndarray, xs: np.ndarray) -> np.ndarray:
+        """Elementwise :meth:`_cum_at` over broadcastable ``(site, x)``
+        arrays — the op-for-op batched mirror (same branch expressions,
+        same float order), so results are bit-identical to the scalar.
+        Used by the receding-horizon planner's whole-grid cost tensors."""
+        sites = np.asarray(sites)
+        xs = np.asarray(xs, dtype=np.float64)
+        sites, xs = np.broadcast_arrays(sites, xs)
+        e = self.edges
+        k = np.searchsorted(e, xs, side="right") - 1
+        kc = np.clip(k, 0, self.values.shape[1] - 1)
+        lo = (xs - e[0]) * self.values[sites, 0]
+        hi = self.cum[sites, -1] + (xs - e[-1]) * self.values[sites, -1]
+        mid = self.cum[sites, kc] + (xs - e[kc]) * self.values[sites, kc]
+        return np.where(xs <= e[0], lo, np.where(xs >= e[-1], hi, mid))
+
+    def integral_rows(self, sites: np.ndarray, t0s: np.ndarray,
+                      t1s: np.ndarray) -> np.ndarray:
+        """Elementwise :meth:`integral` over broadcastable ``(site, t0,
+        t1)`` arrays (0 where ``t1 <= t0``, exactly like the scalar)."""
+        sites = np.asarray(sites)
+        t0s = np.asarray(t0s, dtype=np.float64)
+        t1s = np.asarray(t1s, dtype=np.float64)
+        sites, t0s, t1s = np.broadcast_arrays(sites, t0s, t1s)
+        return np.where(t1s <= t0s, 0.0,
+                        self.cum_at_rows(sites, t1s)
+                        - self.cum_at_rows(sites, t0s))
+
     def mean(self, site: int, t0: float, t1: float) -> float:
         return self.integral(site, t0, t1) / (t1 - t0) if t1 > t0 else \
             self.value(site, t0)

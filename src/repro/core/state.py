@@ -327,6 +327,14 @@ class ClusterState:
             [(s.busy + s.queued) / max(s.slots, 1) for s in self.sites],
             dtype=np.float64)
 
+    @cached_property
+    def site_bq_raw(self) -> np.ndarray:
+        """busy + queued per site (ints) — the un-normalized numerator of
+        :attr:`site_bq_load`, for reservation-aware re-scoring (the
+        same-tick slot reservations add to this count)."""
+        return np.array([s.busy + s.queued for s in self.sites],
+                        dtype=np.int64)
+
     # ---- grid-signal views (from the forecast's signal stacks) -------------
     @cached_property
     def site_carbon(self) -> np.ndarray:

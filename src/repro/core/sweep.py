@@ -29,7 +29,7 @@ from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 #: summary keys that are wall-clock measurements, not model outputs —
 #: nondeterministic by nature, excluded from determinism comparisons
-TIMING_KEYS = ("ticks_per_sec", "decide_s", "wall_s")
+TIMING_KEYS = ("ticks_per_sec", "decide_s", "decide_first_s", "wall_s")
 
 
 @dataclass(frozen=True)
@@ -165,18 +165,15 @@ class SweepResult:
                          + [fmt.format(*r) for r in rows])
 
 
-def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
-    """Run every policy of one (scenario, seed) cell on shared inputs;
-    yields ``(policy, SimResult-or-None, summary)`` triples.
+def _cell_sims(cell: tuple) -> Tuple[str, int, bool, List[Tuple[str, object]]]:
+    """Build one (scenario, seed) cell's simulators on shared inputs:
+    ``(label, seed, keep_results, [(policy_name, simulator), ...])``.
 
     Traces, the WAN topology, the grid signals and (per forecast sigma)
     the ForecastHorizon are constructed once and shared across the cell's
     simulators; the job list is deep-copied per run (simulators mutate
     it).  The trailing ``job_seed`` drives the arrival stream separately
-    from ``cfg.seed``'s environment stream (split-seed sweeps).  When the
-    caller does not keep full results, the per-job ``SimResult`` is
-    dropped *worker-side* — only the summary dict crosses the process
-    boundary.  Top-level so the process pool can pickle it.
+    from ``cfg.seed``'s environment stream (split-seed sweeps).
     """
     from repro.core.forecast import ForecastHorizon
     from repro.core.orchestrator import make_policy
@@ -193,7 +190,7 @@ def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
     signals = generate_signals(cfg.n_sites, cfg.days, seed=cfg.seed,
                                profile=cfg.signals)
     horizons: Dict[float, ForecastHorizon] = {}
-    out: List[Tuple[str, object]] = []
+    sims: List[Tuple[str, object]] = []
     for name in policies:
         pconf = policy_configs.get(name)
         if isinstance(pconf, dict):
@@ -207,13 +204,121 @@ def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
                 traces, wan=wan, signals=signals,
                 horizon_s=cfg.forecast_horizon_s,
                 sigma_s=sigma, seed=cfg.seed + 7)
-        sim = ClusterSimulator(
+        sims.append((name, ClusterSimulator(
             cfg, pol, traces=traces, jobs=copy.deepcopy(base_jobs),
             oracle_forecast=pol.wants_oracle_forecast,
-            wan_topology=wan, forecast_horizon=horizon, grid_signals=signals)
+            wan_topology=wan, forecast_horizon=horizon,
+            grid_signals=signals)))
+    return label, seed, keep_results, sims
+
+
+def _run_cell(cell: tuple) -> Tuple[str, int, List[Tuple[str, object, dict]]]:
+    """Run every policy of one (scenario, seed) cell on shared inputs;
+    yields ``(policy, SimResult-or-None, summary)`` triples.  When the
+    caller does not keep full results, the per-job ``SimResult`` is
+    dropped *worker-side* — only the summary dict crosses the process
+    boundary.  Top-level so the process pool can pickle it.
+    """
+    label, seed, keep_results, sims = _cell_sims(cell)
+    out: List[Tuple[str, object, dict]] = []
+    for name, sim in sims:
         r = sim.run()
         out.append((name, r if keep_results else None, r.summary()))
     return label, seed, out
+
+
+class _BatchRun:
+    """One suspended cell×policy simulation inside the batched runner."""
+
+    __slots__ = ("idx", "name", "sim", "gen", "state", "key", "label", "seed")
+
+    def __init__(self, idx, name, sim):
+        import dataclasses as _dc
+
+        self.idx, self.name, self.sim = idx, name, sim
+        self.gen = sim._event_gen()
+        self.state = None
+        pol = sim.policy
+        # config-identical policies share one decide_batch call; policies
+        # that aren't dataclasses have no stable value repr and stay solo
+        # (their default decide_batch loops decide anyway)
+        self.key = ((type(pol).__name__, repr(pol))
+                    if _dc.is_dataclass(pol) else (type(pol).__name__, id(pol)))
+
+    def advance(self, actions):
+        """Run events until the next orchestrator tick; True while live."""
+        try:
+            self.state = self.gen.send(actions)
+            return True
+        except StopIteration:
+            self.state = None
+            return False
+
+
+def run_cells_batched(cells: Sequence[tuple], *,
+                      keep_results: bool = True) -> SweepResult:
+    """Execute prepared cells in ONE process with cross-cell batched
+    decide: every cell×policy simulation is advanced as a coroutine
+    (``ClusterSimulator._event_gen``) to its next orchestrator tick, and
+    all snapshots awaiting a config-identical policy are answered by a
+    single ``Policy.decide_batch`` call — one fused
+    ``(cells × jobs × sites)`` kernel pass per group per round instead of
+    a python loop over cells (see :mod:`repro.core.policy_kernels`).
+
+    Per-run summaries are identical to :func:`run_cells` minus
+    ``TIMING_KEYS`` (the determinism guarantee tests/test_sweep.py
+    extends to this runner); the batched decide wall is attributed to the
+    member runs in equal shares.  Cells requesting the fixed-dt engine
+    run inline, unbatched.
+    """
+    t0 = time.perf_counter()
+    slots: List[Optional[Tuple[str, int, str, object, dict]]] = []
+    keeps: List[bool] = []
+    live: List[_BatchRun] = []
+    for cell in cells:
+        label, seed, keep, sims = _cell_sims(cell)
+        for name, sim in sims:
+            idx = len(slots)
+            slots.append(None)
+            keeps.append(keep)
+            if sim.cfg.engine != "event":
+                r = sim.run()
+                slots[idx] = (label, seed, name, r, r.summary())
+                continue
+            run = _BatchRun(idx, name, sim)
+            run.label, run.seed = label, seed
+            if run.advance(None):
+                live.append(run)
+            else:
+                r = sim._result(t0)
+                slots[idx] = (label, seed, name, r, r.summary())
+
+    def finalize(run: _BatchRun) -> None:
+        r = run.sim._result(t0)
+        slots[run.idx] = (run.label, run.seed, run.name, r, r.summary())
+
+    while live:
+        groups: Dict[tuple, List[_BatchRun]] = {}
+        for run in live:
+            groups.setdefault(run.key, []).append(run)
+        live = []
+        for members in groups.values():
+            pol = members[0].sim.policy
+            d0 = time.perf_counter()
+            acts = pol.decide_batch([run.state for run in members])
+            share = (time.perf_counter() - d0) / len(members)
+            for run, actions in zip(members, acts):
+                run.sim._record_decide(share)
+                if run.advance(actions):
+                    live.append(run)
+                else:
+                    finalize(run)
+    runs = [
+        RunRecord(scenario=label, policy=name, seed=seed, summary=summary,
+                  result=r if keeps[i] else None)
+        for i, (label, seed, name, r, summary) in enumerate(slots)
+    ]
+    return SweepResult(runs=runs, wall_s=time.perf_counter() - t0, workers=1)
 
 
 def run_cells(cells: Sequence[tuple], *, workers: Optional[int] = None,
@@ -252,5 +357,5 @@ def run_sweep(spec: SweepSpec, *, workers: Optional[int] = None,
 
 __all__ = [
     "RunRecord", "SweepResult", "SweepSpec", "TIMING_KEYS", "run_cells",
-    "run_sweep",
+    "run_cells_batched", "run_sweep",
 ]

@@ -4,16 +4,12 @@ A FUNCTION, not a module constant: importing this module never touches jax
 device state."""
 from __future__ import annotations
 
-import jax
+# the version-gated jax.make_mesh wrapper (AxisType is absent at the jax
+# pin); re-exported here because launch-layer callers import it from this
+# module
+from repro.parallel.compat import make_mesh
 
-
-def make_mesh(shape, axes):
-    """jax.make_mesh with Auto axis types where the jax version supports
-    them (jax.sharding.AxisType is absent in older releases)."""
-    axis_type = getattr(jax.sharding, "AxisType", None)
-    if axis_type is None:
-        return jax.make_mesh(shape, axes)
-    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+__all__ = ["make_local_mesh", "make_mesh", "make_production_mesh"]
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -1,0 +1,49 @@
+"""jax version-compatibility shims, consolidated in one place.
+
+The repo pins jax 0.4.37, which predates two `jax.sharding` APIs newer
+code paths want — both verified absent at the pin:
+
+* ``jax.sharding.get_abstract_mesh`` (explicit-axis-type mesh contexts),
+* ``jax.sharding.AxisType`` (the ``axis_types=`` argument of
+  ``jax.make_mesh``).
+
+Each shim probes once at import and degrades to the pinned-version
+behaviour.  Callers (``parallel/sharding.py``, ``launch/mesh.py``) use
+these helpers instead of scattering ``getattr`` gates; when the pin
+moves past both APIs, this module is the single file to delete.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+#: ``jax.sharding.get_abstract_mesh`` or None at the 0.4.x pin.
+_GET_ABSTRACT_MESH = getattr(jax.sharding, "get_abstract_mesh", None)
+
+#: ``jax.sharding.AxisType`` or None at the 0.4.x pin.
+_AXIS_TYPE = getattr(jax.sharding, "AxisType", None)
+
+
+def abstract_mesh_axis_names() -> Tuple[str, ...]:
+    """Axis names of the active abstract mesh (explicit-axis-type mesh
+    contexts), or ``()`` when there is none — including on jax versions
+    that predate ``get_abstract_mesh`` entirely."""
+    if _GET_ABSTRACT_MESH is None:
+        return ()
+    am = _GET_ABSTRACT_MESH()
+    if am is not None and am.shape_tuple:
+        return tuple(name for name, _ in am.shape_tuple)
+    return ()
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the jax version
+    supports them (``jax.sharding.AxisType`` is absent at the pin)."""
+    if _AXIS_TYPE is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(_AXIS_TYPE.Auto,) * len(axes))
+
+
+__all__ = ["abstract_mesh_axis_names", "make_mesh"]

@@ -105,13 +105,11 @@ def _mesh_axis_names() -> Tuple[str, ...]:
     env_mesh = pxla.thread_resources.env.physical_mesh
     if not env_mesh.empty:
         return tuple(env_mesh.axis_names)
-    # 3) abstract mesh (explicit-axis-type meshes; not in older jax)
-    get_am = getattr(jax.sharding, "get_abstract_mesh", None)
-    if get_am is not None:
-        am = get_am()
-        if am is not None and am.shape_tuple:
-            return tuple(name for name, _ in am.shape_tuple)
-    return ()
+    # 3) abstract mesh (explicit-axis-type meshes; version-gated in
+    # repro.parallel.compat — the API is absent at the jax pin)
+    from repro.parallel.compat import abstract_mesh_axis_names
+
+    return abstract_mesh_axis_names()
 
 
 @contextlib.contextmanager

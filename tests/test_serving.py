@@ -161,7 +161,7 @@ def test_serving_disabled_is_bit_identical():
         "paper-table6", "feasibility-aware",
         overrides=dict(days=2, n_jobs=24,
                        serving=ServingProfile(req_per_s_per_site=0.0))).run()
-    wallclock = {"wall_s", "ticks_per_sec", "decide_s"}
+    wallclock = {"wall_s", "ticks_per_sec", "decide_s", "decide_first_s"}
     trim = lambda s: {k: v for k, v in s.items() if k not in wallclock}
     assert trim(off.summary()) == trim(base.summary()) != {}
     assert base.requests_arrived == 0
@@ -197,7 +197,7 @@ def test_sweep_determinism_across_worker_counts():
                      overrides=dict(days=1, n_jobs=8))
     a = run_sweep(spec, workers=1)
     b = run_sweep(spec, workers=2)
-    wallclock = {"wall_s", "ticks_per_sec", "decide_s"}
+    wallclock = {"wall_s", "ticks_per_sec", "decide_s", "decide_first_s"}
 
     def key(res):
         return sorted(
