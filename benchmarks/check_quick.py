@@ -105,6 +105,19 @@ def main() -> int:
                 print(f"[check_quick] FAIL {policy}: request_gco2 "
                       f"{got_g} != baseline {b['request_gco2']} (0.1% band)")
                 failed = True
+        # prosumer-microgrid rows: battery cycling, sell-back revenue and
+        # DR compliance come out of the PowerLedger's deterministic span
+        # accounting — same 0.1% platform-noise band as grid_gco2
+        if "battery_cycles" in b:
+            for k, floor_abs in (("battery_cycles", 0.01),
+                                 ("sellback_usd", 0.01),
+                                 ("dr_compliance", 0.001)):
+                got_b = cur.get(k)
+                if got_b is None or abs(got_b - b[k]) > max(
+                        1e-3 * abs(b[k]), floor_abs):
+                    print(f"[check_quick] FAIL {policy}: {k} "
+                          f"{got_b} != baseline {b[k]} (0.1% band)")
+                    failed = True
     # mini-sweep row: regression gate on the *summed in-simulator wall*
     # (machine-normalized; the pool wall is spawn/import-dominated and
     # tracks runner provisioning, not the code) plus exact determinism of

@@ -100,6 +100,8 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
          FLEET_OVERRIDES),
         ("receding-horizon", "carbon-peaks", "receding-horizon", None),
         ("receding-horizon-price", "price-spread", "receding-horizon", None),
+        ("receding-horizon-battery", "battery-bridging", "receding-horizon",
+         None),
         ("carbon-slo", "train-plus-serve", "feasibility-aware", None),
         ("fleet-compiled", "forecastable-brownouts", "feasibility-aware",
          FLEET_COMPILED_OVERRIDES),
@@ -146,6 +148,23 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
                   f"(decide {r.decide_s:.2f}s steady + "
                   f"{r.decide_first_s:.2f}s first-tick)")
             record["policies"][label]["realtime_factor"] = round(rt, 1)
+        if r.battery_charge_kwh > 0.0 or r.sellback_kwh > 0.0:
+            # the prosumer microgrid row: storage cycling + export revenue
+            # from the PowerLedger, alongside the usual carbon digits
+            print(f"[quick]   battery: charge={r.battery_charge_kwh:.1f} kWh "
+                  f"discharge={r.battery_discharge_kwh:.1f} kWh "
+                  f"cycles={r.battery_cycles:.2f} "
+                  f"sellback={r.sellback_kwh:.1f} kWh "
+                  f"(${r.sellback_usd:.2f}) "
+                  f"dr_compliance={r.dr_compliance:.3f}")
+            record["policies"][label].update({
+                "battery_charge_kwh": round(r.battery_charge_kwh, 1),
+                "battery_discharge_kwh": round(r.battery_discharge_kwh, 1),
+                "battery_cycles": round(r.battery_cycles, 3),
+                "sellback_kwh": round(r.sellback_kwh, 1),
+                "sellback_usd": round(r.sellback_usd, 2),
+                "dr_compliance": round(r.dr_compliance, 4),
+            })
         if r.requests_arrived > 0:
             print(f"[quick]   serving: served={r.requests_served}"
                   f"/{r.requests_arrived} dropped={r.requests_dropped} "

@@ -25,26 +25,38 @@ POLICIES = ("static", "energy-only", "feasibility-aware", "oracle",
 
 
 def one(rows, label):
+    # dr_comp (fraction of requested curtail span-watts actually shed)
+    # only appears when the scenario issued DR requests — the
+    # normalized_table emits the key conditionally
+    has_dr = any("dr_compliance" in r for r in rows)
     out = []
     for r in rows:
         pe, pj, po = PAPER.get(r["policy"], ("-", "-", "-"))
-        out.append([
+        row = [
             r["policy"], r["nonrenew_energy"], r["grid_gco2"],
             r["grid_cost"], r["jct"],
             f"{r['migration_overhead']:.1%}", f"{r['stall_overhead']:.1%}",
             f"{r['renewable_frac']:.1%}", r["rejected_actions"],
+        ]
+        if has_dr:
+            row.append(f"{r.get('dr_compliance', 1.0):.1%}")
+        row += [
             f"{r['ticks_per_sec']:.0f}", f"{r['decide_s']:.3f}",
             f"{pe}/{pj}/{po}",
-        ])
+        ]
+        out.append(row)
     print(f"--- {label} ---")
     # 'rej' (rejected actions) makes action-validity regressions visible in
     # the table; 'ticks/s' tracks engine throughput and 'decide_s' the
     # cumulative policy overhead; 'gCO2'/'cost' are the grid-signal
     # accounting normalized to static (grid kWh are not interchangeable —
     # a dirty-peak kWh is not a curtailed-noon kWh)
-    print(table(out, ["policy", "nonrenew", "gCO2", "cost", "JCT",
-                      "migr-ovh", "stalls", "renew%", "rej", "ticks/s",
-                      "decide_s", "paper(e/jct/ovh)"]))
+    hdr = ["policy", "nonrenew", "gCO2", "cost", "JCT",
+           "migr-ovh", "stalls", "renew%", "rej"]
+    if has_dr:
+        hdr.append("dr_comp")
+    hdr += ["ticks/s", "decide_s", "paper(e/jct/ovh)"]
+    print(table(out, hdr))
     return {r["policy"]: r for r in rows}
 
 

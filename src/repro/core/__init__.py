@@ -26,6 +26,9 @@ from repro.core.orchestrator import (  # noqa: F401
 from repro.core.forecast import (  # noqa: F401
     ForecastHorizon, OutageForecast, WindowForecast,
 )
+from repro.core.ledger import (  # noqa: F401
+    BatteryConfig, DVFS_CURVE_POINTS, PowerLedger, ThrottleCurve,
+)
 from repro.core.signals import (  # noqa: F401
     CurtailRequest, GridSignals, SignalProfile, SignalStack,
     curtail_requests_from_carbon, generate_signals, grid_signal_integral,

@@ -262,6 +262,32 @@ class ForecastHorizon:
         return p_kw / HOUR * self._grid_signal_integral(
             sig.price, site, t0, t1)
 
+    def battery_cover_g(self, site: int, t0: float, t1: float, p_kw: float,
+                        soc_kwh: float, batt) -> float:
+        """Forecast gCO2 a battery with ``soc_kwh`` of charge could shave
+        off :meth:`grid_carbon_g` for the same span: the grid carbon
+        scaled by the fraction of the span's dark energy the battery can
+        deliver (bounded by its discharge-rate budget and state of
+        charge).  ``batt`` is a :class:`~repro.core.ledger.BatteryConfig`
+        (untyped to keep forecast ledger-free); 0 without one.
+
+        A planning *estimate*, deliberately simpler than the ledger's
+        posting-time discharge gates — it assumes charge available now
+        stays available for this span, which receding-horizon's
+        branch-relative comparisons tolerate."""
+        if batt is None or soc_kwh <= 0.0:
+            return 0.0
+        g = self.grid_carbon_g(site, t0, t1, p_kw)
+        if g <= 0.0:
+            return 0.0
+        green = self.green_seconds(site, t0, t1)
+        dark = max(0.0, (t1 - t0) - green)
+        need = p_kw * dark / HOUR
+        if need <= 0.0:
+            return 0.0
+        avail = min(soc_kwh, batt.max_discharge_kw * dark / HOUR)
+        return g * min(1.0, avail / need)
+
     # -- batched planning-cost rows ------------------------------------------
     #
     # Elementwise mirrors of the scalar cost queries over broadcastable
@@ -358,6 +384,27 @@ class ForecastHorizon:
                 np.asarray(sites), np.asarray(t0s), np.asarray(t1s)).shape)
         return p_kw / HOUR * self._signal_integral_rows(
             sig.price, sites, t0s, t1s)
+
+    def battery_cover_g_rows(self, sites, t0s, t1s, p_kw: float,
+                             soc_kwh, batt) -> np.ndarray:
+        """Elementwise :meth:`battery_cover_g` (``soc_kwh`` broadcasts
+        with the span arrays; lanes repeat the scalar's float ops)."""
+        sites = np.asarray(sites)
+        t0s = np.asarray(t0s, dtype=np.float64)
+        t1s = np.asarray(t1s, dtype=np.float64)
+        soc = np.asarray(soc_kwh, dtype=np.float64)
+        sites, t0s, t1s, soc = np.broadcast_arrays(sites, t0s, t1s, soc)
+        if batt is None:
+            return np.zeros(sites.shape)
+        g = self.grid_carbon_g_rows(sites, t0s, t1s, p_kw)
+        green = self._green_seconds_rows(sites, t0s, t1s)
+        dark = np.maximum(0.0, (t1s - t0s) - green)
+        need = p_kw * dark / HOUR
+        avail = np.minimum(soc, batt.max_discharge_kw * dark / HOUR)
+        with np.errstate(divide="ignore", invalid="ignore"):
+            frac = np.where(need > 0.0, avail / need, 0.0)
+        out = g * np.minimum(1.0, frac)
+        return np.where((soc > 0.0) & (g > 0.0) & (need > 0.0), out, 0.0)
 
     # -- demand-response curtail requests ------------------------------------
     @cached_property

@@ -105,6 +105,7 @@ class RecedingHorizonConfig(PolicyConfig):
     peak_threshold_g: float = 430.0  # Throttle grid compute above this
     dr_power_frac: float = 0.3  # throttle level during peaks / DR spans
     price_weight_g_per_usd: float = 0.0  # >0 folds $ into the objective
+    battery_aware: bool = False  # credit stored kWh against dark spans
 
 
 @dataclass(frozen=True)
@@ -842,7 +843,16 @@ class PlanAheadPolicy(Policy):
         plus same-tick slot reservations (first commit switches remaining
         rows to the reservation-aware scalar stage 2; compiled backends
         hand in ``ok=tt=None`` and the numpy grids — against the SAME
-        outage-hardened ``bw_grid`` — are recomputed lazily then)."""
+        outage-hardened ``bw_grid`` — are recomputed lazily then).
+
+        Until the first commit every row is judged against the tick's
+        *initial* ``flows``, so the arrival checks are independent and
+        run as one vector pass over the ``dest0 >= 0`` rows (the slow
+        part of fleet-scale decide used to be this loop walking every
+        candidate in Python just to skip the ``dest0 < 0`` majority);
+        the per-row gates are op-for-op the scalar oracle's, so the
+        first passing row — and hence the whole Action list — is
+        unchanged."""
         if not (dest0 >= 0).any():  # the common tick: nothing moves
             return []
         t = state.t
@@ -854,25 +864,50 @@ class PlanAheadPolicy(Policy):
 
         out: List[Action] = []
         flows = list(state.transfers)
-        reserved: Optional[Dict[int, int]] = None  # built on first commit
-        for k, i in enumerate(cand):
-            if reserved is None:
-                dest_sid = int(dest0[k])
-                if dest_sid < 0:
-                    continue
-            else:
-                if ok is None:
-                    ok, tt = feasibility_grid_arrays(
-                        soa.ckpt_bytes[cand][:, None],
-                        soa.t_load_s[cand][:, None], bw_grid, W[None, :],
-                        alpha=self.alpha)
-                dest_sid = best_destination(
-                    state, _row_view(soa, i), ok[k], tt[k], reserved,
-                    gamma=self.gamma, beta=self.beta,
-                    queue_penalty_s=self.queue_penalty_s,
-                    min_benefit_s=self.min_benefit_s)
-                if dest_sid is None:
-                    continue
+
+        # ---- vectorized pre-commit pass over the argbest rows
+        sel = np.nonzero(dest0 >= 0)[0]
+        d_sel = dest0[sel].astype(np.int64)
+        s_sel = s_i[sel].astype(np.int64)
+        rates = np.array([
+            state.post_admission_bps(int(s), int(d), flows)
+            for s, d in zip(s_sel, d_sel)])
+        pos = rates > 0.0
+        t_arr = t + 8.0 * soa.ckpt_bytes[cand[sel]] / np.where(pos, rates,
+                                                               1.0)
+        good = pos & ~(t_arr + self.arrival_margin_s > t + W[d_sel])
+        if start_after is not None:
+            good &= ~(start_after[s_sel, d_sel] < t_arr)
+        if not good.any():  # every argbest row failed its arrival check
+            return []
+        first_q = int(np.nonzero(good)[0][0])
+        k0 = int(sel[first_q])  # cand-index of the first commit
+        i0 = int(cand[k0])
+        dest_sid = int(d_sel[first_q])
+        src = int(s_sel[first_q])
+        jid = int(soa.jids[i0])
+        out.append(Migrate(jid, dest_sid))
+        flows.append((src, dest_sid))
+        reserved: Dict[int, int] = {s.sid: 0 for s in state.sites}
+        reserved[dest_sid] += 1
+        planned.add(jid)
+
+        # ---- reservation-aware scalar stage 2 for the remaining rows
+        # (the commit above invalidated the vector pass's flow snapshot)
+        for k in range(k0 + 1, len(cand)):
+            i = cand[k]
+            if ok is None:
+                ok, tt = feasibility_grid_arrays(
+                    soa.ckpt_bytes[cand][:, None],
+                    soa.t_load_s[cand][:, None], bw_grid, W[None, :],
+                    alpha=self.alpha)
+            dest_sid = best_destination(
+                state, _row_view(soa, i), ok[k], tt[k], reserved,
+                gamma=self.gamma, beta=self.beta,
+                queue_penalty_s=self.queue_penalty_s,
+                min_benefit_s=self.min_benefit_s)
+            if dest_sid is None:
+                continue
             src = int(s_i[k])
             # arrival check at the post-admission rate — counting both the
             # in-flight transfers and the migrations committed earlier this
@@ -888,8 +923,6 @@ class PlanAheadPolicy(Policy):
             jid = int(soa.jids[i])
             out.append(Migrate(jid, dest_sid))
             flows.append((src, dest_sid))
-            if reserved is None:
-                reserved = {s.sid: 0 for s in state.sites}
             reserved[dest_sid] += 1
             planned.add(jid)
         return out
@@ -1162,20 +1195,36 @@ class RecedingHorizonPolicy(Policy):
     peak_threshold_g: float = 430.0
     dr_power_frac: float = 0.3
     price_weight_g_per_usd: float = 0.0
+    battery_aware: bool = False
 
     # ---- shared branch-cost helpers (both decide paths call exactly
     # these, so cost floats are identical by construction) -------------------
-    def _run_cost_g(self, fc, site: int, t0: float, rem: float) -> float:
+    def _battery_ctx(self, state: ClusterState):
+        """``(per-site SoC kWh, BatteryConfig)`` when battery-aware
+        planning is on and the cluster reports storage; ``(None, None)``
+        otherwise — the None path threads through every cost helper
+        without a single extra float op, so battery-off decisions stay
+        bit-identical to the pre-battery planner."""
+        if not self.battery_aware or state.battery is None:
+            return None, None
+        return state.site_battery_soc, state.battery
+
+    def _run_cost_g(self, fc, site: int, t0: float, rem: float,
+                    soc=None, batt=None) -> float:
         """gCO2-equivalent of running ``rem`` compute-seconds at ``site``
-        from ``t0`` (forecast windows cover their overlap for free)."""
+        from ``t0`` (forecast windows cover their overlap for free;
+        with battery context, stored kWh discount the dark portion)."""
         g = fc.grid_carbon_g(site, t0, t0 + rem, fz.P_NODE_KW)
         if self.price_weight_g_per_usd > 0.0:
             g += self.price_weight_g_per_usd * fc.grid_price_usd(
                 site, t0, t0 + rem, fz.P_NODE_KW)
+        if soc is not None:
+            g -= fc.battery_cover_g(site, t0, t0 + rem, fz.P_NODE_KW,
+                                    float(soc[site]), batt)
         return g
 
     def _park_branches(self, fc, site: int, rem: float, t: float,
-                       bound_s: float):
+                       bound_s: float, soc=None, batt=None):
         """``(cost, window_start)`` for waiting at ``site`` for each of
         the next ``plan_windows`` forecast windows starting within
         ``bound_s`` (reveal-gated at the forecast horizon), start-sorted."""
@@ -1186,7 +1235,7 @@ class RecedingHorizonPolicy(Policy):
                 continue
             if w.start_s > limit:
                 break
-            cost = (self._run_cost_g(fc, site, w.start_s, rem)
+            cost = (self._run_cost_g(fc, site, w.start_s, rem, soc, batt)
                     + self.delay_cost_g_per_s * (w.start_s - t))
             out.append((cost, w.start_s))
             if len(out) >= self.plan_windows:
@@ -1194,16 +1243,16 @@ class RecedingHorizonPolicy(Policy):
         return out
 
     def _should_stay_parked(self, fc, site: int, rem: float,
-                            t: float) -> bool:
+                            t: float, soc=None, batt=None) -> bool:
         """Re-planned park decision for an already-paused job: keep
         waiting only while some park branch is still *strictly* cheaper
         than resuming now (no margin — the asymmetric hysteresis band
         that stops Pause/Resume flapping)."""
         if rem < self.min_park_compute_s:
             return False
-        stay = self._run_cost_g(fc, site, t, rem)
+        stay = self._run_cost_g(fc, site, t, rem, soc, batt)
         for cost, _start in self._park_branches(fc, site, rem, t,
-                                                self.max_park_s):
+                                                self.max_park_s, soc, batt):
             if cost < stay:
                 return True
         return False
@@ -1228,16 +1277,19 @@ class RecedingHorizonPolicy(Policy):
     # the branch argmin reproduces the scalar first-strictly-smaller
     # scan (numpy argmin keeps the first occurrence).  ----------------------
     def _run_cost_g_rows(self, fc, sites: np.ndarray, t0s: np.ndarray,
-                         rems: np.ndarray) -> np.ndarray:
+                         rems: np.ndarray, soc=None, batt=None) -> np.ndarray:
         """Elementwise :meth:`_run_cost_g` over broadcastable arrays."""
         g = fc.grid_carbon_g_rows(sites, t0s, t0s + rems, fz.P_NODE_KW)
         if self.price_weight_g_per_usd > 0.0:
             g = g + self.price_weight_g_per_usd * fc.grid_price_usd_rows(
                 sites, t0s, t0s + rems, fz.P_NODE_KW)
+        if soc is not None:
+            g = g - fc.battery_cover_g_rows(
+                sites, t0s, t0s + rems, fz.P_NODE_KW, soc[sites], batt)
         return g
 
     def _park_cost_rows(self, fc, sites: np.ndarray, rems: np.ndarray,
-                        t: float, bound_s: float
+                        t: float, bound_s: float, soc=None, batt=None
                         ) -> Tuple[np.ndarray, np.ndarray]:
         """All rows' :meth:`_park_branches` as ``(m, Kw)`` cost / start
         tensors (inf on lanes the scalar would not enumerate: windows
@@ -1248,14 +1300,16 @@ class RecedingHorizonPolicy(Policy):
         elig = (ws > t) & (ws <= limit)
         take = elig & (np.cumsum(elig, axis=1) <= self.plan_windows)
         st = np.where(take, ws, t)
-        cost = (self._run_cost_g_rows(fc, sites[:, None], st, rems[:, None])
+        cost = (self._run_cost_g_rows(fc, sites[:, None], st, rems[:, None],
+                                      soc, batt)
                 + self.delay_cost_g_per_s * (st - t))
         return (np.where(take, cost, np.inf),
                 np.where(take, ws, np.inf))
 
     def _plan_grid(self, state: ClusterState, fc, cand: np.ndarray,
                    s_i: np.ndarray, ok: np.ndarray, flows: list,
-                   reserved: Dict[int, int]) -> List[Action]:
+                   reserved: Dict[int, int], soc=None,
+                   batt=None) -> List[Action]:
         """Stage 1 as one ``(jobs × branches)`` cost tensor: columns are
         [parks in window order, migrates by sid] — the scalar
         enumeration order, so first-occurrence argmin ≡ the scalar
@@ -1273,9 +1327,10 @@ class RecedingHorizonPolicy(Policy):
         W = state.site_window_s
         free = state.site_free_slots
         t_row = np.full(m, t)
-        stay = self._run_cost_g_rows(fc, s_i, t_row, rem)
+        stay = self._run_cost_g_rows(fc, s_i, t_row, rem, soc, batt)
 
-        pcost, _ = self._park_cost_rows(fc, s_i, rem, t, self.max_park_s)
+        pcost, _ = self._park_cost_rows(fc, s_i, rem, t, self.max_park_s,
+                                        soc, batt)
         pcost = np.where(rem[:, None] >= self.min_park_compute_s,
                          pcost, np.inf)
         kw = pcost.shape[1]
@@ -1307,7 +1362,7 @@ class RecedingHorizonPolicy(Policy):
                                    * fc.price_integral_rows(s_rep, t_rep, ta))
         d_rep = np.broadcast_to(np.arange(n)[None, :], (m, n))
         mcost = ((transfer + self._run_cost_g_rows(fc, d_rep, ta,
-                                                   rem[:, None]))
+                                                   rem[:, None], soc, batt))
                  + self.delay_cost_g_per_s * (ta - t))
         mcost = np.where(feas, mcost, np.inf)
 
@@ -1323,7 +1378,8 @@ class RecedingHorizonPolicy(Policy):
             if fallback:
                 a = self._plan_one(
                     state, fc, jid, int(s_i[r]), float(ckpt[r]),
-                    float(rem[r]), ok[r], W, free, flows, reserved)
+                    float(rem[r]), ok[r], W, free, flows, reserved,
+                    soc, batt)
                 if a is not None:
                     out.append(a)
                 continue
@@ -1341,18 +1397,20 @@ class RecedingHorizonPolicy(Policy):
 
     def _plan_one(self, state: ClusterState, fc, jid: int, site: int,
                   ckpt_bytes: float, rem: float, ok_row, window_s,
-                  free_slots, flows, reserved) -> Optional[Action]:
+                  free_slots, flows, reserved, soc=None,
+                  batt=None) -> Optional[Action]:
         """The per-candidate plan search (stage 1).  ``ok_row`` is the
         job's Algorithm-1 feasibility row; ``window_s``/``free_slots``
         are per-site arrays.  Returns the winning first action (or None
         for *stay*) and updates ``flows``/``reserved`` on a commit."""
         t = state.t
-        stay = self._run_cost_g(fc, site, t, rem)
+        stay = self._run_cost_g(fc, site, t, rem, soc, batt)
         best_cost = float("inf")
         best: Optional[Tuple] = None
         if rem >= self.min_park_compute_s:
             for cost, _start in self._park_branches(fc, site, rem, t,
-                                                    self.max_park_s):
+                                                    self.max_park_s,
+                                                    soc, batt):
                 if cost < best_cost:
                     best_cost, best = cost, ("pause",)
         for d in range(state.n_sites):
@@ -1379,7 +1437,7 @@ class RecedingHorizonPolicy(Policy):
                                * fz.P_SYS_KW / 3600.0
                                * fc.price_integral(site, t, t_arr))
             cost = (transfer_g
-                    + self._run_cost_g(fc, d, t_arr, rem)
+                    + self._run_cost_g(fc, d, t_arr, rem, soc, batt)
                     + self.delay_cost_g_per_s * (t_arr - t))
             if cost < best_cost:
                 best_cost, best = cost, ("migrate", d)
@@ -1409,6 +1467,7 @@ class RecedingHorizonPolicy(Policy):
         if m == 0:
             return out
         green_j = state.site_renewable[soa.site]
+        soc, batt = self._battery_ctx(state)
 
         # ---- stage 1: plan search for grid-powered running jobs
         if fc is not None and soa.count(STATE_RUNNING):
@@ -1424,7 +1483,7 @@ class RecedingHorizonPolicy(Policy):
                 flows = list(state.transfers)
                 reserved = {s: 0 for s in range(state.n_sites)}
                 for act in self._plan_grid(state, fc, cand, s_i, ok,
-                                           flows, reserved):
+                                           flows, reserved, soc, batt):
                     out.append(act)
                     acted.add(act.jid)
 
@@ -1440,9 +1499,9 @@ class RecedingHorizonPolicy(Policy):
                 sites_p = soa.site[paused]
                 rem_p = soa.remaining_s[paused]
                 stay_p = self._run_cost_g_rows(
-                    fc, sites_p, np.full(len(paused), t), rem_p)
+                    fc, sites_p, np.full(len(paused), t), rem_p, soc, batt)
                 pcost, _ = self._park_cost_rows(fc, sites_p, rem_p, t,
-                                                self.max_park_s)
+                                                self.max_park_s, soc, batt)
                 keep = ((rem_p >= self.min_park_compute_s)
                         & (pcost < stay_p[:, None]).any(axis=1))
                 resume = green_j[paused] | ~keep
@@ -1458,9 +1517,10 @@ class RecedingHorizonPolicy(Policy):
                 sites_q = soa.site[queued]
                 rem_q = soa.remaining_s[queued]
                 stay_q = self._run_cost_g_rows(
-                    fc, sites_q, np.full(len(queued), t), rem_q)
+                    fc, sites_q, np.full(len(queued), t), rem_q, soc, batt)
                 pcost, pstart = self._park_cost_rows(fc, sites_q, rem_q, t,
-                                                     self.max_wait_s)
+                                                     self.max_wait_s,
+                                                     soc, batt)
                 kq = np.argmin(pcost, axis=1)
                 rr = np.arange(len(queued))
                 bc, bs = pcost[rr, kq], pstart[rr, kq]
@@ -1502,6 +1562,7 @@ class RecedingHorizonPolicy(Policy):
         fc = state.forecast
         out: List[Action] = []
         acted: set = set()
+        soc, batt = self._battery_ctx(state)
 
         # ---- stage 1: plan search for grid-powered running jobs
         if fc is not None:
@@ -1517,7 +1578,7 @@ class RecedingHorizonPolicy(Policy):
                     act = self._plan_one(
                         state, fc, job.jid, job.site, job.ckpt_bytes,
                         job.remaining_compute_s, ok_grid[i], window_s,
-                        free_slots, flows, reserved)
+                        free_slots, flows, reserved, soc, batt)
                     if act is not None:
                         out.append(act)
                         acted.add(act.jid)
@@ -1526,7 +1587,7 @@ class RecedingHorizonPolicy(Policy):
         for job in state.paused():
             green = state.site(job.site).renewable_active
             if green or fc is None or not self._should_stay_parked(
-                    fc, job.site, job.remaining_compute_s, t):
+                    fc, job.site, job.remaining_compute_s, t, soc, batt):
                 out.append(Resume(job.jid))
 
         # ---- stage 3: queued jobs — Defer to the cheapest nearby window
@@ -1537,10 +1598,11 @@ class RecedingHorizonPolicy(Policy):
                 if state.site(job.site).renewable_active:
                     continue
                 rem = job.remaining_compute_s
-                stay = self._run_cost_g(fc, job.site, t, rem)
+                stay = self._run_cost_g(fc, job.site, t, rem, soc, batt)
                 best_cost, best_start = float("inf"), None
                 for cost, start in self._park_branches(fc, job.site, rem, t,
-                                                       self.max_wait_s):
+                                                       self.max_wait_s,
+                                                       soc, batt):
                     if cost < best_cost:
                         best_cost, best_start = cost, start
                 if best_start is not None and \

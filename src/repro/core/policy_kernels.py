@@ -163,6 +163,10 @@ class StateRows:
     W: np.ndarray          # (n,)  site_window_s
     bq_load: np.ndarray    # (n,)
     free_slots: np.ndarray  # (n,)
+    # (n,) battery state-of-charge kWh when the cell reports storage,
+    # else None.  Carried for battery-aware compiled scoring; the
+    # numpy scorer ignores it, so scores stay bit-identical either way.
+    soc: Optional[np.ndarray] = None
 
     @property
     def k(self) -> int:
@@ -187,7 +191,8 @@ def rows_from_state(state, cand: np.ndarray,
         rem=soa.remaining_s[cand],
         cur_green=np.where(state.site_renewable[s_i], W[s_i], 0.0),
         load_src=state.site_load[s_i], s_i=s_i, bw=bw_grid, W=W,
-        bq_load=state.site_bq_load, free_slots=state.site_free_slots)
+        bq_load=state.site_bq_load, free_slots=state.site_free_slots,
+        soc=(state.site_battery_soc if state.battery is not None else None))
 
 
 def pad_jobs(k: int) -> int:
@@ -222,6 +227,10 @@ class ScoreBatch:
     free_slots: np.ndarray  # (B, S) pad 1
     n_jobs: Tuple[int, ...]
     n_sites: Tuple[int, ...]
+    # (B, S) battery SoC kWh, pad 0.0 — None unless some cell reports
+    # storage (reserved for battery-aware compiled scoring; unused by
+    # the numpy scorer so batch scores never depend on it)
+    soc: Optional[np.ndarray] = None
 
 
 def _ragged_idx(lens: np.ndarray, stride: int) -> np.ndarray:
@@ -277,7 +286,10 @@ def build_batch(rows: Sequence[StateRows]) -> ScoreBatch:
         bq_load=scol([r.bq_load for r in rows], 0.0),
         free_slots=scol([r.free_slots for r in rows], 1, np.int64),
         n_jobs=tuple(int(k) for k in ks),
-        n_sites=tuple(int(n) for n in ns))
+        n_sites=tuple(int(n) for n in ns),
+        soc=(scol([(r.soc if r.soc is not None else np.zeros(r.n))
+                   for r in rows], 0.0)
+             if any(r.soc is not None for r in rows) else None))
 
 
 def batch_from_states(states: Sequence, cands: Sequence[np.ndarray],
@@ -352,7 +364,9 @@ def batch_from_states(states: Sequence, cands: Sequence[np.ndarray],
         bq_load=scol([s.site_bq_load for s in states], 0.0),
         free_slots=scol([s.site_free_slots for s in states], 1, np.int64),
         n_jobs=tuple(int(k) for k in ks),
-        n_sites=tuple(int(n) for n in ns))
+        n_sites=tuple(int(n) for n in ns),
+        soc=(scol([s.site_battery_soc for s in states], 0.0)
+             if any(s.battery is not None for s in states) else None))
 
 
 def score_states(states: Sequence, cands: Sequence[np.ndarray],

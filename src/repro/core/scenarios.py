@@ -29,6 +29,10 @@ Built-ins:
                      separates policies the kWh columns cannot
   demand-response    advisory curtail-request events during carbon peaks,
                      honoured only by signal-aware policies
+  battery-bridging   per-site 20 kWh batteries charge from curtailed midday
+                     surplus and discharge through the evening carbon peak
+  sellback-spread    price seams + a 5 kW export line gated at 0.12 $/kWh:
+                     sell-back revenue separates sites carbon cannot
   inference-diurnal  serving-dominated: evening-peaked request stream over
                      a light training load, routed green-first
   train-plus-serve   the combined fabric: paper-table6 training plus a
@@ -55,6 +59,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Union
 
+from repro.core.ledger import BatteryConfig, ThrottleCurve
 from repro.core.serving import ServingProfile
 from repro.core.signals import SignalProfile
 from repro.core.traces import SiteTrace, TraceProfile, generate_trace
@@ -107,6 +112,11 @@ class Scenario:
     # inference serving plane (None / disabled profile = training only)
     serving: Optional[ServingProfile] = None
     serving_router: str = "green-first"
+    # prosumer microgrid layer (core/ledger.py): per-site battery /
+    # sell-back spec and the physical power→throughput curve Throttle
+    # actions map through (both None = the pre-ledger behaviour)
+    battery: Optional[BatteryConfig] = None
+    throttle_curve: Optional[ThrottleCurve] = None
     # per-policy default config overrides, applied when the policy is
     # resolved BY NAME for this scenario (an explicit Policy instance or
     # per-call policy_configs entry wins) — lets a scenario exercise a
@@ -150,6 +160,8 @@ class Scenario:
             signals=self.signals,
             serving=self.serving,
             serving_router=self.serving_router,
+            battery=self.battery,
+            throttle_curve=self.throttle_curve,
         )
         kw.update(overrides)
         if "wan" not in overrides:
@@ -352,6 +364,46 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="battery-bridging",
+    description="Prosumer storage over the duck curve: each site carries a "
+                "20 kWh / 5 kW battery that charges from curtailed midday "
+                "surplus and discharges through the evening carbon peak "
+                "(mean dark intensity >= 250 gCO2/kWh), bridging compute "
+                "across the dirtiest hours; residual green time exports at "
+                "2 kW.  Throttle actions map through the measured DVFS "
+                "power->throughput curve.  Identical trajectory to "
+                "carbon-peaks-shaped runs without storage — the battery "
+                "is pure accounting relief, so the gCO2 delta is the "
+                "storage value itself.",
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    signals=SignalProfile(carbon_evening=400.0, carbon_morning=150.0,
+                          carbon_midday_dip=200.0, carbon_noise=12.0,
+                          carbon_site_spread=0.15),
+    battery=BatteryConfig(capacity_kwh=20.0, max_charge_kw=5.0,
+                          max_discharge_kw=5.0, round_trip_efficiency=0.90,
+                          discharge_threshold_g=250.0, sellback_kw=2.0),
+    throttle_curve=ThrottleCurve(),
+))
+
+register_scenario(Scenario(
+    name="sellback-spread",
+    description="Prosumer economics on the price seams: wide per-site "
+                "wholesale spread (as in price-spread) with a small 10 kWh "
+                "battery and a 5 kW export line gated at 0.12 $/kWh — "
+                "sites sell curtailed green energy only where their own "
+                "price clears the floor, so sell-back revenue separates "
+                "sites the carbon columns cannot.",
+    signals=SignalProfile(price_site_spread=0.6, price_coupling=0.3,
+                          carbon_evening=120.0, carbon_midday_dip=60.0,
+                          carbon_site_spread=0.05),
+    battery=BatteryConfig(capacity_kwh=10.0, max_charge_kw=3.0,
+                          max_discharge_kw=3.0, round_trip_efficiency=0.90,
+                          discharge_threshold_g=0.0, sellback_kw=5.0,
+                          sellback_price_floor=0.12),
+    policy_configs={"receding-horizon": {"price_weight_g_per_usd": 2000.0}},
+))
+
+register_scenario(Scenario(
     name="inference-diurnal",
     description="Serving-dominated fabric: a light training load (60 jobs) "
                 "under an evening-peaked inference request stream (diurnal "
@@ -397,8 +449,8 @@ register_scenario(Scenario(
 
 
 __all__ = [
-    "FailureRegime", "ForecastNoise", "JobMix", "Scenario", "ServingProfile",
-    "SignalProfile", "TraceProfile", "WanProfile", "WanTopology",
-    "available_scenarios", "get_scenario", "hub_spoke_links",
-    "partitioned_links", "register_scenario",
+    "BatteryConfig", "FailureRegime", "ForecastNoise", "JobMix", "Scenario",
+    "ServingProfile", "SignalProfile", "ThrottleCurve", "TraceProfile",
+    "WanProfile", "WanTopology", "available_scenarios", "get_scenario",
+    "hub_spoke_links", "partitioned_links", "register_scenario",
 ]

@@ -52,6 +52,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.ledger import PowerLedger
 from repro.core.signals import GridSignals, _bump, grid_signal_integral
 
 HOUR = 3600.0
@@ -493,6 +494,7 @@ class ServingPlane:
         traces: Sequence,
         signals: Optional[GridSignals] = None,
         state_fn: Optional[Callable[[float], object]] = None,
+        ledger: Optional[PowerLedger] = None,
     ):
         self.profile = profile
         self.router = router
@@ -501,6 +503,12 @@ class ServingPlane:
         self.traces = traces
         self.signals = signals
         self._state_fn = state_fn
+        # all serve-energy/request-carbon accounting posts to the shared
+        # per-site PowerLedger (the simulator passes its own; a plane
+        # constructed standalone gets a private one) — the postings
+        # reproduce the historical `_bill` op for op
+        self.ledger = ledger if ledger is not None else PowerLedger(
+            n_sites, signals=signals, traces=traces)
         self.requests = generate_requests(profile, n_sites, days, seed=seed)
         self._ptr = 0
         self._jitter_rng = np.random.default_rng([seed, _RNG_TAG, 10 ** 6])
@@ -530,10 +538,6 @@ class ServingPlane:
         self.queue_samples: List[int] = []
         self.site_served = np.zeros(n_sites, dtype=np.int64)
         self.site_routed = np.zeros(n_sites, dtype=np.int64)
-        self.site_request_gco2 = np.zeros(n_sites)
-        self.request_gco2 = 0.0
-        self.serve_grid_kwh = 0.0
-        self.serve_renewable_kwh = 0.0
         # Little's-law area integral: ∫ N_in_system dt
         self._in_system = 0
         self._area_t = 0.0
@@ -726,27 +730,29 @@ class ServingPlane:
 
     def _bill(self, site: int, t0: float, t1: float) -> None:
         """Bill the service span's energy: renewable overlap free, the
-        grid remainder in kWh + gCO2 (same exact signal integrals as the
-        training accounting — separate accumulators, so training digits
-        never move)."""
-        span = t1 - t0
-        if span <= 0.0:
-            return
-        p = self.profile.p_serve_kw
-        green = self.traces[site].renewable_seconds(t0, t1)
-        self.serve_renewable_kwh += p * green / HOUR
-        self.serve_grid_kwh += p * (span - green) / HOUR
-        if self.signals is None or green >= span:
-            if self.signals is None:
-                return
-        if green <= 0.0:
-            ci = self.signals.carbon.integral(site, t0, t1)
-        else:
-            ov = self.traces[site].overlaps(t0, t1)
-            ci = grid_signal_integral(self.signals.carbon, site, ov, t0, t1)
-        g = p / HOUR * ci
-        self.request_gco2 += g
-        self.site_request_gco2[site] += g
+        grid remainder in kWh + gCO2 (posted through the shared
+        PowerLedger — same exact signal integrals as the training
+        accounting, separate accumulators, so training digits never
+        move)."""
+        self.ledger.post_serve(site, self.profile.p_serve_kw, t0, t1)
+
+    # serve accounting lives in the ledger; these read-through views
+    # keep the plane's historical attribute surface
+    @property
+    def serve_grid_kwh(self) -> float:
+        return self.ledger.serve_grid_kwh
+
+    @property
+    def serve_renewable_kwh(self) -> float:
+        return self.ledger.serve_renewable_kwh
+
+    @property
+    def request_gco2(self) -> float:
+        return self.ledger.request_gco2
+
+    @property
+    def site_request_gco2(self) -> np.ndarray:
+        return self.ledger.site_request_gco2
 
     def _bump_area(self, t: float) -> None:
         self.area_request_s += self._in_system * (t - self._area_t)

@@ -217,6 +217,35 @@ class SignalStack:
         return self.integral(site, t0, t1) / (t1 - t0) if t1 > t0 else \
             self.value(site, t0)
 
+    def integral_where_ge(
+        self, site: int, t0: float, t1: float, floor: float,
+    ) -> Tuple[float, float]:
+        """``(∫ v·1[v >= floor] dt, Σ time with v >= floor)`` over
+        ``[t0, t1]`` — the segment-gated integral the sell-back
+        accounting bills export revenue with (a prosumer only exports
+        into segments whose price clears the floor; with ``floor=0``
+        this is exactly the negative-price guard).  Piecewise-exact,
+        constant extrapolation outside the covered range."""
+        if t1 <= t0:
+            return 0.0, 0.0
+        e = self._edge_list
+        vals = self.values[site]
+        last = len(vals) - 1
+        k0 = min(max(bisect.bisect_right(e, t0) - 1, 0), last)
+        k1 = min(max(bisect.bisect_right(e, t1) - 1, 0), last)
+        tot = 0.0
+        dur = 0.0
+        for k in range(k0, k1 + 1):
+            a = t0 if k == k0 else e[k]
+            b = t1 if k == k1 else e[k + 1]
+            if b <= a:
+                continue
+            v = float(vals[k])
+            if v >= floor:
+                tot += v * (b - a)
+                dur += b - a
+        return tot, dur
+
 
 def grid_signal_integral(
     stack: SignalStack, site: int,

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
+from repro.core.ledger import BatteryConfig, PowerLedger, ThrottleCurve
 from repro.core.orchestrator import Policy, PolicyConfig, make_policy
 from repro.core.serving import ServingPlane, ServingProfile, make_router
 from repro.core.signals import (
@@ -125,7 +126,12 @@ class SimJob:
     # migration-induced pause (the paper's 'stall/congestion' mode)
     last_migration_end_s: float = -1e18
     # typed-action state
-    power_frac: float = 1.0  # Throttle level while running
+    power_frac: float = 1.0  # Throttle power cap while running
+    # throughput fraction delivered at power_frac: equal to power_frac
+    # without a SimConfig.throttle_curve (legacy linear scalar), else
+    # curve.throughput(power_frac).  Progress integrates tput_frac;
+    # energy always integrates power_frac.
+    tput_frac: float = 1.0
     defer_until_s: float = -1e18  # Defer: not schedulable before this time
     paused_policy_s: float = 0.0  # time spent in policy-initiated Pause
     # next-event engine bookkeeping
@@ -183,6 +189,13 @@ class SimConfig:
     # [seed, 151, ...] streams, so enabling it never moves a training draw.
     serving: Optional[ServingProfile] = None
     serving_router: str = "green-first"
+    # prosumer microgrid layer (core/ledger.py): per-site battery /
+    # sell-back spec (None = storage off; with storage off the ledger
+    # reproduces the pre-ledger accounting bit-for-bit), and the
+    # physical power→throughput curve Throttle actions map through
+    # (None = the legacy linear scalar).  Event engine only.
+    battery: Optional[BatteryConfig] = None
+    throttle_curve: Optional[ThrottleCurve] = None
 
     def wan_profile(self) -> WanProfile:
         """The authoritative WAN spec: ``wan`` if set, else the legacy
@@ -236,6 +249,24 @@ class SimResult:
     latency_p95_s: float = 0.0
     latency_p99_s: float = 0.0
     queue_depth_p95: float = 0.0
+    # prosumer accounting (all zero with storage/sell-back disabled)
+    battery_charge_kwh: float = 0.0
+    battery_discharge_kwh: float = 0.0
+    battery_loss_kwh: float = 0.0
+    battery_cycles: float = 0.0
+    sellback_kwh: float = 0.0
+    sellback_usd: float = 0.0
+    # demand-response compliance (watt-seconds requested shed vs shed)
+    dr_requested_ws: float = 0.0
+    dr_shed_ws: float = 0.0
+
+    @property
+    def dr_compliance(self) -> float:
+        """Fraction of curtail-request span-watts actually shed (1.0
+        when no request overlapped any compute span)."""
+        if self.dr_requested_ws <= 0.0:
+            return 1.0
+        return min(1.0, max(0.0, self.dr_shed_ws / self.dr_requested_ws))
 
     @property
     def slo_attainment(self) -> float:
@@ -312,6 +343,12 @@ class SimResult:
             "latency_p95_s": round(self.latency_p95_s, 3),
             "latency_p99_s": round(self.latency_p99_s, 3),
             "queue_depth_p95": round(self.queue_depth_p95, 1),
+            "battery_charge_kwh": round(self.battery_charge_kwh, 3),
+            "battery_discharge_kwh": round(self.battery_discharge_kwh, 3),
+            "battery_cycles": round(self.battery_cycles, 3),
+            "sellback_kwh": round(self.sellback_kwh, 3),
+            "sellback_usd": round(self.sellback_usd, 4),
+            "dr_compliance": round(self.dr_compliance, 4),
             "ticks_per_sec": round(self.ticks_per_sec, 1),
             "decide_s": round(self.decide_s, 4),
             "decide_first_s": round(self.decide_first_s, 4),
@@ -373,18 +410,18 @@ class ClusterSimulator:
         sigma = 0.0 if oracle_forecast else cfg.forecast_sigma_s
         self.forecaster = Forecaster(self.traces, sigma_s=sigma, seed=cfg.seed + 7)
         self._fail_rng = np.random.default_rng(cfg.seed + 23)
-        self.grid_kwh = 0.0
-        self.renewable_kwh = 0.0
-        self.migration_kwh = 0.0
-        # grid-signal accounting (parallel to the kWh spine — the kWh
-        # numbers are never touched by it): per-site carbon/price traces,
+        # grid-signal traces (per-site carbon/price + curtail requests):
         # own RNG stream, so enabling signals changes no existing draw
         self.signals = grid_signals or generate_signals(
             cfg.n_sites, cfg.days, seed=cfg.seed, profile=cfg.signals)
-        self.grid_gco2 = 0.0
-        self.grid_cost = 0.0
-        self.site_grid_gco2 = np.zeros(cfg.n_sites)
-        self.site_grid_cost = np.zeros(cfg.n_sites)
+        # the one accounting spine: every kWh / gCO2 / $ accumulator of
+        # the run lives in the per-site PowerLedger (core/ledger.py).
+        # Postings reproduce the historical per-span expressions op for
+        # op, so every digit is bit-identical with storage disabled;
+        # with a battery the ledger also runs the charge/sell-back
+        # timeline (deterministic, zero RNG draws).
+        self.ledger = PowerLedger(cfg.n_sites, signals=self.signals,
+                                  traces=self.traces, battery=cfg.battery)
         self.migrations = 0
         self.failed_migrations = 0
         self.failures = 0
@@ -416,7 +453,8 @@ class ClusterSimulator:
                 cfg.serving, make_router(cfg.serving_router),
                 n_sites=cfg.n_sites, days=cfg.days, seed=cfg.seed,
                 topo=self.wan_topology, traces=self.traces,
-                signals=self.signals, state_fn=self._serving_state)
+                signals=self.signals, state_fn=self._serving_state,
+                ledger=self.ledger)
             self._serve_stack = stack_traces(self.traces)
             self._empty_soa = JobSoA.from_views([])
         # incremental (site, state) job index: jid-keyed dicts give
@@ -498,43 +536,6 @@ class ClusterSimulator:
     def _queued_count(self, sid: int) -> int:
         return len(self._site_jobs.get((sid, "queued"), ()))
 
-    # -- grid-signal billing -------------------------------------------------
-    def _bill_grid(self, site: int, p_kw: float, t0: float, t1: float,
-                   green_s: float = 0.0) -> None:
-        """Bill carbon (g) and cost ($) for ``p_kw`` drawn from GRID power
-        at ``site`` over the non-renewable portion of ``[t0, t1]``
-        (``green_s`` = renewable seconds already computed for the span).
-        Analytic per-span integration — exact for the piecewise-constant
-        signal traces; never touches the kWh accounting."""
-        span = t1 - t0
-        if span <= 0.0 or green_s >= span:
-            return
-        sig = self.signals
-        if green_s <= 0.0:  # fully dark span: straight integral
-            ci = sig.carbon.integral(site, t0, t1)
-            pi = sig.price.integral(site, t0, t1)
-        else:  # mixed span: subtract the window overlaps
-            ov = self.traces[site].overlaps(t0, t1)
-            ci = grid_signal_integral(sig.carbon, site, ov, t0, t1)
-            pi = grid_signal_integral(sig.price, site, ov, t0, t1)
-        g = p_kw / HOUR * ci
-        c = p_kw / HOUR * pi
-        self.grid_gco2 += g
-        self.grid_cost += c
-        self.site_grid_gco2[site] += g
-        self.site_grid_cost[site] += c
-
-    def _bill_grid_tick(self, site: int, e_kwh: float, carb, price) -> None:
-        """Fixed-dt billing: one Riemann term ``e_kwh * signal(t)`` (the
-        legacy engine's rectangle rule, parity reference for the event
-        engine's exact integrals)."""
-        g = e_kwh * float(carb[site])
-        c = e_kwh * float(price[site])
-        self.grid_gco2 += g
-        self.grid_cost += c
-        self.site_grid_gco2[site] += g
-        self.site_grid_cost[site] += c
-
     # -- WAN model -----------------------------------------------------------
     def _nic_bps(self, t: float) -> float:
         """Legacy scalar view (uniform fabrics): the NIC rate at time t."""
@@ -586,6 +587,12 @@ class ClusterSimulator:
             "site_free_slots": np.maximum(0, cfg.slots_per_site - busy - inc),
             "site_bq_load": (busy + queued) / slots,
         }
+        if cfg.battery is not None:
+            # battery timelines are advanced lazily at posting time; the
+            # snapshot advertises the ledger's current per-site state of
+            # charge (policies treat it as a lower bound — charge landed
+            # since a site's last posting shows up at the next one)
+            site_arrays["site_battery_soc"] = self.ledger.soc.copy()
         def sites_factory():  # scalar consumers only (lazy)
             return [
                 SiteView(
@@ -630,6 +637,7 @@ class ClusterSimulator:
                                       transfers=transfers,
                                       forecast=self.forecast_horizon,
                                       site_arrays=site_arrays,
+                                      battery=cfg.battery,
                                       serving=(self.serving.view()
                                                if self.serving is not None
                                                else None))
@@ -751,6 +759,9 @@ class ClusterSimulator:
                 self.rejected_actions += 1
                 return
             j.power_frac = float(min(1.0, max(0.0, action.power_frac)))
+            curve = self.cfg.throttle_curve
+            j.tput_frac = (j.power_frac if curve is None
+                           else curve.throughput(j.power_frac))
             self._colf[j.jid, _CF_POWER] = j.power_frac
         else:
             self.rejected_actions += 1
@@ -782,12 +793,17 @@ class ClusterSimulator:
                 latency_p50_s=p50, latency_p95_s=p95, latency_p99_s=p99,
                 queue_depth_p95=srv.queue_depth_p95(),
             )
+        led = self.ledger
+        # run every site's battery/sell-back timeline out to the end of
+        # the horizon (idle sites still charge + export); no-op with
+        # storage disabled
+        led.finalize(self.cfg.days * 24 * HOUR * 2.0)
         return SimResult(
             policy=self.policy.name,
             jobs=self.jobs,
-            grid_kwh=self.grid_kwh,
-            renewable_kwh=self.renewable_kwh,
-            migration_kwh=self.migration_kwh,
+            grid_kwh=led.grid_kwh,
+            renewable_kwh=led.renewable_kwh,
+            migration_kwh=led.migration_kwh,
             migrations=self.migrations,
             failed_migrations=self.failed_migrations,
             failures=self.failures,
@@ -797,10 +813,18 @@ class ClusterSimulator:
             decide_s=self.decide_s,
             decide_first_s=self.decide_first_s,
             engine=self.cfg.engine,
-            grid_gco2=self.grid_gco2,
-            grid_cost=self.grid_cost,
-            site_grid_gco2=tuple(float(x) for x in self.site_grid_gco2),
-            site_grid_cost=tuple(float(x) for x in self.site_grid_cost),
+            grid_gco2=led.grid_gco2,
+            grid_cost=led.grid_cost,
+            site_grid_gco2=tuple(float(x) for x in led.site_grid_gco2),
+            site_grid_cost=tuple(float(x) for x in led.site_grid_cost),
+            battery_charge_kwh=led.battery_charge_kwh,
+            battery_discharge_kwh=led.battery_discharge_kwh,
+            battery_loss_kwh=led.battery_loss_kwh,
+            battery_cycles=led.battery_cycles,
+            sellback_kwh=led.sellback_kwh,
+            sellback_usd=led.sellback_usd,
+            dr_requested_ws=led.dr_requested_ws,
+            dr_shed_ws=led.dr_shed_ws,
             **serving_kw,
         )
 
@@ -861,6 +885,7 @@ class ClusterSimulator:
         topo = self.wan_topology
         traces = self.traces
         serving = self.serving
+        ledger = self.ledger
         n_jobs = len(self.jobs)
         p_node, p_sys = cfg.p_node_kw, cfg.p_sys_kw
 
@@ -893,23 +918,18 @@ class ClusterSimulator:
             st = j.state
             if st == "running":
                 frac = j.power_frac
-                j.progress_s += span * frac
+                j.progress_s += span * j.tput_frac
                 g = traces[j.site].renewable_seconds(j.anchor_s, t)
-                e_g = p_node * frac * g / HOUR
-                e_b = p_node * frac * (span - g) / HOUR
+                e_g, e_b = ledger.post_train(
+                    j.site, p_node * frac, j.anchor_s, t, g,
+                    p_nominal_kw=p_node)
                 j.renewable_kwh += e_g
                 j.grid_kwh += e_b
-                self.renewable_kwh += e_g
-                self.grid_kwh += e_b
-                self._bill_grid(j.site, p_node * frac, j.anchor_s, t, g)
             elif st == "migrating":
                 j.transfer_remaining_bits -= j.rate_bps * span
                 j.pause_s += span
                 j.pause_transfer_s += span
-                e = p_sys * span / HOUR
-                self.migration_kwh += e
-                self.grid_kwh += e  # transfer power billed to grid
-                self._bill_grid(j.site, p_sys, j.anchor_s, t)
+                ledger.post_migration(j.site, p_sys, j.anchor_s, t)
             elif st == "loading":
                 j.load_remaining_s -= span
                 j.pause_s += span
@@ -961,10 +981,10 @@ class ClusterSimulator:
 
         def push_run_completion(j: SimJob, t: float) -> None:
             j.ver += 1
-            if j.power_frac > 0.0:
+            if j.tput_frac > 0.0:
                 heapq.heappush(
                     done_heap,
-                    (t + (j.compute_s - j.progress_s) / j.power_frac,
+                    (t + (j.compute_s - j.progress_s) / j.tput_frac,
                      j.jid, j.ver))
 
         def schedule_site(s: int, t: float) -> None:
@@ -1115,19 +1135,19 @@ class ClusterSimulator:
                     for action in actions:
                         j = (jobs_by_id.get(action.jid)
                              if isinstance(action, Action) else None)
-                        pre = ((j.state, j.power_frac, j.defer_until_s)
+                        pre = ((j.state, j.tput_frac, j.defer_until_s)
                                if j is not None else None)
                         if j is not None:
                             flush(j, t)  # account up to t before any move
                         self._apply_action(action, t, state, horizon)
                         if j is None:
                             continue
-                        st0, frac0, defer0 = pre
+                        st0, tput0, defer0 = pre
                         if j.state != st0:
                             dirty.add(j.site)  # slot freed / job re-queued
                             if j.state == "migrating":
                                 transfers_dirty = True
-                        if j.power_frac != frac0:
+                        if j.tput_frac != tput0:
                             push_run_completion(j, t)  # throttle re-rates
                         if j.defer_until_s != defer0:
                             dirty.add(j.site)
@@ -1148,6 +1168,11 @@ class ClusterSimulator:
                 "the serving plane requires the next-event engine; "
                 "use engine='event' (fixed-dt is the training-only "
                 "parity reference)")
+        if self.cfg.battery is not None:
+            raise ValueError(
+                "battery storage requires the next-event engine; "
+                "use engine='event' (the charge/discharge timeline is "
+                "integrated analytically per span)")
         cfg = self.cfg
         wall_t0 = time.perf_counter()
         horizon = cfg.days * 24 * HOUR
@@ -1181,9 +1206,7 @@ class ClusterSimulator:
                     j.pause_s += dt
                     j.pause_transfer_s += dt
                     e = cfg.p_sys_kw * dt / HOUR
-                    self.migration_kwh += e
-                    self.grid_kwh += e  # transfer power billed to grid
-                    self._bill_grid_tick(j.site, e, carb, price)
+                    self.ledger.post_migration_tick(j.site, e, carb, price)
                     if j.transfer_remaining_bits <= 0:
                         dest = j.transfer_dest
                         j.transfer_dest = -1
@@ -1223,15 +1246,15 @@ class ClusterSimulator:
                 green = self.traces[s].active(t)
                 for j in list(running.values()):
                     frac = j.power_frac
-                    j.progress_s += dt * frac
+                    j.progress_s += dt * j.tput_frac
                     e = cfg.p_node_kw * frac * dt / HOUR
                     if green:
                         j.renewable_kwh += e
-                        self.renewable_kwh += e
                     else:
                         j.grid_kwh += e
-                        self.grid_kwh += e
-                        self._bill_grid_tick(s, e, carb, price)
+                    self.ledger.post_train_tick(s, e, green, carb, price)
+                    self.ledger.post_dr(s, cfg.p_node_kw * frac,
+                                        cfg.p_node_kw, t, t + dt)
                     if j.progress_s - j.last_ckpt_progress_s >= cfg.checkpoint_interval_s:
                         j.last_ckpt_progress_s = j.progress_s
                     if cfg.failure_rate_per_slot_hour > 0.0:
@@ -1350,6 +1373,9 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
     the action-validity and engine-throughput columns benchmarks surface."""
     base = results["static"]
     any_serving = any(r.requests_arrived > 0 for r in results.values())
+    any_dr = any(r.dr_requested_ws > 0.0 for r in results.values())
+    any_batt = any(r.battery_charge_kwh > 0.0 or r.sellback_kwh > 0.0
+                   for r in results.values())
     rows = []
     for name, r in results.items():
         row = {
@@ -1365,6 +1391,12 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
             "ticks_per_sec": round(r.ticks_per_sec, 1),
             "decide_s": round(r.decide_s, 4),
         }
+        if any_dr:
+            # fraction of CurtailRequest span-watts actually shed
+            row["dr_compliance"] = round(r.dr_compliance, 4)
+        if any_batt:
+            row["battery_cycles"] = round(r.battery_cycles, 3)
+            row["sellback_usd"] = round(r.sellback_usd, 4)
         if any_serving:
             row["requests_served"] = r.requests_served
             row["slo_attainment"] = round(r.slo_attainment, 4)

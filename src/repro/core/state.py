@@ -197,6 +197,10 @@ class ClusterState:
     # state, but keeping state serving-free avoids a cycle if routers
     # ever grow state helpers).
     serving: Optional["ServingView"] = None  # noqa: F821
+    # the run's per-site BatteryConfig (core/ledger.py), or None when
+    # storage is off.  Untyped for the same no-cycle reason as serving;
+    # battery-aware policies read it together with site_battery_soc.
+    battery: Optional[object] = None
 
     @cached_property
     def sites(self) -> Tuple[SiteView, ...]:
@@ -335,6 +339,14 @@ class ClusterState:
         return np.array([s.busy + s.queued for s in self.sites],
                         dtype=np.int64)
 
+    @cached_property
+    def site_battery_soc(self) -> np.ndarray:
+        """(n_sites,) battery state of charge in kWh at snapshot time
+        (zeros when the run carries no storage).  Seeded from the
+        simulator's PowerLedger via ``site_arrays``; the default here
+        covers snapshots built outside a storage-enabled run."""
+        return np.zeros(self.n_sites)
+
     # ---- grid-signal views (from the forecast's signal stacks) -------------
     @cached_property
     def site_carbon(self) -> np.ndarray:
@@ -386,6 +398,7 @@ class ClusterState:
         forecast_seed: int = 0,
         forecast_horizon_s: float = DEFAULT_HORIZON_S,
         serving=None,
+        battery=None,
     ) -> "ClusterState":
         """Assemble a snapshot.
 
@@ -422,7 +435,7 @@ class ClusterState:
         return cls(t=t, jobs_aos=tuple(jobs), sites_in=sites,
                    bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
                    wan=wan, transfers=transfers, forecast=forecast,
-                   nic_bps=nic_bps, serving=serving)
+                   nic_bps=nic_bps, serving=serving, battery=battery)
 
     @classmethod
     def build_soa(
@@ -439,6 +452,7 @@ class ClusterState:
         forecast: Optional[ForecastHorizon] = None,
         site_arrays: Optional[Dict[str, np.ndarray]] = None,
         serving=None,
+        battery=None,
     ) -> "ClusterState":
         """Assemble a snapshot from :class:`JobSoA` columns (the simulator's
         per-tick fast path — no per-job or per-site objects are
@@ -468,7 +482,7 @@ class ClusterState:
         st = cls(t=t, jobs_soa=soa, sites_in=sites_in,
                  bandwidth_bps=np.asarray(bandwidth_bps, dtype=np.float64),
                  wan=wan, transfers=transfers, forecast=forecast,
-                 nic_bps=nic_bps, serving=serving)
+                 nic_bps=nic_bps, serving=serving, battery=battery)
         if site_arrays:
             st.__dict__.update(site_arrays)
         return st

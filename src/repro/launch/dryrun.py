@@ -340,7 +340,8 @@ def plan_orchestration(
     # plus the forecast horizon (σ=0: the planner reads the calendar as-is)
     state = ClusterState.build(t, views, sites, wan=scn.build_wan(),
                                transfers=transfers, traces=traces,
-                               signals=scn.build_signals())
+                               signals=scn.build_signals(),
+                               battery=cfg.battery)
     jobs_by_id = {j.jid: j for j in state.jobs}
     flows = list(transfers)
     actions = []
@@ -390,6 +391,17 @@ def main():
                                             args.at_hour, transfers=transfers)
         print(f"[plan] scenario={args.scenario} policy={args.policy} "
               f"t={args.at_hour:.1f}h jobs={len(state.jobs)}")
+        if state.battery is not None:
+            b = state.battery
+            sell = (f" sellback={b.sellback_kw:.1f}kW"
+                    f"@floor=${b.sellback_price_floor:.2f}/kWh"
+                    if b.sellback_kw > 0.0 else "")
+            print(f"[plan] battery: {b.capacity_kwh:.0f} kWh/site, "
+                  f"charge<={b.max_charge_kw:.1f}kW "
+                  f"discharge<={b.max_discharge_kw:.1f}kW "
+                  f"rte={b.round_trip_efficiency:.2f} "
+                  f"dark-discharge>={b.discharge_threshold_g:.0f}g/kWh"
+                  f"{sell}")
         for s in state.sites:
             print(f"[plan]   site{s.sid}: busy={s.busy} "
                   f"{'GREEN' if s.renewable_active else 'grid '} "
