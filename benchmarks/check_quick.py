@@ -105,6 +105,23 @@ def main() -> int:
                 print(f"[check_quick] FAIL {policy}: request_gco2 "
                       f"{got_g} != baseline {b['request_gco2']} (0.1% band)")
                 failed = True
+        # fault-injection rows: the FaultPlan spans and the recovery
+        # ladder are seed-deterministic — outage/retry/reroute/abort
+        # counts are exact integers; mean time-to-repair is a pure span
+        # average so it gets the same 0.1% platform-noise band
+        if "retries" in b:
+            for k in ("site_outages", "retries", "reroutes",
+                      "watchdog_aborts", "failed_migrations"):
+                if cur.get(k) != b[k]:
+                    print(f"[check_quick] FAIL {policy}: {k} "
+                          f"{cur.get(k)} != baseline {b[k]}")
+                    failed = True
+            got_m = cur.get("mttr_s")
+            if got_m is None or abs(got_m - b["mttr_s"]) > max(
+                    1e-3 * abs(b["mttr_s"]), 0.2):
+                print(f"[check_quick] FAIL {policy}: mttr_s "
+                      f"{got_m} != baseline {b['mttr_s']} (0.1% band)")
+                failed = True
         # prosumer-microgrid rows: battery cycling, sell-back revenue and
         # DR compliance come out of the PowerLedger's deterministic span
         # accounting — same 0.1% platform-noise band as grid_gco2

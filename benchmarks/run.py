@@ -82,8 +82,11 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
     span) and on ``price-spread`` (scenario-scoped non-zero price
     weight), the serving plane on ``train-plus-serve`` (carbon-slo
     router: request events + replica queues interleaved with training
-    migrations), plus a mini Monte-Carlo sweep (2 scenarios x 2 policies
-    x 2 seeds through the process-pool engine).  Ticks/sec = processed events
+    migrations), the fault-injection subsystem on ``chaos-monkey`` (all
+    five fault classes mildly on; the fault-blind ``energy-only`` policy
+    exercises the watchdog-abort -> retry -> reroute ladder and must
+    still land every job), plus a mini Monte-Carlo sweep (2 scenarios x
+    2 policies x 2 seeds through the process-pool engine).  Ticks/sec = processed events
     per second under the next-event engine; ``decide_s`` = cumulative
     wall time inside ``Policy.decide``."""
     from repro.core import ClusterSimulator
@@ -103,6 +106,7 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
         ("receding-horizon-battery", "battery-bridging", "receding-horizon",
          None),
         ("carbon-slo", "train-plus-serve", "feasibility-aware", None),
+        ("chaos-monkey", "chaos-monkey", "energy-only", None),
         ("fleet-compiled", "forecastable-brownouts", "feasibility-aware",
          FLEET_COMPILED_OVERRIDES),
     ):
@@ -180,6 +184,23 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
                 "latency_p95_s": round(r.latency_p95_s, 3),
             })
             ok &= r.requests_served > 0
+        if r.site_outages > 0 or r.watchdog_aborts > 0:
+            # the fault-injection row: recovery-ladder telemetry (the
+            # fault-blind policy walks watchdog aborts -> retries ->
+            # reroutes yet still lands every job)
+            print(f"[quick]   faults: outages={r.site_outages} "
+                  f"mttr={r.mttr_s:.1f}s retries={r.retries} "
+                  f"reroutes={r.reroutes} "
+                  f"watchdog_aborts={r.watchdog_aborts} "
+                  f"failed_migrations={r.failed_migrations}")
+            record["policies"][label].update({
+                "site_outages": r.site_outages,
+                "mttr_s": round(r.mttr_s, 1),
+                "retries": r.retries,
+                "reroutes": r.reroutes,
+                "watchdog_aborts": r.watchdog_aborts,
+                "failed_migrations": r.failed_migrations,
+            })
         ok &= r.completed == len(r.jobs)
     # mini-sweep: exercises the process-pool fan-out end to end in CI
     spec = SweepSpec(

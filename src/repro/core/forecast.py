@@ -46,6 +46,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.faults import FaultPlan
 from repro.core.signals import CurtailRequest, GridSignals
 
 HOUR = 3600.0
@@ -129,6 +130,11 @@ class ForecastHorizon:
     # None when the run carries no signals — every signal query then
     # degrades to the zero-signal answer (0 g/kWh, $0, no DR spans)
     signals: Optional[GridSignals] = None
+    # realized fault plan (core/faults.py); pre-materialized spans are
+    # exactly forecastable, same precedent as WAN brownout calendars.
+    # None (every fault-free run) degrades every fault query to the
+    # no-fault answer (inf next-start, 0 repair time) at zero cost.
+    faults: Optional[FaultPlan] = None
 
     @property
     def n_sites(self) -> int:
@@ -710,6 +716,43 @@ class ForecastHorizon:
                 floor = min(floor, o.capacity_bps)
         return floor
 
+    # -- fault-plan queries (core/faults.py) ---------------------------------
+    # A realized FaultPlan is pre-materialized data, so (like brownout
+    # calendars) it is forecast exactly.  Next-start queries gate at the
+    # same ``t + horizon_s`` reveal limit as outage queries; repair-time
+    # queries describe an outage already in progress, so no limit applies.
+    def next_fault_start_after(self, src: int, dst: int, t: float) -> float:
+        """First hard-fault START strictly after ``t`` that would kill
+        link (src, dst) — a blackout at either endpoint or a hard link
+        failure (inf when no plan / none inside the lookahead).  The
+        fault analogue of :meth:`next_outage_start_after`."""
+        if self.faults is None:
+            return float("inf")
+        s = self.faults.next_fault_start_after(src, dst, t)
+        return s if s < t + self.horizon_s else float("inf")
+
+    def next_fault_start_grid(self, t: float) -> Optional[np.ndarray]:
+        """(n, n) batched :meth:`next_fault_start_after` (None when no
+        plan — callers skip the masking pass entirely; inf diagonal)."""
+        if self.faults is None:
+            return None
+        g = self.faults.next_fault_start_grid(t)
+        return np.where(g < t + self.horizon_s, g, np.inf)
+
+    def site_repair_s(self, site: int, t: float) -> float:
+        """Remaining blackout time at ``site`` (0 when the site is up) —
+        the repair-time estimate fault-aware policies weigh against a
+        destination's queue."""
+        if self.faults is None:
+            return 0.0
+        return self.faults.repair_time_s(site, t)
+
+    def site_repair_grid(self, t: float) -> Optional[np.ndarray]:
+        """(n_sites,) batched :meth:`site_repair_s` (None when no plan)."""
+        if self.faults is None:
+            return None
+        return self.faults.repair_time_vec(t)
+
     # -- builder -------------------------------------------------------------
     @classmethod
     def build(
@@ -721,6 +764,7 @@ class ForecastHorizon:
         horizon_s: float = DEFAULT_HORIZON_S,
         sigma_s: float = 0.0,
         seed: int = 0,
+        faults: Optional[FaultPlan] = None,
     ) -> "ForecastHorizon":
         """Materialize the forecast from site traces (+ optionally a
         :class:`~repro.core.wan.WanTopology` brownout calendar and the
@@ -780,7 +824,7 @@ class ForecastHorizon:
         outages.sort(key=lambda o: (o.start_s, o.src, o.dst))
         return cls(horizon_s=float(horizon_s), sigma_s=float(sigma_s),
                    site_windows=tuple(site_windows), outages=tuple(outages),
-                   signals=signals)
+                   signals=signals, faults=faults)
 
 
 __all__ = [

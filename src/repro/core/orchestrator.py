@@ -78,6 +78,7 @@ class FeasibilityConfig(PolicyConfig):
     min_benefit_s: float = 1500.0  # hysteresis: don't move for marginal wins
     eps: float = 0.0  # >0 enables stochastic feasibility (§VI.H)
     forecast_sigma_s: float = 0.0
+    fault_aware: bool = True  # mask blacked-out sites / dead links
 
 
 @dataclass(frozen=True)
@@ -106,6 +107,7 @@ class RecedingHorizonConfig(PolicyConfig):
     dr_power_frac: float = 0.3  # throttle level during peaks / DR spans
     price_weight_g_per_usd: float = 0.0  # >0 folds $ into the objective
     battery_aware: bool = False  # credit stored kWh against dark spans
+    fault_aware: bool = True  # mask blacked-out sites / dead links
 
 
 @dataclass(frozen=True)
@@ -121,6 +123,7 @@ class PlanAheadConfig(PolicyConfig):
     pause_horizon_s: float = 4 * 3600.0  # Pause-for-window lookahead
     min_pause_compute_s: float = 1800.0  # don't park nearly-done jobs
     arrival_margin_s: float = 1800.0  # forecast-noise margin on arrivals
+    fault_aware: bool = True  # mask blacked-out sites / dead links
 
 
 # ---------------------------------------------------------------------------
@@ -517,6 +520,7 @@ class FeasibilityAwarePolicy(Policy):
     min_benefit_s: float = 1500.0
     eps: float = 0.0
     forecast_sigma_s: float = 0.0
+    fault_aware: bool = True
 
     def _params(self) -> pk.ScoreParams:
         return pk.ScoreParams(
@@ -536,9 +540,28 @@ class FeasibilityAwarePolicy(Policy):
         cand = ((soa.state == STATE_RUNNING) & soa.eligible).nonzero()[0]
         return cand if len(cand) else None
 
+    def _fault_bw(self, state: ClusterState,
+                  s_i: np.ndarray) -> Optional[np.ndarray]:
+        """Bandwidth rows with fault-dead links zeroed, or ``None`` when
+        no masking applies (fault-blind config, or no fault views seeded
+        on the snapshot) — callers then use the advertised rows, keeping
+        every fault-free digit byte-identical.  ``link_up`` composes
+        endpoint blackouts with hard link failures, so a zeroed column
+        also masks a blacked-out destination site (which otherwise
+        advertises free slots and a live window — the trap a fault-blind
+        policy walks into)."""
+        if not self.fault_aware:
+            return None
+        lu = state.__dict__.get("link_up")
+        if lu is None:
+            return None
+        return np.where(lu[s_i, :],
+                        np.asarray(state.bandwidth_bps)[s_i, :], 0.0)
+
     def _commit(self, state: ClusterState, cand: np.ndarray,
                 dest0: np.ndarray, ok: Optional[np.ndarray],
-                tt: Optional[np.ndarray]) -> List[Action]:
+                tt: Optional[np.ndarray],
+                bw_grid: Optional[np.ndarray] = None) -> List[Action]:
         """Turn argbest destinations into Actions under same-tick slot
         reservations, without leaving numpy.  Each commit to site ``d``
         bumps the reservation count and re-scores ONLY column ``d`` (a
@@ -567,10 +590,12 @@ class FeasibilityAwarePolicy(Policy):
                 # first commit this tick: materialize the grids the
                 # reservation-aware column updates need
                 if ok is None:
+                    if bw_grid is None:
+                        bw_grid = state.bandwidth_bps[soa.site[cand], :]
                     ok, tt = feasibility_grid_arrays(
                         soa.ckpt_bytes[cand][:, None],
                         soa.t_load_s[cand][:, None],
-                        state.bandwidth_bps[soa.site[cand], :],
+                        bw_grid,
                         state.site_window_s[None, :], alpha=self.alpha,
                         eps=self.eps,
                         forecast_sigma_s=self.forecast_sigma_s)
@@ -617,20 +642,22 @@ class FeasibilityAwarePolicy(Policy):
         cand = self._prep(state)
         if cand is None:
             return []
-        if pk.backend() != "numpy":
-            dest0 = pk.score_rows([pk.rows_from_state(state, cand)],
-                                  self._params())[0]
-            return self._commit(state, cand, dest0, None, None)
         soa = state.soa
+        bw = self._fault_bw(state, soa.site[cand])
+        if pk.backend() != "numpy":
+            dest0 = pk.score_rows([pk.rows_from_state(state, cand, bw)],
+                                  self._params())[0]
+            return self._commit(state, cand, dest0, None, None, bw)
         ok, tt, dest0 = score_migrations(
-            state, cand, state.bandwidth_bps[soa.site[cand], :],
+            state, cand,
+            bw if bw is not None else state.bandwidth_bps[soa.site[cand], :],
             alpha=self.alpha, eps=self.eps,
             forecast_sigma_s=self.forecast_sigma_s, gamma=self.gamma,
             beta=self.beta, queue_penalty_s=self.queue_penalty_s,
             min_benefit_s=self.min_benefit_s)
         if dest0 is None:
             return []
-        return self._commit(state, cand, dest0, ok, tt)
+        return self._commit(state, cand, dest0, ok, tt, bw)
 
     def decide_batch(self, states: Sequence[ClusterState]) -> List[List[Action]]:
         """All cells' candidate rows scored in ONE fused kernel pass
@@ -638,14 +665,27 @@ class FeasibilityAwarePolicy(Policy):
         :mod:`repro.core.policy_kernels` on padding lanes)."""
         cands = [self._prep(s) for s in states]
         live = [i for i, c in enumerate(cands) if c is not None]
+        bws = [self._fault_bw(states[i], states[i].soa.site[cands[i]])
+               for i in live]
+        if any(b is not None for b in bws):
+            # batch_from_states takes bw_grids all-or-nothing: fill the
+            # unmasked cells with their advertised rows (element-identical)
+            bws = [b if b is not None
+                   else np.asarray(states[i].bandwidth_bps)[
+                       states[i].soa.site[cands[i]], :]
+                   for i, b in zip(live, bws)]
+        else:
+            bws = None
         dests = iter(pk.score_states([states[i] for i in live],
                                      [cands[i] for i in live],
-                                     self._params()))
+                                     self._params(), bws))
+        bw_by_cell = dict(zip(live, bws)) if bws is not None else {}
         out: List[List[Action]] = []
-        for s, c in zip(states, cands):
+        for i, (s, c) in enumerate(zip(states, cands)):
             d0 = None if c is None else next(dests)
             out.append([] if d0 is None
-                       else self._commit(s, c, d0, None, None))
+                       else self._commit(s, c, d0, None, None,
+                                         bw_by_cell.get(i)))
         return out
 
     def decide_scalar(self, state: ClusterState) -> List[Action]:
@@ -654,9 +694,11 @@ class FeasibilityAwarePolicy(Policy):
         candidates = state.migratable()
         if not candidates:
             return []
+        bw = self._fault_bw(
+            state, np.array([j.site for j in candidates], dtype=np.int64))
         ok_grid, t_transfer_grid = algorithm1_grid(
             state, candidates, alpha=self.alpha, eps=self.eps,
-            forecast_sigma_s=self.forecast_sigma_s)
+            forecast_sigma_s=self.forecast_sigma_s, bw_grid=bw)
         out: List[Action] = []
         # Track slot reservations within this tick so we do not herd.
         reserved: Dict[int, int] = {s.sid: 0 for s in state.sites}
@@ -756,6 +798,7 @@ class PlanAheadPolicy(Policy):
     pause_horizon_s: float = 4 * 3600.0
     min_pause_compute_s: float = 1800.0
     arrival_margin_s: float = 1800.0
+    fault_aware: bool = True
 
     def _params(self) -> pk.ScoreParams:
         return pk.ScoreParams(
@@ -808,6 +851,13 @@ class PlanAheadPolicy(Policy):
             cross = (os_rows < t + tt0) & (bw_grid > 0.0)
             bw_grid = np.where(cross, np.minimum(bw_grid, o_cap[s_i, :]),
                                bw_grid)
+        # fault masking: links the fault views mark dead (hard failure or
+        # a blacked-out endpoint) carry zero plan rate — the destination
+        # becomes infeasible exactly like a zero-capacity brownout
+        if self.fault_aware:
+            lu = state.__dict__.get("link_up")
+            if lu is not None:
+                bw_grid = np.where(lu[s_i, :], bw_grid, 0.0)
         return cand, s_i, sizes, bw_grid
 
     def _migrations(self, state: ClusterState, planned: set) -> List[Action]:
@@ -861,6 +911,13 @@ class PlanAheadPolicy(Policy):
         W = state.site_window_s
         start_after = (fc.next_outage_start_after_grid(t)
                        if fc is not None else None)
+        # fold forecast fault starts into the arrival gate: a transfer
+        # must land before the first thing — brownout OR blackout/link
+        # failure — that would kill its plan rate
+        if start_after is not None and self.fault_aware:
+            fg = fc.next_fault_start_grid(t)
+            if fg is not None:
+                start_after = np.minimum(start_after, fg)
 
         out: List[Action] = []
         flows = list(state.transfers)
@@ -955,6 +1012,11 @@ class PlanAheadPolicy(Policy):
                     t_transfer = 8.0 * job.ckpt_bytes / bw
                     if o.start_s < t + t_transfer:  # would cross the outage
                         bw_grid[i, d] = min(bw, o.capacity_bps)
+        # fault masking (scalar twin of _mig_prep's): dead links score 0
+        if self.fault_aware:
+            lu = state.__dict__.get("link_up")
+            if lu is not None:
+                bw_grid = np.where(lu[cand_sites, :], bw_grid, 0.0)
         ok_grid, t_transfer_grid = algorithm1_grid(
             state, candidates, alpha=self.alpha, bw_grid=bw_grid)
 
@@ -1000,8 +1062,11 @@ class PlanAheadPolicy(Policy):
                 # invalidates the rate estimate — an outage already in
                 # progress is baked into the (degraded) capacities behind
                 # `rate`, but it must not mask a back-to-back successor
-                if fc.next_outage_start_after(job.site, dest_sid,
-                                              t) < t_arrive:
+                nxt = fc.next_outage_start_after(job.site, dest_sid, t)
+                if self.fault_aware:
+                    nxt = min(nxt, fc.next_fault_start_after(
+                        job.site, dest_sid, t))
+                if nxt < t_arrive:
                     continue
             out.append(Migrate(job.jid, dest_sid))
             flows.append((job.site, dest_sid))
@@ -1196,6 +1261,7 @@ class RecedingHorizonPolicy(Policy):
     dr_power_frac: float = 0.3
     price_weight_g_per_usd: float = 0.0
     battery_aware: bool = False
+    fault_aware: bool = True
 
     # ---- shared branch-cost helpers (both decide paths call exactly
     # these, so cost floats are identical by construction) -------------------
@@ -1350,7 +1416,12 @@ class RecedingHorizonPolicy(Policy):
                 & (free[None, :] > 0) & (rate > 0.0))
         t_arr = t + 8.0 * ckpt[:, None] / np.where(feas, rate, 1.0)
         feas &= ~(t_arr + self.arrival_margin_s > t + W[None, :])
-        feas &= ~(fc.next_outage_start_after_grid(t)[s_i, :] < t_arr)
+        nxt = fc.next_outage_start_after_grid(t)[s_i, :]
+        if self.fault_aware:
+            fg = fc.next_fault_start_grid(t)
+            if fg is not None:
+                nxt = np.minimum(nxt, fg[s_i, :])
+        feas &= ~(nxt < t_arr)
         ta = np.where(feas, t_arr, t)
         s_rep = np.broadcast_to(s_i[:, None], (m, n))
         t_rep = np.broadcast_to(t_row[:, None], (m, n))
@@ -1426,7 +1497,10 @@ class RecedingHorizonPolicy(Policy):
             # window with margin, before any forecast outage on the link
             if t_arr + self.arrival_margin_s > t + float(window_s[d]):
                 continue
-            if fc.next_outage_start_after(site, d, t) < t_arr:
+            nxt = fc.next_outage_start_after(site, d, t)
+            if self.fault_aware:
+                nxt = min(nxt, fc.next_fault_start_after(site, d, t))
+            if nxt < t_arr:
                 continue
             transfer_g = fz.P_SYS_KW / 3600.0 * fc.carbon_integral(
                 site, t, t_arr)
@@ -1475,10 +1549,17 @@ class RecedingHorizonPolicy(Policy):
                     & ~green_j).nonzero()[0]
             if len(cand):
                 s_i = soa.site[cand]
+                bw = state.bandwidth_bps[s_i, :]
+                if self.fault_aware:
+                    lu = state.__dict__.get("link_up")
+                    if lu is not None:
+                        # dead links (hard failure / blacked-out endpoint)
+                        # plan at rate 0 — infeasible like a dark brownout
+                        bw = np.where(lu[s_i, :], bw, 0.0)
                 ok, _tt = feasibility_grid_arrays(
                     soa.ckpt_bytes[cand][:, None],
                     soa.t_load_s[cand][:, None],
-                    state.bandwidth_bps[s_i, :],
+                    bw,
                     state.site_window_s[None, :], alpha=self.alpha)
                 flows = list(state.transfers)
                 reserved = {s: 0 for s in range(state.n_sites)}
@@ -1569,7 +1650,17 @@ class RecedingHorizonPolicy(Policy):
             cands = [j for j in state.migratable()
                      if not state.site(j.site).renewable_active]
             if cands:
-                ok_grid, _tt = algorithm1_grid(state, cands, alpha=self.alpha)
+                bw = None
+                if self.fault_aware:
+                    lu = state.__dict__.get("link_up")
+                    if lu is not None:
+                        s_c = np.array([j.site for j in cands],
+                                       dtype=np.int64)
+                        bw = np.where(
+                            lu[s_c, :],
+                            np.asarray(state.bandwidth_bps)[s_c, :], 0.0)
+                ok_grid, _tt = algorithm1_grid(state, cands,
+                                               alpha=self.alpha, bw_grid=bw)
                 window_s = [s.window_remaining_s for s in state.sites]
                 free_slots = [s.free_slots for s in state.sites]
                 flows = list(state.transfers)

@@ -37,6 +37,10 @@ Built-ins:
                      a light training load, routed green-first
   train-plus-serve   the combined fabric: paper-table6 training plus a
                      carbon-slo-routed inference stream on the same WAN
+  chaos-monkey       all five fault classes at once at mild rates — the
+                     whole recovery spine on one run, every job completes
+  blackout-cascade   rolling correlated site blackouts + hard link
+                     failures; fault-aware planning vs the fault-blind trap
 
 The WAN half of a scenario is a :class:`repro.core.wan.WanProfile`
 (per-site NIC rates, per-link capacity matrix, fabric- or per-link-scoped
@@ -59,6 +63,7 @@ import dataclasses
 from dataclasses import dataclass, field
 from typing import Dict, List, Mapping, Optional, Union
 
+from repro.core.faults import FaultRegime, RetryPolicy
 from repro.core.ledger import BatteryConfig, ThrottleCurve
 from repro.core.serving import ServingProfile
 from repro.core.signals import SignalProfile
@@ -83,6 +88,11 @@ class JobMix:
 
 @dataclass(frozen=True)
 class FailureRegime:
+    """Legacy per-job Poisson rollback spec — the alias path for
+    :class:`repro.core.faults.FaultRegime.job_failure_rate_per_slot_hour`.
+    New scenarios should carry a ``faults=FaultRegime(...)`` instead;
+    both feed the same unified ``default_rng([seed, 23])`` stream."""
+
     rate_per_slot_hour: float = 0.0
     checkpoint_interval_s: float = 1800.0
 
@@ -107,6 +117,11 @@ class Scenario:
     jobs: JobMix = field(default_factory=JobMix)
     wan: WanProfile = field(default_factory=WanProfile)
     failures: FailureRegime = field(default_factory=FailureRegime)
+    # fault-injection spec (core/faults.py): site blackouts, hard link
+    # failures, checkpoint corruption, replica crashes, stragglers +
+    # the recovery knobs (None = no injected faults; the legacy
+    # ``failures`` field above remains the per-job-rollback alias)
+    faults: Optional[FaultRegime] = None
     forecast: ForecastNoise = field(default_factory=ForecastNoise)
     signals: SignalProfile = field(default_factory=SignalProfile)
     # inference serving plane (None / disabled profile = training only)
@@ -155,6 +170,7 @@ class Scenario:
             mean_compute_h=self.jobs.mean_compute_h,
             failure_rate_per_slot_hour=self.failures.rate_per_slot_hour,
             checkpoint_interval_s=self.failures.checkpoint_interval_s,
+            faults=self.faults,
             forecast_sigma_s=self.forecast.sigma_s,
             forecast_horizon_s=self.forecast.horizon_s,
             signals=self.signals,
@@ -274,8 +290,10 @@ register_scenario(Scenario(
     name="failure-storm",
     description="Beyond-paper fault sweep: 0.2 node failures per slot-hour "
                 "with 15-min checkpoints — rollback churn stresses the "
-                "pause/restart accounting.",
-    failures=FailureRegime(rate_per_slot_hour=0.2, checkpoint_interval_s=900.0),
+                "pause/restart accounting.  (Migrated from the legacy "
+                "FailureRegime alias onto core/faults.FaultRegime.)",
+    faults=FaultRegime(job_failure_rate_per_slot_hour=0.2,
+                       checkpoint_interval_s=900.0),
 ))
 
 register_scenario(Scenario(
@@ -436,6 +454,53 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="chaos-monkey",
+    description="All five fault classes at once, mildly: occasional site "
+                "blackouts (rollback + requeue), hard link failures that "
+                "kill transfers mid-flight (watchdog abort -> backoff -> "
+                "re-routed retry), 10% checkpoint corruption on rollback, "
+                "replica crashes and straggler throughput dips — rates "
+                "tuned so every job still completes, exercising the whole "
+                "recovery spine plus both chaos audits on one run.",
+    faults=FaultRegime(site_blackout_rate_per_day=0.25,
+                       site_blackout_mean_s=1800.0,
+                       link_failure_rate_per_day=0.3,
+                       link_failure_mean_s=900.0,
+                       ckpt_corruption_prob=0.10,
+                       replica_crash_rate_per_day=0.5,
+                       replica_crash_mean_s=1200.0,
+                       straggler_rate_per_day=0.5,
+                       straggler_mean_s=3600.0,
+                       straggler_factor=0.6),
+))
+
+register_scenario(Scenario(
+    name="blackout-cascade",
+    description="Rolling site blackouts (mean 6 h, ~1/day per site) plus "
+                "long hard link failures (mean 14 h, ~3.5/day across the "
+                "fabric): blacked-out sites keep advertising free slots and "
+                "live windows, so a fault-blind policy herds migrations onto "
+                "dark links — and without the watchdog those transfers stall "
+                "silently for the life of the outage — while a fault-aware "
+                "planner masks down destinations and routes around "
+                "soon-to-fail links.  The acceptance scenario for the "
+                "recovery subsystem.",
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    signals=SignalProfile(carbon_evening=400.0, carbon_morning=150.0,
+                          carbon_midday_dip=200.0, carbon_noise=12.0,
+                          carbon_site_spread=0.15),
+    faults=FaultRegime(site_blackout_rate_per_day=1.0,
+                       site_blackout_mean_s=6 * 3600.0,
+                       link_failure_rate_per_day=3.5,
+                       link_failure_mean_s=14 * 3600.0,
+                       ckpt_corruption_prob=0.05,
+                       stall_timeout_s=2 * 3600.0,
+                       retry=RetryPolicy(max_attempts=2,
+                                         backoff_base_s=7200.0,
+                                         backoff_mult=2.0)),
+))
+
+register_scenario(Scenario(
     name="partitioned-wan",
     description="Two island fabrics ({0,1,2} and {3,4}) joined by thin "
                 "0.25 Gbps links: intra-partition moves run at the full "
@@ -449,8 +514,9 @@ register_scenario(Scenario(
 
 
 __all__ = [
-    "BatteryConfig", "FailureRegime", "ForecastNoise", "JobMix", "Scenario",
-    "ServingProfile", "SignalProfile", "ThrottleCurve", "TraceProfile",
-    "WanProfile", "WanTopology", "available_scenarios", "get_scenario",
-    "hub_spoke_links", "partitioned_links", "register_scenario",
+    "BatteryConfig", "FailureRegime", "FaultRegime", "ForecastNoise",
+    "JobMix", "RetryPolicy", "Scenario", "ServingProfile", "SignalProfile",
+    "ThrottleCurve", "TraceProfile", "WanProfile", "WanTopology",
+    "available_scenarios", "get_scenario", "hub_spoke_links",
+    "partitioned_links", "register_scenario",
 ]

@@ -728,6 +728,61 @@ class ServingPlane:
                 self.slo_violations += 1
         self._bill(s, b.t_service_start_s, t)
 
+    # -- fault interface (core/faults.py replica-crash spans) ----------------
+    def crash_replica(self, site: int, t: float) -> bool:
+        """A replica-crash span opens at ``site``: capacity drops to zero
+        until :meth:`repair_replica`.  In-service batches are interrupted
+        (the energy already drawn is billed, the work is lost) and
+        re-routed through the router like a fresh dispatch; queued
+        batches re-drain the same way.  Requests never leave the system
+        (``audit`` conservation holds across arbitrary crash sequences) —
+        a batch the router sends back to the dead site simply waits in
+        its queue for the repair.  Returns True when the WAN flow set
+        changed (re-routes that cross the WAN)."""
+        s = int(site)
+        self.replicas[s] = 0
+        flows_dirty = False
+        interrupted: List[RequestBatch] = []
+        keep: List[Tuple[float, int]] = []
+        for td, bid in self._svc_heap:
+            b = self._batches.get(bid)
+            if b is not None and b.site == s:
+                interrupted.append(b)
+            else:
+                keep.append((td, bid))
+        if interrupted:
+            heapq.heapify(keep)
+            self._svc_heap = keep
+        for b in interrupted:
+            self.busy[s] -= 1
+            self._bill(s, b.t_service_start_s, t)
+            b.t_service_start_s = -1.0
+            b.service_s = 0.0
+            flows_dirty |= self._dispatch(b, t)
+        q = self._queues[s]
+        if q:
+            drained = list(q)
+            q.clear()
+            for b in drained:
+                self._queued_reqs[s] -= len(b.requests)
+                self._pending_service_s[s] -= b.nominal_service_s
+                flows_dirty |= self._dispatch(b, t)
+        self._start_services(t)
+        if self.profile.validate:
+            self.audit()
+        return flows_dirty
+
+    def repair_replica(self, site: int, t: float) -> bool:
+        """The crash span closes: capacity returns and whatever queued at
+        the dead site during the span starts draining.  Never changes the
+        WAN flow set (returns False)."""
+        s = int(site)
+        self.replicas[s] = self.profile.replicas_per_site
+        self._start_services(t)
+        if self.profile.validate:
+            self.audit()
+        return False
+
     def _bill(self, site: int, t0: float, t1: float) -> None:
         """Bill the service span's energy: renewable overlap free, the
         grid remainder in kWh + gCO2 (posted through the shared

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.core import feasibility as fz
 from repro.core.actions import Action, Defer, Migrate, Pause, Resume, Throttle
+from repro.core.faults import FaultPlan, FaultRegime, RetryPolicy
 from repro.core.ledger import BatteryConfig, PowerLedger, ThrottleCurve
 from repro.core.orchestrator import Policy, PolicyConfig, make_policy
 from repro.core.serving import ServingPlane, ServingProfile, make_router
@@ -138,6 +139,11 @@ class SimJob:
     anchor_s: float = 0.0  # sim-time the job's accounting was last flushed
     rate_bps: float = 0.0  # current transfer share (migrating only)
     ver: int = 0  # bumped on any change that invalidates a queued event
+    # recovery ladder (transfer-stall watchdog, core/faults.py)
+    stall_since_s: float = -1.0  # when the in-flight rate hit 0 (-1: flowing)
+    retry_attempts: int = 0  # watchdog-aborted transfers since last success
+    last_failed_dest: int = -1  # destination of the last aborted transfer
+    fail_counted: bool = False  # this attempt already in failed_migrations
 
     @property
     def jct_s(self) -> float:
@@ -181,9 +187,21 @@ class SimConfig:
     size_b_gb: tuple = (10.0, 40.0)
     size_c_gb: tuple = (100.0, 300.0)
     mean_compute_h: float = 3.5
-    # beyond-paper fault injection
+    # beyond-paper fault injection.  ``failure_rate_per_slot_hour`` is
+    # the legacy alias for FaultRegime.job_failure_rate_per_slot_hour
+    # (the two rates add); the full fault spec lives in ``faults``
     failure_rate_per_slot_hour: float = 0.0
     checkpoint_interval_s: float = 1800.0
+    # deterministic fault injection + recovery (core/faults.py): site
+    # blackouts, hard link failures, checkpoint corruption, replica
+    # crashes, stragglers.  None (or an all-off regime) draws zero RNG
+    # numbers and adds zero float ops.  Event engine only.
+    faults: Optional[FaultRegime] = None
+    # transfer-stall watchdog: a migration whose shared rate sits at 0
+    # for this long is aborted and requeued at the source (bounded
+    # retries via RetryPolicy).  Active regardless of ``faults`` — it is
+    # the fix for the historic silent-infinite-stall bug.
+    stall_timeout_s: float = 1800.0
     # inference serving plane (None or a disabled profile = training only;
     # event engine only).  The plane's RNG lives entirely in the
     # [seed, 151, ...] streams, so enabling it never moves a training draw.
@@ -259,6 +277,15 @@ class SimResult:
     # demand-response compliance (watt-seconds requested shed vs shed)
     dr_requested_ws: float = 0.0
     dr_shed_ws: float = 0.0
+    # fault/recovery telemetry (all zero without an active FaultRegime —
+    # except watchdog_aborts/retries/reroutes, which the always-on
+    # transfer-stall watchdog can also produce)
+    site_outages: int = 0  # blackout spans experienced during the run
+    mttr_s: float = 0.0  # mean time-to-repair of those blackouts
+    retries: int = 0  # re-admitted migrations after a watchdog abort
+    reroutes: int = 0  # retries that picked a different destination
+    replica_crashes: int = 0  # serving replica crash events applied
+    watchdog_aborts: int = 0  # transfers aborted by the stall watchdog
 
     @property
     def dr_compliance(self) -> float:
@@ -349,6 +376,12 @@ class SimResult:
             "sellback_kwh": round(self.sellback_kwh, 3),
             "sellback_usd": round(self.sellback_usd, 4),
             "dr_compliance": round(self.dr_compliance, 4),
+            "site_outages": self.site_outages,
+            "mttr_s": round(self.mttr_s, 1),
+            "retries": self.retries,
+            "reroutes": self.reroutes,
+            "replica_crashes": self.replica_crashes,
+            "watchdog_aborts": self.watchdog_aborts,
             "ticks_per_sec": round(self.ticks_per_sec, 1),
             "decide_s": round(self.decide_s, 4),
             "decide_first_s": round(self.decide_first_s, 4),
@@ -409,7 +442,24 @@ class ClusterSimulator:
         self.jobs = jobs if jobs is not None else generate_jobs(cfg)
         sigma = 0.0 if oracle_forecast else cfg.forecast_sigma_s
         self.forecaster = Forecaster(self.traces, sigma_s=sigma, seed=cfg.seed + 7)
-        self._fail_rng = np.random.default_rng(cfg.seed + 23)
+        # legacy per-job failure stream, unified onto the repo-wide
+        # list-seed convention (was the ad-hoc ``default_rng(seed + 23)``
+        # — PR 9 regenerated the failure-storm numbers; no gated digits
+        # depend on this stream)
+        self._fail_rng = np.random.default_rng([cfg.seed, 23])
+        # deterministic fault plan (core/faults.py): every span sampled
+        # up front from its own [seed, 173, ...] streams.  None when the
+        # regime is unset/inactive — the faults-off path never consults
+        # it and never draws from a fault stream.
+        self.fault_plan: Optional[FaultPlan] = None
+        if cfg.faults is not None and cfg.faults.any_active():
+            self.fault_plan = FaultPlan.build(
+                cfg.faults, cfg.n_sites, cfg.days * 24 * HOUR, cfg.seed)
+        # live fault-state caches (updated at plan span edges)
+        self._site_up = np.ones(cfg.n_sites, dtype=bool)
+        self._link_up = np.ones((cfg.n_sites, cfg.n_sites), dtype=bool)
+        self._fault_tput: Optional[np.ndarray] = None  # straggler factors
+        self._replica_down = np.zeros(cfg.n_sites, dtype=bool)
         # grid-signal traces (per-site carbon/price + curtail requests):
         # own RNG stream, so enabling signals changes no existing draw
         self.signals = grid_signals or generate_signals(
@@ -427,6 +477,12 @@ class ClusterSimulator:
         self.failures = 0
         self.rejected_actions = 0
         self.ticks = 0
+        # recovery telemetry (SimResult.{retries,reroutes,...})
+        self.retries = 0
+        self.reroutes = 0
+        self.watchdog_aborts = 0
+        self.replica_crashes = 0
+        self._final_t = 0.0  # sim time the event loop actually reached
         # the one WAN object every consumer shares (transfer loop, snapshot
         # advertisement, and — via scenarios — dryrun --plan / serve)
         self.wan_topology = wan_topology or cfg.wan_profile().build_topology(
@@ -440,7 +496,17 @@ class ClusterSimulator:
         self.forecast_horizon = forecast_horizon or ForecastHorizon.build(
             self.traces, wan=self.wan_topology, signals=self.signals,
             horizon_s=cfg.forecast_horizon_s, sigma_s=sigma,
-            seed=cfg.seed + 7)
+            seed=cfg.seed + 7, faults=self.fault_plan)
+        # Prebuilt horizons (sweep cells share one across policies) were
+        # constructed without a fault plan; graft this run's plan on so
+        # fault-aware policies see the same repair/next-fault answers
+        # they would get from a from-scratch build.  The plan is a pure
+        # function of (regime, n_sites, days, seed), so every sim in the
+        # cell grafts the identical calendar.
+        if (self.fault_plan is not None
+                and self.forecast_horizon.faults is None):
+            self.forecast_horizon = dataclasses.replace(
+                self.forecast_horizon, faults=self.fault_plan)
         # inference serving plane (event engine only).  All serving RNG
         # lives in the [seed, 151, ...] streams and routing reads a
         # noise-free trace snapshot (never the forecaster), so a run with
@@ -593,6 +659,12 @@ class ClusterSimulator:
             # charge (policies treat it as a lower bound — charge landed
             # since a site's last posting shows up at the next one)
             site_arrays["site_battery_soc"] = self.ledger.soc.copy()
+        if self.fault_plan is not None:
+            # fault-aware policies mask these down; with no active
+            # regime the keys stay unseeded and ClusterState's all-up
+            # cached-property defaults cost nothing
+            site_arrays["site_up"] = self._site_up.copy()
+            site_arrays["link_up"] = self._link_up.copy()
         def sites_factory():  # scalar consumers only (lazy)
             return [
                 SiteView(
@@ -715,6 +787,12 @@ class ClusterSimulator:
             j.transfer_remaining_bits = 8.0 * j.ckpt_bytes
             j.migrations += 1
             self.migrations += 1
+            if j.retry_attempts > 0:
+                # re-admission after a watchdog abort: one rung up the
+                # retry ladder; a different destination is a re-route
+                self.retries += 1
+                if dest != j.last_failed_dest:
+                    self.reroutes += 1
             self._move(j, state="migrating")
             # a migration whose destination window closes before the
             # transfer ends is counted as failed (it still completes,
@@ -736,7 +814,9 @@ class ClusterSimulator:
             # no windows beyond the horizon, and the old clamp to
             # horizon - 1 classified such a transfer by whatever the last
             # in-horizon sample happened to be.
-            if t_arrive >= horizon or not self.traces[dest].active(t_arrive):
+            j.fail_counted = (t_arrive >= horizon
+                              or not self.traces[dest].active(t_arrive))
+            if j.fail_counted:
                 self.failed_migrations += 1
         elif isinstance(action, Defer):
             if j.state != "queued":
@@ -798,6 +878,24 @@ class ClusterSimulator:
         # the horizon (idle sites still charge + export); no-op with
         # storage disabled
         led.finalize(self.cfg.days * 24 * HOUR * 2.0)
+        # A transfer still in flight at the horizon never delivered its
+        # checkpoint.  The admission pre-count misses exactly the
+        # dead-link case: the optimistic (fault-free) arrival estimate
+        # is finite, so fail_counted stays False while the transfer
+        # silently stalls to the end of the run.  Only fault regimes can
+        # zero a link outside the brownout calendar, so the sweep is
+        # gated on an active plan and faults-off runs keep their
+        # historical accounting.
+        if self.fault_plan is not None:
+            for j in self._by_state["migrating"].values():
+                if not j.fail_counted:
+                    j.failed_migrations += 1
+                    self.failed_migrations += 1
+        self.audit_no_job_lost()
+        site_outages, mttr_s = 0, 0.0
+        if self.fault_plan is not None:
+            site_outages, mttr_s = self.fault_plan.outage_stats(
+                max(self._final_t, 0.0))
         return SimResult(
             policy=self.policy.name,
             jobs=self.jobs,
@@ -825,8 +923,35 @@ class ClusterSimulator:
             sellback_usd=led.sellback_usd,
             dr_requested_ws=led.dr_requested_ws,
             dr_shed_ws=led.dr_shed_ws,
+            site_outages=site_outages,
+            mttr_s=mttr_s,
+            retries=self.retries,
+            reroutes=self.reroutes,
+            replica_crashes=self.replica_crashes,
+            watchdog_aborts=self.watchdog_aborts,
             **serving_kw,
         )
+
+    def audit_no_job_lost(self) -> None:
+        """No-job-lost invariant: every admitted job is in exactly one
+        lifecycle bucket, each bucket is internally consistent, and a
+        job that is not ``done`` is live in a recoverable state (never
+        silently dropped by a fault).  Holds for arbitrary fault
+        sequences; raises ``AssertionError`` on violation."""
+        seen: set = set()
+        for name, bucket in self._by_state.items():
+            for jid, j in bucket.items():
+                assert jid not in seen, f"job {jid} indexed twice"
+                seen.add(jid)
+                assert j.state == name, (
+                    f"job {jid} in bucket {name!r} but state {j.state!r}")
+                if name == "done":
+                    assert j.done_s >= 0.0, f"done job {jid} missing done_s"
+                else:
+                    assert j.done_s < 0.0, (
+                        f"finished job {jid} stuck in {name!r}")
+        assert len(seen) == len(self.jobs), (
+            f"{len(self.jobs) - len(seen)} job(s) lost from the index")
 
     # -- next-event engine ---------------------------------------------------
     def _record_decide(self, dt: float) -> None:
@@ -891,15 +1016,44 @@ class ClusterSimulator:
 
         done_heap: List[Tuple[float, int, int]] = []  # running completions
         transfer_heap: List[Tuple[float, int, int]] = []
-        load_heap: List[Tuple[float, int]] = []
+        load_heap: List[Tuple[float, int, int]] = []
         defer_heap: List[Tuple[float, int]] = []
+        stall_heap: List[Tuple[float, int]] = []  # watchdog deadlines
         edges = sorted({e for tr in traces for w in tr.windows
                         for e in (w.start_s, w.end_s) if 0.0 < e < t_end})
         eptr = 0
         next_orch = 0.0
         next_brownout = topo.next_transition(0.0)
         next_failure = INF
-        fail_enabled = cfg.failure_rate_per_slot_hour > 0.0
+        # legacy per-job Poisson rollback: the SimConfig scalar is the
+        # alias path; a FaultRegime's job_failure rate adds to it
+        fail_rate = cfg.failure_rate_per_slot_hour + (
+            cfg.faults.job_failure_rate_per_slot_hour
+            if cfg.faults is not None else 0.0)
+        fail_enabled = fail_rate > 0.0
+        # fault plan + recovery machinery.  With no active regime every
+        # hook below is None-gated: zero extra draws, zero float ops.
+        plan = self.fault_plan
+        regime = cfg.faults
+        ckpt_interval = cfg.checkpoint_interval_s
+        if regime is not None and regime.checkpoint_interval_s is not None:
+            ckpt_interval = regime.checkpoint_interval_s
+        corrupt_p = regime.ckpt_corruption_prob if plan is not None else 0.0
+        corrupt_rng = (plan.corruption_rng()
+                       if plan is not None and corrupt_p > 0.0 else None)
+        stall_timeout = (regime.stall_timeout_s if regime is not None
+                         else cfg.stall_timeout_s)
+        retry = regime.retry if regime is not None else RetryPolicy()
+        fault_tput: Optional[np.ndarray] = None
+        next_fault = INF
+        if plan is not None:
+            self._site_up = plan.site_up_vec(0.0)
+            self._link_up = plan.link_up_mat(0.0)
+            if serving is not None:
+                self._replica_down = plan.replica_down_vec(0.0)
+            if regime.straggler_rate_per_day > 0.0:
+                fault_tput = plan.tput_factor_vec(0.0)
+            next_fault = plan.next_edge_after(0.0)
 
         def resample_failure(t: float) -> None:
             nonlocal next_failure
@@ -907,8 +1061,21 @@ class ClusterSimulator:
             if not fail_enabled or n_run == 0:
                 next_failure = INF
                 return
-            lam = cfg.failure_rate_per_slot_hour * n_run / HOUR
+            lam = fail_rate * n_run / HOUR
             next_failure = t + float(self._fail_rng.exponential(1.0 / lam))
+
+        def rollback(j: SimJob) -> None:
+            """Roll a (flushed) job back to its last checkpoint; with
+            corruption enabled, a Bernoulli draw can cost one more
+            interval (its own RNG stream — one draw per rollback)."""
+            ckpt = (j.progress_s // ckpt_interval) * ckpt_interval
+            if corrupt_rng is not None and corrupt_rng.random() < corrupt_p:
+                ckpt = max(0.0, ckpt - ckpt_interval
+                           * regime.ckpt_corruption_extra_intervals)
+            lost = j.progress_s - ckpt
+            j.progress_s = ckpt
+            j.last_ckpt_progress_s = ckpt
+            j.pause_s += lost
 
         def flush(j: SimJob, t: float) -> None:
             span = t - j.anchor_s
@@ -918,7 +1085,10 @@ class ClusterSimulator:
             st = j.state
             if st == "running":
                 frac = j.power_frac
-                j.progress_s += span * j.tput_frac
+                tput = j.tput_frac
+                if fault_tput is not None:  # straggler degradation
+                    tput = tput * fault_tput[j.site]
+                j.progress_s += span * tput
                 g = traces[j.site].renewable_seconds(j.anchor_s, t)
                 e_g, e_b = ledger.post_train(
                     j.site, p_node * frac, j.anchor_s, t, g,
@@ -963,31 +1133,51 @@ class ClusterSimulator:
             srv_pairs = serving.flow_pairs() if serving is not None else []
             if not mig and not srv_pairs:
                 return
-            rates = topo.shared_rates(
-                [(j.site, j.transfer_dest) for j in mig] + srv_pairs, t)
+            pairs = [(j.site, j.transfer_dest) for j in mig] + srv_pairs
+            rates = topo.shared_rates(pairs, t)
+            if plan is not None:
+                # hard fault overlay: the topology stays pure (it only
+                # knows the *scheduled* brownout calendar) — a failed
+                # link or a blacked-out endpoint zeroes the flow here
+                lu = self._link_up
+                rates = [r if lu[a, b] else 0.0
+                         for (a, b), r in zip(pairs, rates)]
             for j, r in zip(mig, rates):
                 flush(j, t)
                 j.rate_bps = float(r)
                 j.ver += 1
                 if j.rate_bps > 0.0:
+                    # link (re)carrying traffic: a partial transfer
+                    # resumes from its surviving remaining_bits
+                    j.stall_since_s = -1.0
                     heapq.heappush(
                         transfer_heap,
                         (t + j.transfer_remaining_bits / j.rate_bps,
                          j.jid, j.ver))
-                # rate 0 (no link / browned out to zero): no completion
-                # until a link-state change re-rates the flow
+                # rate 0 (no link / browned out to zero / hard fault):
+                # no completion until a link-state change re-rates the
+                # flow — arm the stall watchdog so a path that never
+                # recovers can no longer strand the job forever
+                elif j.stall_since_s < 0.0:
+                    j.stall_since_s = t
+                    heapq.heappush(stall_heap, (t + stall_timeout, j.jid))
             if serving is not None and srv_pairs:
                 serving.rerate(t, rates[len(mig):])
 
         def push_run_completion(j: SimJob, t: float) -> None:
             j.ver += 1
-            if j.tput_frac > 0.0:
+            tput = j.tput_frac
+            if fault_tput is not None:  # straggler degradation
+                tput = tput * fault_tput[j.site]
+            if tput > 0.0:
                 heapq.heappush(
                     done_heap,
-                    (t + (j.compute_s - j.progress_s) / j.tput_frac,
+                    (t + (j.compute_s - j.progress_s) / tput,
                      j.jid, j.ver))
 
         def schedule_site(s: int, t: float) -> None:
+            if plan is not None and not self._site_up[s]:
+                return  # blacked out: no slots until repair
             q = self._site_jobs.get((s, "queued"))
             if not q:
                 return
@@ -1016,19 +1206,135 @@ class ClusterSimulator:
                 heapq.heappop(heap)
             return INF
 
+        def peek_stall() -> float:
+            """Next valid watchdog deadline.  Entries are validated
+            against the job's live stall state: recovered (or finished)
+            transfers drop out; a transfer that stalled again later is
+            re-pushed at its fresh ``stall_since + timeout`` deadline."""
+            while stall_heap:
+                tt, jid = stall_heap[0]
+                j = jobs_by_id[jid]
+                if (j.state != "migrating" or j.rate_bps > 0.0
+                        or j.stall_since_s < 0.0):
+                    heapq.heappop(stall_heap)
+                    continue
+                due = j.stall_since_s + stall_timeout
+                if tt < due - EPS:
+                    heapq.heappop(stall_heap)
+                    heapq.heappush(stall_heap, (due, jid))
+                    continue
+                return tt
+            return INF
+
+        def watchdog_abort(j: SimJob, t: float) -> None:
+            """Abort a dead in-flight transfer: the checkpoint never
+            left the source, so the job requeues there; the retry ladder
+            (bounded attempts, exponential backoff via the migration-
+            eligibility clock) decides when it may try again."""
+            flush(j, t)
+            dest = j.transfer_dest
+            j.transfer_remaining_bits = 0.0
+            j.transfer_dest = -1
+            j.rate_bps = 0.0
+            j.stall_since_s = -1.0
+            j.last_failed_dest = dest
+            j.retry_attempts += 1
+            j.failed_migrations += 1
+            self.watchdog_aborts += 1
+            if not j.fail_counted:
+                self.failed_migrations += 1
+            j.fail_counted = False
+            j.ver += 1
+            j.post_migration_wait = True  # queue wait = its own stall
+            if j.retry_attempts >= retry.max_attempts:
+                # out of retries: the job still runs locally — it is
+                # simply never offered for migration again
+                j.last_migration_end_s = 1e18
+            else:
+                backoff = retry.backoff_s(j.retry_attempts)
+                j.last_migration_end_s = t + max(
+                    0.0, backoff - cfg.migration_cooldown_s)
+            self._colf[j.jid, _CF_LASTMIG] = j.last_migration_end_s
+            self._move(j, state="queued")
+            j.anchor_s = t
+
+        def apply_fault_edges(t: float, dirty: set) -> bool:
+            """Advance the live fault-state caches across the plan edges
+            at ``t``: blackout starts roll back + requeue the site's
+            workers, repairs re-open scheduling, straggler flips re-rate
+            running completions, replica crashes/returns reach the
+            serving plane.  Returns True when WAN flows must re-rate."""
+            nonlocal fault_tput
+            new_site_up = plan.site_up_vec(t)
+            new_link_up = plan.link_up_mat(t)
+            link_changed = not np.array_equal(new_link_up, self._link_up)
+            started = (~new_site_up) & self._site_up
+            repaired = new_site_up & (~self._site_up)
+            for s in np.nonzero(started)[0]:
+                s = int(s)
+                # running jobs: every slot is down — checkpoint
+                # rollback (corruption possible) and back to the queue
+                for j in list(self._site_jobs.get((s, "running"),
+                                                  {}).values()):
+                    flush(j, t)
+                    rollback(j)
+                    self.failures += 1
+                    j.ver += 1
+                    self._move(j, state="queued")
+                    j.anchor_s = t
+                # interrupted checkpoint loads: the checkpoint landed
+                # intact — the arrival requeues and waits out the repair
+                for j in [x for x in by_state["loading"].values()
+                          if x.site == s]:
+                    flush(j, t)
+                    j.load_remaining_s = 0.0
+                    j.post_migration_wait = True
+                    j.last_migration_end_s = t
+                    self._colf[j.jid, _CF_LASTMIG] = t
+                    j.ver += 1
+                    self._move(j, state="queued")
+                    j.anchor_s = t
+            for s in np.nonzero(repaired)[0]:
+                dirty.add(int(s))  # freed slots: schedule FIFO below
+            self._site_up = new_site_up
+            self._link_up = new_link_up
+            if fault_tput is not None:
+                new_tput = plan.tput_factor_vec(t)
+                flipped = np.nonzero(new_tput != fault_tput)[0]
+                if len(flipped):
+                    affected = []
+                    for s in flipped:
+                        affected.extend(self._site_jobs.get(
+                            (int(s), "running"), {}).values())
+                    for j in affected:
+                        flush(j, t)  # old factor up to t
+                    fault_tput = new_tput
+                    for j in affected:
+                        push_run_completion(j, t)  # new factor from t
+            if serving is not None:
+                new_rep = plan.replica_down_vec(t)
+                for s in np.nonzero(new_rep & ~self._replica_down)[0]:
+                    link_changed |= serving.crash_replica(int(s), t)
+                    self.replica_crashes += 1
+                for s in np.nonzero(self._replica_down & ~new_rep)[0]:
+                    link_changed |= serving.repair_replica(int(s), t)
+                self._replica_down = new_rep
+            return link_changed
+
         arrivals = self._arrivals
         t = 0.0
         while (len(by_state["done"]) < n_jobs
                or (serving is not None and serving.pending())):
             t_arr = (arrivals[self._arrival_ptr].arrival_s
                      if self._arrival_ptr < len(arrivals) else INF)
-            t_ld = load_heap[0][0] if load_heap else INF
+            t_ld = peek(load_heap, "loading")
             t_df = defer_heap[0][0] if defer_heap else INF
             t_ed = edges[eptr] if eptr < len(edges) else INF
             t_srv = serving.next_event_s() if serving is not None else INF
             t_next = min(t_arr, peek(transfer_heap, "migrating"), t_ld, t_df,
                          peek(done_heap, "running"), t_ed, next_brownout,
-                         next_failure, next_orch, t_srv)
+                         next_failure, next_orch, t_srv, next_fault,
+                         peek_stall())
             if t_next > t_end:
                 flush_live(t_end)  # account the unfinished tail to horizon
                 break
@@ -1051,6 +1357,11 @@ class ClusterSimulator:
             if next_brownout <= t + EPS:
                 transfers_dirty = True
                 next_brownout = topo.next_transition(t + EPS)
+            # 2b) fault-plan span edges: blackouts start/repair, links
+            #     fail/recover, straggler factors flip, replicas crash
+            if plan is not None and next_fault <= t + EPS:
+                transfers_dirty |= apply_fault_edges(t, dirty)
+                next_fault = plan.next_edge_after(t + EPS)
             # 3) transfer completions (at current share rates)
             while peek(transfer_heap, "migrating") <= t + EPS:
                 _, jid, _ = heapq.heappop(transfer_heap)
@@ -1063,17 +1374,21 @@ class ClusterSimulator:
                 j.load_remaining_s = cfg.t_load_s + cfg.t_downtime_s
                 self._move(j, state="loading", site=dest)
                 j.anchor_s = t
-                heapq.heappush(load_heap, (t + j.load_remaining_s, jid))
+                heapq.heappush(load_heap, (t + j.load_remaining_s, jid,
+                                           j.ver))
                 transfers_dirty = True
-            # 4) checkpoint-load completions
-            while load_heap and load_heap[0][0] <= t + EPS:
-                _, jid = heapq.heappop(load_heap)
+            # 4) checkpoint-load completions (ver-checked: a blackout can
+            #    interrupt a load and requeue the job before this fires)
+            while peek(load_heap, "loading") <= t + EPS:
+                _, jid, _ = heapq.heappop(load_heap)
                 j = jobs_by_id[jid]
                 flush(j, t)
                 j.load_remaining_s = 0.0
                 j.post_migration_wait = True
                 j.last_migration_end_s = t
                 self._colf[jid, _CF_LASTMIG] = t
+                j.retry_attempts = 0  # a landed migration resets the ladder
+                j.last_failed_dest = -1
                 self._move(j, state="queued")
                 j.anchor_s = t
                 dirty.add(j.site)
@@ -1121,6 +1436,16 @@ class ClusterSimulator:
             if transfers_dirty:
                 refresh_transfers(t)
                 transfers_dirty = False
+            # 8c) transfer-stall watchdog: rates are fresh now — any
+            #     transfer still at rate 0 past its deadline aborts,
+            #     requeues at the source and climbs the retry ladder
+            #     (the freed flow re-rates the survivors)
+            if peek_stall() <= t + EPS:
+                while peek_stall() <= t + EPS:
+                    _, jid = heapq.heappop(stall_heap)
+                    watchdog_abort(jobs_by_id[jid], t)
+                    dirty.add(jobs_by_id[jid].site)
+                refresh_transfers(t)
             # 9) scheduling: fill freed slots at touched sites, FIFO
             for s in sorted(dirty):
                 schedule_site(s, t)
@@ -1160,6 +1485,7 @@ class ClusterSimulator:
                         schedule_site(s, t)
             if fail_enabled and len(by_state["running"]) != n_run_before:
                 resample_failure(t)
+        self._final_t = t
 
     # -- legacy fixed-dt engine (parity reference) ---------------------------
     def _run_fixed_dt(self) -> SimResult:
@@ -1168,6 +1494,12 @@ class ClusterSimulator:
                 "the serving plane requires the next-event engine; "
                 "use engine='event' (fixed-dt is the training-only "
                 "parity reference)")
+        if self.cfg.faults is not None:
+            raise ValueError(
+                "fault injection (SimConfig.faults) requires the "
+                "next-event engine; use engine='event' (blackout/"
+                "link-failure edges and the stall watchdog are "
+                "event sources, not tick samples)")
         if self.cfg.battery is not None:
             raise ValueError(
                 "battery storage requires the next-event engine; "
@@ -1376,6 +1708,8 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
     any_dr = any(r.dr_requested_ws > 0.0 for r in results.values())
     any_batt = any(r.battery_charge_kwh > 0.0 or r.sellback_kwh > 0.0
                    for r in results.values())
+    any_faults = any(r.site_outages > 0 or r.watchdog_aborts > 0
+                     or r.replica_crashes > 0 for r in results.values())
     rows = []
     for name, r in results.items():
         row = {
@@ -1397,6 +1731,14 @@ def normalized_table(results: Dict[str, SimResult]) -> List[dict]:
         if any_batt:
             row["battery_cycles"] = round(r.battery_cycles, 3)
             row["sellback_usd"] = round(r.sellback_usd, 4)
+        if any_faults:
+            row["completed"] = r.completed
+            row["site_outages"] = r.site_outages
+            row["mttr_s"] = round(r.mttr_s, 1)
+            row["retries"] = r.retries
+            row["reroutes"] = r.reroutes
+            row["watchdog_aborts"] = r.watchdog_aborts
+            row["failed_migrations"] = r.failed_migrations
         if any_serving:
             row["requests_served"] = r.requests_served
             row["slo_attainment"] = round(r.slo_attainment, 4)

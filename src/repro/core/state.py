@@ -347,6 +347,23 @@ class ClusterState:
         covers snapshots built outside a storage-enabled run."""
         return np.zeros(self.n_sites)
 
+    # ---- fault views (core/faults.py) --------------------------------------
+    @cached_property
+    def site_up(self) -> np.ndarray:
+        """(n_sites,) bool — False while a site is blacked out (all slots
+        down, NICs dark).  Seeded from the simulator's FaultPlan via
+        ``site_arrays`` only when a fault regime is active; the all-up
+        default covers every fault-free run at zero cost."""
+        return np.ones(self.n_sites, dtype=bool)
+
+    @cached_property
+    def link_up(self) -> np.ndarray:
+        """(n_sites, n_sites) bool — False while the src→dst path is down
+        to a hard link failure or an endpoint blackout (distinct from the
+        *scheduled* brownout calendar, which only degrades capacity).
+        Seeded like :attr:`site_up`; all-up default otherwise."""
+        return np.ones((self.n_sites, self.n_sites), dtype=bool)
+
     # ---- grid-signal views (from the forecast's signal stacks) -------------
     @cached_property
     def site_carbon(self) -> np.ndarray:

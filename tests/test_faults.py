@@ -1,0 +1,403 @@
+"""Fault-injection + recovery subsystem (core/faults.py).
+
+Covers the PR-9 spine end to end: deterministic FaultPlan realization,
+the faults-off byte-identity gate, the transfer-stall watchdog (the fix
+for the historic silent-infinite-stall bug — active with no FaultRegime
+at all), blackout rollback + telemetry, the fixed-dt rejection contract,
+serving replica crashes, randomized no-job-lost / ledger-audit property
+sweeps over arbitrary fault plans, and the 8-seed blackout-cascade
+acceptance comparison (fault-aware + retry vs the fault-blind baseline).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.faults import FaultPlan, FaultRegime, RetryPolicy
+from repro.core.orchestrator import make_policy
+from repro.core.scenarios import get_scenario
+from repro.core.simulator import ClusterSimulator, SimConfig
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # container may not ship hypothesis: the seeded
+    HAVE_HYPOTHESIS = False  # randomized sweep below still runs
+
+
+# ---------------------------------------------------------------------------
+# retry ladder
+# ---------------------------------------------------------------------------
+
+class TestRetryPolicy:
+    def test_backoff_ladder(self):
+        rp = RetryPolicy(max_attempts=3, backoff_base_s=600.0,
+                         backoff_mult=2.0)
+        assert rp.backoff_s(1) == 600.0
+        assert rp.backoff_s(2) == 1200.0
+        assert rp.backoff_s(3) == 2400.0
+
+    def test_first_attempt_uses_base(self):
+        rp = RetryPolicy(backoff_base_s=100.0, backoff_mult=3.0)
+        assert rp.backoff_s(0) == 100.0  # clamped, never mult**-1
+        assert rp.backoff_s(1) == 100.0
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan realization
+# ---------------------------------------------------------------------------
+
+REGIME_ALL = FaultRegime(
+    site_blackout_rate_per_day=1.0, site_blackout_mean_s=3600.0,
+    link_failure_rate_per_day=1.5, link_failure_mean_s=1800.0,
+    ckpt_corruption_prob=0.2,
+    replica_crash_rate_per_day=1.0, replica_crash_mean_s=1200.0,
+    straggler_rate_per_day=1.0, straggler_mean_s=3600.0,
+    straggler_factor=0.5)
+
+DAY = 24 * 3600.0
+
+
+class TestFaultPlan:
+    def test_deterministic(self):
+        a = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=7)
+        b = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=7)
+        for x, y in zip(a.site_spans, b.site_spans):
+            np.testing.assert_array_equal(x, y)
+        assert set(a.link_spans) == set(b.link_spans)
+        for k in a.link_spans:
+            np.testing.assert_array_equal(a.link_spans[k], b.link_spans[k])
+        np.testing.assert_array_equal(a.edges, b.edges)
+
+    def test_seed_sensitivity(self):
+        a = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=7)
+        b = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=8)
+        assert not np.array_equal(a.edges, b.edges)
+
+    def test_per_class_stream_independence(self):
+        """Adding a fault class never reshuffles another's spans."""
+        solo = FaultRegime(site_blackout_rate_per_day=1.0,
+                           site_blackout_mean_s=3600.0)
+        a = FaultPlan.build(solo, 5, 3 * DAY, seed=7)
+        b = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=7)
+        for x, y in zip(a.site_spans, b.site_spans):
+            np.testing.assert_array_equal(x, y)
+
+    def test_spans_sorted_nonoverlapping(self):
+        plan = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=3)
+        all_spans = (list(plan.site_spans) + list(plan.link_spans.values())
+                     + list(plan.replica_spans)
+                     + list(plan.straggler_spans))
+        for sp in all_spans:
+            if not len(sp):
+                continue
+            assert (sp[:, 1] > sp[:, 0]).all()
+            assert (sp[1:, 0] >= sp[:-1, 1]).all()
+
+    def test_queries_consistent_with_spans(self):
+        plan = FaultPlan.build(REGIME_ALL, 4, 2 * DAY, seed=11)
+        for s in range(4):
+            for start, end in plan.site_spans[s]:
+                assert not plan.site_up(s, start)  # half-open [start, end)
+                assert plan.site_up(s, end)
+                # absolute repair instant, not a duration
+                assert plan.repair_time_s(s, start) == pytest.approx(end)
+        up = plan.site_up_vec(0.0)
+        assert up.shape == (4,) and up.dtype == bool
+
+    def test_link_up_composes_site_blackouts(self):
+        """A blacked-out site darkens every link touching it."""
+        plan = FaultPlan.build(REGIME_ALL, 4, 2 * DAY, seed=11)
+        for s in range(4):
+            if not len(plan.site_spans[s]):
+                continue
+            t = float(plan.site_spans[s][0, 0])
+            mat = plan.link_up_mat(t)
+            off = [i for i in range(4) if i != s]  # diagonal stays True
+            assert not mat[s, off].any()
+            assert not mat[off, s].any()
+
+    def test_outage_stats(self):
+        plan = FaultPlan.build(REGIME_ALL, 5, 3 * DAY, seed=7)
+        n, mttr = plan.outage_stats(3 * DAY)
+        total = sum(len(sp[sp[:, 0] < 3 * DAY]) for sp in plan.site_spans)
+        assert n == total
+        if n:
+            assert mttr > 0.0
+
+    def test_all_off_regime_inactive(self):
+        assert not FaultRegime().any_active()
+        assert REGIME_ALL.any_active()
+        assert FaultRegime(job_failure_rate_per_slot_hour=0.1).any_active()
+
+
+# ---------------------------------------------------------------------------
+# faults-off identity: an all-off regime is byte-identical to None
+# ---------------------------------------------------------------------------
+
+class TestFaultsOffIdentity:
+    def test_all_off_regime_matches_none(self):
+        cfg = dict(n_sites=4, n_jobs=24, days=2, seed=5)
+        r_none = ClusterSimulator(SimConfig(faults=None, **cfg),
+                                  make_policy("receding-horizon")).run()
+        r_off = ClusterSimulator(SimConfig(faults=FaultRegime(), **cfg),
+                                 make_policy("receding-horizon")).run()
+        a, b = r_none.summary(), r_off.summary()
+        for d in (a, b):  # wall-clock keys are nondeterministic
+            for k in ("wall_time_s", "wall_s", "decide_s",
+                      "decide_first_s", "ticks_per_sec", "events_per_sec"):
+                d.pop(k, None)
+        assert a == b
+
+    def test_fault_plan_not_built_when_inactive(self):
+        sim = ClusterSimulator(SimConfig(faults=FaultRegime(), n_jobs=4),
+                               make_policy("static"))
+        assert sim.fault_plan is None
+
+
+# ---------------------------------------------------------------------------
+# transfer-stall watchdog (satellite 1: the historic silent-stall bug)
+# ---------------------------------------------------------------------------
+
+STALL_CFG = dict(n_sites=4, n_jobs=16, days=2, mean_compute_h=6.0,
+                 wan_gbps=1.0, wan_degrade_prob=1.0,
+                 wan_degraded_gbps=0.0, seed=3)
+
+
+class TestStallWatchdog:
+    """A permanently-zero brownout calendar reproduces the pre-PR bug: a
+    migration admitted on a link whose shared rate is 0 strands the job
+    in ``migrating`` forever.  The watchdog (no FaultRegime involved)
+    aborts the dead transfer, requeues at the source and walks the
+    bounded-retry ladder."""
+
+    def test_without_watchdog_jobs_strand_forever(self):
+        r = ClusterSimulator(
+            SimConfig(stall_timeout_s=float("inf"), **STALL_CFG),
+            make_policy("energy-only")).run()
+        stuck = [j for j in r.jobs if j.state == "migrating"]
+        assert stuck, "expected stranded transfers with the watchdog off"
+        assert r.completed < STALL_CFG["n_jobs"]
+
+    def test_watchdog_rescues_every_job(self):
+        r = ClusterSimulator(
+            SimConfig(stall_timeout_s=900.0, **STALL_CFG),
+            make_policy("energy-only")).run()
+        assert r.watchdog_aborts > 0
+        assert r.retries > 0
+        assert not any(j.state == "migrating" for j in r.jobs)
+        assert r.completed == STALL_CFG["n_jobs"]
+        # every abort is a failed migration, counted exactly once
+        assert r.failed_migrations >= r.watchdog_aborts
+
+    def test_watchdog_independent_of_fault_regime(self):
+        sim = ClusterSimulator(
+            SimConfig(stall_timeout_s=900.0, **STALL_CFG),
+            make_policy("energy-only"))
+        assert sim.fault_plan is None  # no FaultRegime anywhere
+        r = sim.run()
+        assert r.watchdog_aborts > 0
+
+
+# ---------------------------------------------------------------------------
+# blackout rollback + telemetry spine
+# ---------------------------------------------------------------------------
+
+class TestBlackoutRecovery:
+    def test_cascade_telemetry_and_audits(self):
+        scn = get_scenario("blackout-cascade")
+        sim = ClusterSimulator.from_scenario(
+            scn, make_policy("receding-horizon"),
+            overrides=dict(days=2, n_jobs=16, mean_compute_h=20.0, seed=0))
+        r = sim.run()  # _result() runs audit_no_job_lost under chaos
+        sim.ledger.audit()
+        assert r.site_outages > 0
+        assert r.mttr_s > 0.0
+        assert r.completed > 0
+        s = r.summary()
+        for key in ("site_outages", "mttr_s", "retries", "reroutes",
+                    "replica_crashes", "watchdog_aborts"):
+            assert key in s
+
+    def test_forecast_carries_fault_plan(self):
+        scn = get_scenario("blackout-cascade")
+        sim = ClusterSimulator.from_scenario(
+            scn, make_policy("receding-horizon"),
+            overrides=dict(days=2, n_jobs=8, seed=0))
+        fc = sim.forecast_horizon
+        assert fc.faults is sim.fault_plan
+        plan = sim.fault_plan
+        # repair estimate (absolute instant) matches the plan mid-outage
+        for s in range(sim.cfg.n_sites):
+            if len(plan.site_spans[s]):
+                t0, t1 = plan.site_spans[s][0]
+                assert fc.site_repair_s(int(s), float(t0)) == pytest.approx(t1)
+                break
+        # next-fault queries clip to the forecast horizon
+        far = 2.0 * sim.cfg.days * 24 * 3600.0
+        assert fc.next_fault_start_after(0, 1, far) == float("inf")
+
+    def test_prebuilt_horizon_gets_plan_grafted(self):
+        """Sweep cells share horizons built without faults; the sim must
+        graft its plan on (identical calendar, same seed)."""
+        from repro.core.sweep import SweepSpec, run_sweep
+        spec = SweepSpec(scenarios=["blackout-cascade"],
+                         policies=["receding-horizon"], seeds=[0],
+                         overrides=dict(days=1, n_jobs=6))
+        res = run_sweep(spec, workers=1)
+        agg = res.aggregate()[("blackout-cascade", "receding-horizon")]
+        assert agg["site_outages"]["mean"] >= 0.0  # telemetry flowed
+
+
+# ---------------------------------------------------------------------------
+# engine contract: fixed-dt refuses fault regimes
+# ---------------------------------------------------------------------------
+
+class TestFixedDtRejectsFaults:
+    def test_raises_with_clear_error(self):
+        cfg = SimConfig(engine="fixed-dt", n_jobs=4,
+                        faults=FaultRegime(site_blackout_rate_per_day=1.0))
+        sim = ClusterSimulator(cfg, make_policy("static"))
+        with pytest.raises(ValueError, match="fault injection.*event"):
+            sim.run()
+
+    def test_even_all_off_regime_rejected(self):
+        """The contract is on the config, not the realized plan: carrying
+        any FaultRegime into fixed-dt is a spec error."""
+        cfg = SimConfig(engine="fixed-dt", n_jobs=4, faults=FaultRegime())
+        sim = ClusterSimulator(cfg, make_policy("static"))
+        with pytest.raises(ValueError, match="fault injection"):
+            sim.run()
+
+
+# ---------------------------------------------------------------------------
+# serving replica crashes
+# ---------------------------------------------------------------------------
+
+class TestReplicaCrashes:
+    def test_requests_conserved_under_crashes(self):
+        scn = get_scenario("inference-diurnal").replace(
+            faults=FaultRegime(replica_crash_rate_per_day=4.0,
+                               replica_crash_mean_s=3600.0))
+        r = ClusterSimulator.from_scenario(
+            scn, make_policy("receding-horizon"),
+            overrides=dict(days=1, n_jobs=8, seed=1)).run()
+        assert r.replica_crashes > 0
+        # crashes re-drain queues and re-route in-flight batches; no
+        # request ever leaves the system
+        assert r.requests_arrived == r.requests_served + r.requests_dropped
+
+
+# ---------------------------------------------------------------------------
+# invariants under chaos: randomized fault plans
+# ---------------------------------------------------------------------------
+
+def _run_chaos(regime: FaultRegime, seed: int, policy: str):
+    cfg = SimConfig(n_sites=4, n_jobs=10, days=1, mean_compute_h=4.0,
+                    seed=seed, faults=regime)
+    sim = ClusterSimulator(cfg, make_policy(policy))
+    r = sim.run()  # audit_no_job_lost runs inside _result
+    sim.ledger.audit()
+    states = {}
+    for j in r.jobs:
+        states[j.state] = states.get(j.state, 0) + 1
+    assert sum(states.values()) == cfg.n_jobs, states
+    assert states.get("done", 0) == r.completed
+    return r
+
+
+def _random_regime(rng: np.random.Generator) -> FaultRegime:
+    return FaultRegime(
+        site_blackout_rate_per_day=float(rng.uniform(0.0, 3.0)),
+        site_blackout_mean_s=float(rng.uniform(600.0, 6 * 3600.0)),
+        link_failure_rate_per_day=float(rng.uniform(0.0, 4.0)),
+        link_failure_mean_s=float(rng.uniform(600.0, 8 * 3600.0)),
+        ckpt_corruption_prob=float(rng.uniform(0.0, 0.5)),
+        straggler_rate_per_day=float(rng.uniform(0.0, 2.0)),
+        straggler_factor=float(rng.uniform(0.2, 0.9)),
+        job_failure_rate_per_slot_hour=float(rng.uniform(0.0, 0.05)),
+        stall_timeout_s=float(rng.uniform(600.0, 7200.0)),
+        retry=RetryPolicy(max_attempts=int(rng.integers(1, 4)),
+                          backoff_base_s=float(rng.uniform(300.0, 3600.0))))
+
+
+class TestChaosInvariants:
+    """No-job-lost + ledger audits hold for arbitrary fault sequences."""
+
+    def test_randomized_fault_plans(self):
+        rng = np.random.default_rng(2026)
+        for i in range(8):
+            regime = _random_regime(rng)
+            policy = ("receding-horizon", "feasibility-aware",
+                      "energy-only", "plan-ahead")[i % 4]
+            _run_chaos(regime, seed=i, policy=policy)
+
+    def test_fault_blind_arms_hold_invariants_too(self):
+        regime = dataclasses.replace(
+            REGIME_ALL, stall_timeout_s=float("inf"))
+        cfg = SimConfig(n_sites=4, n_jobs=10, days=1, mean_compute_h=4.0,
+                        seed=3, faults=regime)
+        sim = ClusterSimulator(
+            cfg, make_policy("receding-horizon", fault_aware=False))
+        sim.run()
+        sim.ledger.audit()
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(blackout=st.floats(0.0, 3.0), link=st.floats(0.0, 4.0),
+           corrupt=st.floats(0.0, 0.5), seed=st.integers(0, 31))
+    def test_no_job_lost_property(blackout, link, corrupt, seed):
+        regime = FaultRegime(site_blackout_rate_per_day=blackout,
+                             site_blackout_mean_s=3600.0,
+                             link_failure_rate_per_day=link,
+                             link_failure_mean_s=3600.0,
+                             ckpt_corruption_prob=corrupt)
+        _run_chaos(regime, seed=seed, policy="receding-horizon")
+
+
+# ---------------------------------------------------------------------------
+# acceptance: fault-aware + retry beats the fault-blind baseline
+# ---------------------------------------------------------------------------
+
+class TestBlackoutCascadeAcceptance:
+    """8-seed sweep on blackout-cascade: fault-aware receding-horizon
+    with the retry ladder vs the fault-blind baseline (pre-PR behavior:
+    no masking, no watchdog — dead-link transfers stall silently).  The
+    aware arm must post higher completions AND lower failed-migrations
+    with non-overlapping 95% CIs."""
+
+    SEEDS = range(8)
+    OVERRIDES = dict(days=3, n_jobs=24, mean_compute_h=85.0)
+
+    def _sweep(self, scn, **pol_kw):
+        comp, failed = [], []
+        for seed in self.SEEDS:
+            r = ClusterSimulator.from_scenario(
+                scn, make_policy("receding-horizon", **pol_kw),
+                overrides=dict(seed=seed, **self.OVERRIDES)).run()
+            comp.append(r.completed)
+            failed.append(r.failed_migrations)
+        return np.asarray(comp, float), np.asarray(failed, float)
+
+    @staticmethod
+    def _ci95(x: np.ndarray) -> float:
+        return 1.96 * x.std() / math.sqrt(len(x))
+
+    def test_aware_beats_blind_with_separated_cis(self):
+        scn = get_scenario("blackout-cascade")
+        blind_scn = scn.replace(faults=dataclasses.replace(
+            scn.faults, stall_timeout_s=float("inf")))
+        c_aware, f_aware = self._sweep(scn)
+        c_blind, f_blind = self._sweep(blind_scn, fault_aware=False)
+        # completions: aware's lower CI edge above blind's upper edge
+        assert (c_aware.mean() - self._ci95(c_aware)
+                > c_blind.mean() + self._ci95(c_blind)), (
+            c_aware.tolist(), c_blind.tolist())
+        # failed migrations (stranded dead-link transfers): aware's
+        # upper edge below blind's lower edge
+        assert (f_aware.mean() + self._ci95(f_aware)
+                < f_blind.mean() - self._ci95(f_blind)), (
+            f_aware.tolist(), f_blind.tolist())
