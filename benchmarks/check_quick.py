@@ -184,6 +184,50 @@ def main() -> int:
                   f"{c_sb['completed']} vs {b_sb['completed']}")
             if not (ratio_ok and det_ok and done_ok):
                 failed = True
+    # serving-fast-path row: the chunked engine must keep >=10x the
+    # per-event oracle's requests/sec on the inference-heavy week.  Both
+    # engines run back to back (interleaved best-of-2) in one process,
+    # so the floor is a same-machine ratio and no calibration
+    # normalization applies.  Request accounting is exact, the SLO tally
+    # gets the same tiny band as the other serving rows, and the
+    # cross-engine determinism bit (summaries minus timing identical)
+    # must hold.
+    b_fp = base.get("serving_fastpath")
+    c_fp = latest.get("serving_fastpath")
+    if b_fp is not None:
+        if c_fp is None:
+            print("[check_quick] FAIL serving_fastpath: missing from "
+                  "latest record")
+            failed = True
+        else:
+            ratio_ok = c_fp["speedup"] >= 10.0
+            det_ok = bool(c_fp["identical"])
+            exact_ok = True
+            for k in ("requests_arrived", "requests_served",
+                      "requests_dropped"):
+                if c_fp.get(k) != b_fp[k]:
+                    print(f"[check_quick] FAIL serving_fastpath: {k} "
+                          f"{c_fp.get(k)} != baseline {b_fp[k]}")
+                    exact_ok = False
+            viol_band = max(1, round(0.005 * b_fp["requests_served"]))
+            got_v = c_fp.get("slo_violations")
+            slo_ok = (got_v is not None
+                      and abs(got_v - b_fp["slo_violations"]) <= viol_band)
+            if not slo_ok:
+                print(f"[check_quick] FAIL serving_fastpath: "
+                      f"slo_violations {got_v} != baseline "
+                      f"{b_fp['slo_violations']} (band {viol_band})")
+            row_ok = ratio_ok and det_ok and exact_ok and slo_ok
+            verdict = "ok" if row_ok else "FAIL"
+            print(f"[check_quick] {verdict} serving_fastpath: "
+                  f"{c_fp['speedup']:.2f}x chunked-vs-event "
+                  f"({c_fp['req_per_s']:,.0f} req/s chunked, "
+                  f"{c_fp['chunked_wall_s']:.2f}s vs "
+                  f"{c_fp['event_wall_s']:.2f}s; floor 10x), "
+                  f"identical={c_fp['identical']}, served "
+                  f"{c_fp['requests_served']} vs {b_fp['requests_served']}")
+            if not row_ok:
+                failed = True
     return 1 if failed else 0
 
 

@@ -82,17 +82,52 @@ def sweep_section(fast: bool = True) -> str:
     return "```\n" + sweep_summary(fast=fast) + "\n```"
 
 
+def pareto_table(csv_path=None) -> str:
+    """The serving latency-vs-carbon frontier from the
+    ``benchmarks.pareto_serving`` CSV artifact: one row per
+    (router, rate) cell, latency axis next to the carbon axis."""
+    import csv
+    import os
+
+    from benchmarks.pareto_serving import OUT_CSV
+
+    path = csv_path or OUT_CSV
+    if not os.path.exists(path):
+        return (f"(no {os.path.basename(path)} — run `PYTHONPATH=src "
+                f"python -m benchmarks.pareto_serving` first)")
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    out = ["| router | req/s/site | served | dropped | shed | p95 s "
+           "| p99 s | SLO att. | req gCO2 | grid kWh |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        out.append(
+            f"| {r['router']} | {float(r['req_per_s_per_site']):.2f} "
+            f"| {r['requests_served']} | {r['requests_dropped']} "
+            f"| {r['requests_shed']} | {float(r['latency_p95_s']):.2f} "
+            f"| {float(r['latency_p99_s']):.2f} "
+            f"| {float(r['slo_attainment']):.4f} "
+            f"| {float(r['request_gco2']):.1f} "
+            f"| {float(r['serve_grid_kwh']):.1f} |")
+    return "\n".join(out)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="baseline")
     ap.add_argument("--section", default="both",
-                    choices=["dryrun", "roofline", "both", "sweep", "all"])
+                    choices=["dryrun", "roofline", "both", "sweep",
+                             "pareto", "all"])
     ap.add_argument("--full-sweep", action="store_true",
                     help="sweep section at full (4-seed, 4-day) size")
     args = ap.parse_args()
     if args.section == "sweep":
         print("### Monte-Carlo sweep (mean ± 95% CI)\n")
         print(sweep_section(fast=not args.full_sweep))
+        return
+    if args.section == "pareto":
+        print("### Serving latency-vs-carbon Pareto sweep\n")
+        print(pareto_table())
         return
     recs = [r for r in load_records(args.tag) if r.get("status") == "OK"]
     recs.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
@@ -105,6 +140,8 @@ def main():
     if args.section == "all":
         print("\n### Monte-Carlo sweep (mean ± 95% CI)\n")
         print(sweep_section(fast=not args.full_sweep))
+        print("\n### Serving latency-vs-carbon Pareto sweep\n")
+        print(pareto_table())
 
 
 if __name__ == "__main__":

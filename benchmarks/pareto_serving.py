@@ -1,0 +1,117 @@
+"""Latency-vs-carbon Pareto sweep for the serving plane.
+
+Runs the ``inference-heavy`` scenario through all three request routers
+at escalating per-site arrival rates (the chunked fast path makes the
+grid affordable: ~1M-request weeks at a few seconds per cell) and emits
+one CSV row per (router, rate) cell with the latency percentiles,
+request-carbon and SLO digits — the frontier the paper's serving section
+argues about: latency-greedy routing (``nearest``) anchors the latency
+axis, window-chasing (``green-first``) the carbon axis, and the SLO-aware
+compromise (``carbon-slo``) should sit between them at every load level.
+
+Cells fan out through :func:`repro.core.sweep.run_cells` (the same
+process-pool engine the Monte-Carlo sweeps use), so the grid
+parallelizes on multi-core runners and stays deterministic in merge
+order.
+
+  PYTHONPATH=src python -m benchmarks.pareto_serving [--days 3]
+  PYTHONPATH=src python -m benchmarks.gen_report --section pareto
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+from typing import Optional, Sequence, Tuple
+
+ROUTERS: Tuple[str, ...] = ("nearest", "green-first", "carbon-slo")
+RATES: Tuple[float, ...] = (0.1, 0.3, 0.6, 1.0)
+OUT_CSV = os.path.join(os.path.dirname(__file__), "PARETO_serving.csv")
+
+FIELDS = (
+    "router", "req_per_s_per_site", "requests_arrived", "requests_served",
+    "requests_dropped", "requests_shed", "slo_violations", "slo_attainment",
+    "latency_p50_s", "latency_p95_s", "latency_p99_s", "request_gco2",
+    "serve_grid_kwh",
+)
+
+
+def build_cells(days: int, rates: Sequence[float] = RATES, seed: int = 0):
+    """One prepared sweep cell per (router, rate) — the cell label packs
+    the grid coordinates so the merged records key themselves."""
+    from repro.core.scenarios import ServingProfile, get_scenario
+
+    s = get_scenario("inference-heavy")
+    cells = []
+    for router in ROUTERS:
+        for rate in rates:
+            cfg = s.sim_config(
+                days=days, seed=seed, serving_router=router,
+                serving=ServingProfile(req_per_s_per_site=rate))
+            pconf = {k: dict(v) for k, v in s.policy_configs.items()}
+            cells.append((cfg, f"{router}@{rate:g}", seed, ("static",),
+                          pconf, False, seed))
+    return cells
+
+
+def run(days: int = 3, rates: Sequence[float] = RATES,
+        workers: Optional[int] = None, out_csv: str = OUT_CSV) -> list:
+    from repro.core.sweep import run_cells
+
+    res = run_cells(build_cells(days, rates), workers=workers,
+                    keep_results=False)
+    rows = []
+    for rec in res.runs:
+        router, rate = rec.scenario.rsplit("@", 1)
+        s = rec.summary
+        served = s["requests_served"]
+        att = 1.0 - s["slo_violations"] / served if served else 1.0
+        rows.append({
+            "router": router,
+            "req_per_s_per_site": float(rate),
+            "requests_arrived": s["requests_arrived"],
+            "requests_served": served,
+            "requests_dropped": s["requests_dropped"],
+            "requests_shed": s["requests_shed"],
+            "slo_violations": s["slo_violations"],
+            "slo_attainment": round(att, 5),
+            "latency_p50_s": s["latency_p50_s"],
+            "latency_p95_s": s["latency_p95_s"],
+            "latency_p99_s": s["latency_p99_s"],
+            "request_gco2": s["request_gco2"],
+            "serve_grid_kwh": s["serve_grid_kwh"],
+        })
+    with open(out_csv, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=FIELDS)
+        w.writeheader()
+        w.writerows(rows)
+    print(f"[pareto] {len(rows)} cells ({len(ROUTERS)} routers x "
+          f"{len(rates)} rates, {days}-day runs, {res.workers} workers, "
+          f"{res.wall_s:.1f}s) -> {out_csv}")
+    for r in rows:
+        print(f"[pareto] {r['router']:>11} @ {r['req_per_s_per_site']:.2f} "
+              f"req/s/site: p95={r['latency_p95_s']:.2f}s "
+              f"p99={r['latency_p99_s']:.2f}s slo={r['slo_attainment']:.4f} "
+              f"gco2={r['request_gco2']:.1f} dropped={r['requests_dropped']} "
+              f"shed={r['requests_shed']}")
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--days", type=int, default=3,
+                    help="simulated days per cell (default 3)")
+    ap.add_argument("--rates", type=float, nargs="+", default=list(RATES),
+                    help="per-site request rates to sweep")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="process-pool size (default: min(cells, cpus))")
+    ap.add_argument("--out", default=OUT_CSV)
+    args = ap.parse_args()
+    run(days=args.days, rates=tuple(args.rates), workers=args.workers,
+        out_csv=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -202,6 +202,59 @@ def quick_smoke(json_path: str = QUICK_LATEST) -> int:
                 "failed_migrations": r.failed_migrations,
             })
         ok &= r.completed == len(r.jobs)
+    # serving fast path: the chunked engine against its per-event parity
+    # oracle on the dedicated ~1.1M-request serving week.  Interleaved
+    # best-of-2 per engine on the same machine — the gated quantity is
+    # the requests/sec RATIO, so machine speed cancels out of the floor;
+    # summaries minus timing must agree exactly (the fast path's
+    # determinism contract).
+    from repro.core.sweep import TIMING_KEYS
+
+    ch_w = ev_w = None
+    ch_r = ev_r = None
+    for _ in range(2):
+        for eng in ("chunked", "event"):
+            sim = ClusterSimulator.from_scenario(
+                "inference-heavy", "static",
+                overrides=dict(serving_engine=eng))
+            r = sim.run()
+            if eng == "chunked":
+                if ch_w is None or r.wall_time_s < ch_w:
+                    ch_w, ch_r = r.wall_time_s, r
+            elif ev_w is None or r.wall_time_s < ev_w:
+                ev_w, ev_r = r.wall_time_s, r
+
+    def _strip(d):
+        # json round-trip so NaN columns (mean_jct_h on a zero-job
+        # scenario) compare equal instead of poisoning dict equality
+        return json.dumps({k: v for k, v in d.items()
+                           if k not in TIMING_KEYS}, sort_keys=True)
+
+    same_serving = _strip(ch_r.summary()) == _strip(ev_r.summary())
+    req_s = ch_r.requests_arrived / max(ch_w, 1e-9)
+    sp = ev_w / max(ch_w, 1e-9)
+    print(f"[quick] inference-heavy: chunked {ch_w:.2f}s vs per-event "
+          f"{ev_w:.2f}s for {ch_r.requests_arrived} requests "
+          f"({req_s:,.0f} req/s, {sp:.2f}x), identical={same_serving} | "
+          f"served={ch_r.requests_served} dropped={ch_r.requests_dropped} "
+          f"slo_violations={ch_r.slo_violations} "
+          f"p95={ch_r.latency_p95_s:.2f}s")
+    print(f"quick_inference_heavy,{ch_w * 1e6:.0f},{sp:.2f}x")
+    record["serving_fastpath"] = {
+        "scenario": "inference-heavy",
+        "requests_arrived": ch_r.requests_arrived,
+        "requests_served": ch_r.requests_served,
+        "requests_dropped": ch_r.requests_dropped,
+        "slo_violations": ch_r.slo_violations,
+        "latency_p95_s": round(ch_r.latency_p95_s, 3),
+        "request_gco2": round(ch_r.request_gco2, 1),
+        "chunked_wall_s": round(ch_w, 4),
+        "event_wall_s": round(ev_w, 4),
+        "req_per_s": round(req_s, 1),
+        "speedup": round(sp, 2),
+        "identical": same_serving,
+    }
+    ok &= same_serving and ch_r.requests_served > 0
     # mini-sweep: exercises the process-pool fan-out end to end in CI
     spec = SweepSpec(
         scenarios=("paper-table6", "forecastable-brownouts"),
@@ -299,6 +352,8 @@ def profile_run(scenario: str, policy: str, out_csv: str) -> None:
     from repro.core import ClusterSimulator
 
     sim = ClusterSimulator.from_scenario(scenario, policy)
+    srv_tm = (sim.serving.enable_timing()
+              if sim.serving is not None else None)
     pr = cProfile.Profile()
     pr.enable()
     r = sim.run()
@@ -307,6 +362,13 @@ def profile_run(scenario: str, policy: str, out_csv: str) -> None:
           f"(decide {r.decide_s:.2f}s steady + {r.decide_first_s:.2f}s "
           f"first-tick — XLA compile lands in the first tick; profile "
           f"steady-state perf against decide_s), {r.ticks} ticks")
+    if srv_tm is not None:
+        # per-event-class serving breakdown (both planes accumulate the
+        # same keys; the chunked engine books merged spans to chunk_s)
+        total = sum(srv_tm.values())
+        parts = " ".join(f"{k[:-2]}={v:.2f}s" for k, v in srv_tm.items())
+        print(f"[profile] serving breakdown ({total:.2f}s booked): "
+              f"{parts}")
     stats = pstats.Stats(pr)
     stats.sort_stats("cumulative")
     rows = []

@@ -63,7 +63,7 @@ import numpy as np
 
 from dataclasses import dataclass
 from functools import cached_property
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 from repro.core.signals import GridSignals, grid_signal_integral
 
@@ -225,6 +225,11 @@ class PowerLedger:
         # the billing arithmetic, so tracking them cannot move a digit)
         self._src_kwh = np.zeros(n_sites)
         self._snk_kwh = np.zeros(n_sites)
+        # serve-bill sync hook: a serving plane that defers its bills
+        # registers its flush here; every OTHER posting (and the audit)
+        # drains the deferred bills first so the global add order onto
+        # the shared accumulators stays exactly the per-event order
+        self._serve_sync: Optional[Callable[[], None]] = None
         # demand-response curtail index: per-site start-sorted arrays
         self._dr: Optional[List] = None
         if signals is not None and signals.curtailments:
@@ -256,6 +261,8 @@ class PowerLedger:
         battery discharge.  ``p_nominal_kw`` (the un-throttled draw)
         enables demand-response compliance tracking.
         """
+        if self._serve_sync is not None:
+            self._serve_sync()
         span = t1 - t0
         e_g = p_kw * green_s / HOUR
         e_b = p_kw * (span - green_s) / HOUR
@@ -272,6 +279,8 @@ class PowerLedger:
     ) -> float:
         """Bill one migration (NIC/system draw) span: all grid, no
         renewable credit — exactly the historical treatment."""
+        if self._serve_sync is not None:
+            self._serve_sync()
         span = t1 - t0
         e = p_kw * span / HOUR
         self.migration_kwh += e
@@ -281,6 +290,8 @@ class PowerLedger:
     def post_serve(self, site: int, p_kw: float, t0: float, t1: float):
         """Bill one serving-replica service span (the plane's historical
         ``_bill``, guards and all — serving digits never move)."""
+        if self._serve_sync is not None:
+            self._serve_sync()
         span = t1 - t0
         if span <= 0.0:
             return
@@ -302,12 +313,246 @@ class PowerLedger:
         self.request_gco2 += g
         self.site_request_gco2[site] += g
 
+    @cached_property
+    def _serve_window_stack(self):
+        """Padded window stack for :meth:`post_serve_block` span
+        classification (built lazily; serving traces are static for the
+        life of a run, matching the plane's own stack assumption)."""
+        from repro.core.traces import stack_traces
+        return stack_traces(self.traces)
+
+    @cached_property
+    def _serve_window_lists(self):
+        """Per-site window boundaries as Python lists plus the mutable
+        warm-start pointer state for :meth:`post_serve_block` (the +inf
+        padding from the stack doubles as the sentinel that stops the
+        pointer advance)."""
+        st = self._serve_window_stack
+        return ([row.tolist() for row in st.starts],
+                [row.tolist() for row in st.ends],
+                [-1] * len(st.starts))
+
+    def post_serve_block(self, sites, p_kw: float, t0s, t1s) -> None:
+        """Bill a sequence of service spans, bit-identical to calling
+        :meth:`post_serve` once per span in order.
+
+        Sub-second service spans almost never straddle a renewable
+        window edge, which leaves two exact-arithmetic regimes:
+
+        * fully inside one window — ``renewable_seconds`` returns the
+          span itself (one ``min/max`` clip, no summation), so the grid
+          half is ``p_kw * (span - span) / HOUR == +0.0`` and
+          ``grid_signal_integral`` over the full overlap is
+          ``tot - tot == +0.0``: both adds are bitwise no-ops and can
+          be skipped;
+        * fully inside one gap — ``renewable_seconds`` is ``+0.0``, the
+          renewable add is a no-op, and the carbon integral takes the
+          ``green <= 0`` branch, whose batched mirror is
+          ``SignalStack.integral_rows`` (documented bit-identical).
+
+        Spans that do straddle an edge (or are non-positive) fall back
+        to the scalar posting, preserving sequence order around them.
+        """
+        n = len(sites)
+        if n == 0:
+            return
+        if self.traces is None or n < 8:
+            for i in range(n):
+                self.post_serve(sites[i], p_kw, t0s[i], t1s[i])
+            return
+        if n >= 4096:
+            self._post_serve_block_vec(sites, p_kw, t0s, t1s)
+            return
+        sig = self.signals
+        has_sig = sig is not None
+        # classify each span against its site's renewable windows with a
+        # persistent per-site pointer: service spans complete in nearly
+        # monotone time order per site, so the warm-start walk is O(1)
+        # amortized (the pointer regresses only when a span's start
+        # jitters back across a boundary)
+        st_l, en_l, ptrs = self._serve_window_lists
+        # 0 = skip (span <= 0), 1 = window, 2 = gap, 3 = straddle
+        cls_l: list = []
+        ca = cls_l.append
+        gi_: list = []
+        gs_: list = []
+        g0_: list = []
+        g1_: list = []
+        i = -1
+        for s, t0v, t1v in zip(sites, t0s, t1s):
+            i += 1
+            if t1v <= t0v:
+                ca(0)
+                continue
+            sts = st_l[s]
+            p = ptrs[s]
+            while sts[p + 1] <= t0v:
+                p += 1
+            while p >= 0 and sts[p] > t0v:
+                p -= 1
+            ptrs[s] = p
+            if p >= 0:
+                if t1v <= en_l[s][p]:
+                    ca(1)
+                    continue
+                if not (t0v >= en_l[s][p] and t1v <= sts[p + 1]):
+                    ca(3)
+                    continue
+            elif t1v > sts[0]:
+                ca(3)
+                continue
+            ca(2)
+            if has_sig:
+                gi_.append(i)
+                gs_.append(s)
+                g0_.append(t0v)
+                g1_.append(t1v)
+        g_l = None
+        if has_sig and gi_:
+            ci = sig.carbon.integral_rows(
+                np.asarray(gs_, dtype=np.int64),
+                np.asarray(g0_, dtype=np.float64),
+                np.asarray(g1_, dtype=np.float64))
+            coef = p_kw / HOUR
+            g_l = [0.0] * n
+            cil = ci.tolist()
+            for j, i in enumerate(gi_):
+                g_l[i] = coef * cil[j]
+        src = self._src_kwh
+        snk = self._snk_kwh
+        sg = self.site_request_gco2
+        # hoisted float accumulators (flushed around scalar fallbacks,
+        # which mutate the same attributes)
+        ren = self.serve_renewable_kwh
+        grd = self.serve_grid_kwh
+        rg = self.request_gco2
+        i = -1
+        for c, s, t0v, t1v in zip(cls_l, sites, t0s, t1s):
+            i += 1
+            if c == 1:
+                e = p_kw * (t1v - t0v) / HOUR
+                ren += e
+                src[s] += e
+                snk[s] += e
+            elif c == 2:
+                e = p_kw * (t1v - t0v) / HOUR
+                grd += e
+                if has_sig:
+                    g = g_l[i]
+                    rg += g
+                    sg[s] += g
+                src[s] += e
+                snk[s] += e
+            elif c == 3:
+                self.serve_renewable_kwh = ren
+                self.serve_grid_kwh = grd
+                self.request_gco2 = rg
+                self.post_serve(s, p_kw, t0v, t1v)
+                ren = self.serve_renewable_kwh
+                grd = self.serve_grid_kwh
+                rg = self.request_gco2
+        self.serve_renewable_kwh = ren
+        self.serve_grid_kwh = grd
+        self.request_gco2 = rg
+
+    def _post_serve_block_vec(
+        self, sites, p_kw: float, t0s, t1s,
+    ) -> None:
+        """Large-flush mirror of the pointer-walk path: classification
+        by padded-stack broadcast, energies elementwise, and every float
+        accumulator advanced with ``np.add.accumulate`` — a strict left
+        fold, so the bits match the equivalent scalar ``+=`` loop.
+        Straddle spans split the flush into segments and replay through
+        the scalar posting at their exact position in the sequence."""
+        sa = np.asarray(sites, dtype=np.int64)
+        t0a = np.asarray(t0s, dtype=np.float64)
+        t1a = np.asarray(t1s, dtype=np.float64)
+        n = sa.shape[0]
+        st = self._serve_window_stack
+        starts, ends = st.starts, st.ends
+        cls = np.empty(n, dtype=np.int8)
+        # chunked so the (rows, windows) gather/broadcast temporaries
+        # stay a few MB regardless of flush size
+        for lo in range(0, n, 65536):
+            hi = min(lo + 65536, n)
+            s_ = sa[lo:hi]
+            t0_ = t0a[lo:hi]
+            t1_ = t1a[lo:hi]
+            stg = starts[s_]
+            # p = last window start <= t0 (same count the pointer walk
+            # converges to; the +inf padding never counts)
+            p = (t0_[:, None] >= stg).sum(axis=1) - 1
+            endp = ends[s_, np.maximum(p, 0)]
+            nxt = stg[np.arange(hi - lo), p + 1]
+            has_p = p >= 0
+            w = has_p & (t1_ <= endp)
+            gap = np.where(has_p, (t0_ >= endp) & (t1_ <= nxt),
+                           t1_ <= stg[:, 0])
+            c = np.full(hi - lo, 3, dtype=np.int8)
+            c[gap] = 2
+            c[w] = 1
+            c[t1_ <= t0_] = 0
+            cls[lo:hi] = c
+        e = p_kw * (t1a - t0a) / HOUR
+        wm = cls == 1
+        gm = cls == 2
+        sig = self.signals
+        g_arr = None
+        if sig is not None and gm.any():
+            ci = sig.carbon.integral_rows(sa[gm], t0a[gm], t1a[gm])
+            g_arr = np.zeros(n)
+            g_arr[gm] = (p_kw / HOUR) * ci
+        e12 = wm | gm
+        src = self._src_kwh
+        snk = self._snk_kwh
+        sg = self.site_request_gco2
+        present = np.unique(sa).tolist()
+
+        def _acc(lo: int, hi: int) -> None:
+            seg_w = wm[lo:hi]
+            seg_g = gm[lo:hi]
+            seg_e = e[lo:hi]
+            ew = seg_e[seg_w]
+            if ew.size:
+                self.serve_renewable_kwh = _chain(
+                    self.serve_renewable_kwh, ew)
+            eg = seg_e[seg_g]
+            if eg.size:
+                self.serve_grid_kwh = _chain(self.serve_grid_kwh, eg)
+                if g_arr is not None:
+                    self.request_gco2 = _chain(
+                        self.request_gco2, g_arr[lo:hi][seg_g])
+            seg_s = sa[lo:hi]
+            seg_12 = e12[lo:hi]
+            for s in present:
+                ms = seg_s == s
+                es = seg_e[ms & seg_12]
+                if es.size:
+                    src[s] = _chain(src[s], es)
+                    snk[s] = _chain(snk[s], es)
+                if g_arr is not None:
+                    gs_v = g_arr[lo:hi][ms & seg_g]
+                    if gs_v.size:
+                        sg[s] = _chain(sg[s], gs_v)
+
+        prev = 0
+        for si in np.flatnonzero(cls == 3).tolist():
+            if si > prev:
+                _acc(prev, si)
+            self.post_serve(int(sa[si]), p_kw,
+                            float(t0a[si]), float(t1a[si]))
+            prev = si + 1
+        if prev < n:
+            _acc(prev, n)
+
     def post_train_tick(
         self, site: int, e_kwh: float, green: bool,
         carb: np.ndarray, price: np.ndarray,
     ) -> None:
         """Fixed-dt (rectangle-rule) training posting — the legacy
         engine's per-tick accounting.  Storage is event-engine only."""
+        if self._serve_sync is not None:
+            self._serve_sync()
         self._snk_kwh[site] += e_kwh
         self._src_kwh[site] += e_kwh
         if green:
@@ -319,6 +564,8 @@ class PowerLedger:
     def post_migration_tick(
         self, site: int, e_kwh: float, carb: np.ndarray, price: np.ndarray,
     ) -> None:
+        if self._serve_sync is not None:
+            self._serve_sync()
         self.migration_kwh += e_kwh
         self.grid_kwh += e_kwh
         self._snk_kwh[site] += e_kwh
@@ -503,6 +750,8 @@ class PowerLedger:
         per-site sources ≡ sinks (within float accumulation tolerance —
         ``(e_b - e_d) + e_d`` is one ulp off ``e_b``), and the state of
         charge stays within ``[0, capacity]``."""
+        if self._serve_sync is not None:
+            self._serve_sync()
         scale = np.maximum(np.abs(self._src_kwh), np.abs(self._snk_kwh))
         err = np.abs(self._src_kwh - self._snk_kwh)
         bad = err > np.maximum(rel_tol * scale, abs_tol)
@@ -515,6 +764,17 @@ class PowerLedger:
             assert (self.soc >= -abs_tol).all() and (
                 self.soc <= cap + abs_tol).all(), (
                 f"battery SoC out of [0, {cap}]: {self.soc}")
+
+
+def _chain(x0, vals: np.ndarray):
+    """Sequential-order sum ``(((x0 + v0) + v1) + ...)``: ufunc
+    ``accumulate`` is a strict left fold (no pairwise regrouping), so
+    the result is bit-identical to a Python loop of ``+=`` adds."""
+    buf = np.empty(vals.size + 1)
+    buf[0] = x0
+    buf[1:] = vals
+    np.add.accumulate(buf, out=buf)
+    return float(buf[-1])
 
 
 __all__ = [

@@ -454,6 +454,22 @@ register_scenario(Scenario(
 ))
 
 register_scenario(Scenario(
+    name="inference-heavy",
+    description="The serving plane at the paper's 'millions of users' "
+                "scale: no training jobs, five replica pools taking "
+                "~1.1M requests over the week (0.3 req/s/site base, "
+                "evening-peaked) routed latency-greedy.  The acceptance "
+                "scenario for the chunked serving fast path — the "
+                "per-event engine ticks once per arrival/close/service "
+                "here, the span engine chews through the same stream in "
+                "array chunks with bit-identical digits.",
+    jobs=JobMix(n_jobs=0),
+    trace=TraceProfile(mean_window_h=3.0, p_wind=0.3, phase_spread_h=8.0),
+    serving=ServingProfile(req_per_s_per_site=0.30),
+    serving_router="nearest",
+))
+
+register_scenario(Scenario(
     name="chaos-monkey",
     description="All five fault classes at once, mildly: occasional site "
                 "blackouts (rollback + requeue), hard link failures that "

@@ -46,6 +46,7 @@ exactly as it slows migrations (and vice versa).
 from __future__ import annotations
 
 import heapq
+import time
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
@@ -59,6 +60,13 @@ HOUR = 3600.0
 #: RNG stream tag for serving (jobs=+1, failures=+23, forecaster=+7,
 #: WAN=+31, signals=131 — serving draws only from [seed, 151, ...]).
 _RNG_TAG = 151
+
+#: Router sentinel: "serve nowhere".  A router may return SHED instead
+#: of a site id to drop the batch *before* it burns queue space or
+#: service energy (``carbon-slo``'s proactive load-shedding ahead of
+#: forecast blackouts).  The plane counts shed requests separately from
+#: queue-overflow drops (``requests_shed`` vs ``requests_dropped``).
+SHED = -2
 
 
 # ---------------------------------------------------------------------------
@@ -112,6 +120,11 @@ class ServingProfile:
     site_spread: float = 0.25  # per-site rate multiplier half-range
     model_classes: Tuple[ModelClass, ...] = DEFAULT_MODEL_CLASSES
     replicas_per_site: int = 2
+    #: optional per-site replica override (len >= n_sites slices apply);
+    #: a 0 entry marks the site *dead* — it serves nothing and, crucially,
+    #: :func:`generate_requests` skips its arrival stream entirely so
+    #: editing replica counts never shifts RNG draws for live sites
+    replicas_by_site: Optional[Tuple[int, ...]] = None
     max_batch: int = 8
     batch_timeout_s: float = 2.0
     max_queue_batches: int = 16  # per-site FIFO bound; beyond => drop
@@ -123,6 +136,15 @@ class ServingProfile:
     @property
     def enabled(self) -> bool:
         return self.req_per_s_per_site > 0.0 or bool(self.arrival_trace)
+
+    def replicas_at(self, site: int) -> int:
+        """Replica pool size for ``site`` (honouring the optional
+        per-site override; sites past the override tuple fall back to
+        ``replicas_per_site``)."""
+        if (self.replicas_by_site is not None
+                and 0 <= site < len(self.replicas_by_site)):
+            return int(self.replicas_by_site[site])
+        return int(self.replicas_per_site)
 
 
 # ---------------------------------------------------------------------------
@@ -209,38 +231,71 @@ class ServingView:
 # ---------------------------------------------------------------------------
 
 
-def generate_requests(
+@dataclass(frozen=True)
+class RequestEvents:
+    """Columnar request stream — the chunked fast path's native format.
+
+    Rows are sorted by ``(t_s, origin)`` (ties broken by draw order,
+    matching the historical stable sort over Request tuples); ``cls_idx``
+    indexes ``profile.model_classes``.  :func:`generate_requests` is a
+    thin wrapper materializing per-row :class:`Request` objects from
+    these arrays, so both paths consume the *same* draws."""
+
+    t_s: np.ndarray  # (m,) float64 arrival times
+    origin: np.ndarray  # (m,) int64 origin site
+    cls_idx: np.ndarray  # (m,) int64 index into profile.model_classes
+    deadline_s: np.ndarray  # (m,) float64 == t_s + slo_s[cls_idx]
+
+    def __len__(self) -> int:
+        return int(self.t_s.shape[0])
+
+
+def generate_request_events(
     profile: ServingProfile, n_sites: int, days: int, *, seed: int = 0,
-) -> List[Request]:
-    """Materialize the request stream, time-sorted.
+) -> RequestEvents:
+    """Materialize the request stream as sorted columnar arrays.
 
     Poisson mode: per-site *thinned* non-homogeneous Poisson — draw at
     the per-site peak rate ``lam_max`` and accept each point with
     probability ``rate(t)/lam_max`` (exact for a piecewise-smooth rate
     curve).  Each site owns its stream ``default_rng([seed, 151, site])``
     so the merged process is deterministic per seed and independent of
-    every other stream in the run.  Trace mode replays
+    every other stream in the run; a site with zero replicas configured
+    (``replicas_by_site``) is skipped *before* its rng is constructed,
+    so dead sites consume no draws and editing replica counts never
+    shifts the arrivals of live sites.  Trace mode replays
     ``profile.arrival_trace`` verbatim (class draws still per-seed).
     """
     horizon = days * 24 * HOUR
     classes = profile.model_classes
     fracs = np.array([c.frac for c in classes], dtype=np.float64)
     cum = np.cumsum(fracs / fracs.sum())
+    slo = np.array([c.slo_s for c in classes], dtype=np.float64)
 
-    def draw_class(u: float) -> ModelClass:
-        return classes[int(np.searchsorted(cum, u, side="left"))]
-
-    events: List[Tuple[float, int, float]] = []  # (t, origin, class-u)
+    t_parts: List[np.ndarray] = []
+    o_parts: List[np.ndarray] = []
+    u_parts: List[np.ndarray] = []
     if profile.arrival_trace is not None:
         rng = np.random.default_rng([seed, _RNG_TAG, 0])
+        tr_t: List[float] = []
+        tr_o: List[int] = []
+        tr_u: List[float] = []
         for t, origin in profile.arrival_trace:
             if 0 <= origin < n_sites:
-                events.append((float(t), int(origin), float(rng.random())))
+                tr_t.append(float(t))
+                tr_o.append(int(origin))
+                tr_u.append(float(rng.random()))
+        if tr_t:
+            t_parts.append(np.asarray(tr_t, dtype=np.float64))
+            o_parts.append(np.asarray(tr_o, dtype=np.int64))
+            u_parts.append(np.asarray(tr_u, dtype=np.float64))
     else:
         base = profile.req_per_s_per_site
         amp = profile.diurnal_amplitude
         spread = profile.site_spread
         for site in range(n_sites):
+            if profile.replicas_at(site) == 0:
+                continue  # dead site: no stream, no draws (see docstring)
             rng = np.random.default_rng([seed, _RNG_TAG, site])
             mult = 1.0 + spread * (2.0 * rng.random() - 1.0)
             lam_max = base * mult * (1.0 + max(amp, 0.0))
@@ -253,14 +308,40 @@ def generate_requests(
                 hod, profile.peak_hour, profile.peak_width_h))
             keep = rng.random(n) < rate / lam_max
             us = rng.random(n)
-            for t, u in zip(ts[keep], us[keep]):
-                events.append((float(t), site, float(u)))
-    events.sort(key=lambda e: (e[0], e[1]))
-    out: List[Request] = []
-    for rid, (t, origin, u) in enumerate(events):
-        cls = draw_class(u)
-        out.append(Request(rid, t, origin, cls, t + cls.slo_s))
-    return out
+            t_parts.append(ts[keep])
+            o_parts.append(np.full(int(keep.sum()), site, dtype=np.int64))
+            u_parts.append(us[keep])
+    if t_parts:
+        t_all = np.concatenate(t_parts).astype(np.float64, copy=False)
+        o_all = np.concatenate(o_parts).astype(np.int64, copy=False)
+        u_all = np.concatenate(u_parts).astype(np.float64, copy=False)
+    else:
+        t_all = np.zeros(0, dtype=np.float64)
+        o_all = np.zeros(0, dtype=np.int64)
+        u_all = np.zeros(0, dtype=np.float64)
+    # lexsort is stable per key, so equal (t, origin) rows keep draw
+    # order — identical to the historical stable list.sort on (t, origin)
+    order = np.lexsort((o_all, t_all))
+    t_all, o_all, u_all = t_all[order], o_all[order], u_all[order]
+    cls_idx = np.searchsorted(cum, u_all, side="left").astype(np.int64)
+    deadline = t_all + slo[cls_idx]
+    return RequestEvents(t_all, o_all, cls_idx, deadline)
+
+
+def generate_requests(
+    profile: ServingProfile, n_sites: int, days: int, *, seed: int = 0,
+) -> List[Request]:
+    """Materialize the request stream as time-sorted :class:`Request`
+    objects (the scalar plane's format) — a row-wise view of
+    :func:`generate_request_events`, bit-identical draws."""
+    ev = generate_request_events(profile, n_sites, days, seed=seed)
+    classes = profile.model_classes
+    return [
+        Request(rid, t, origin, classes[ci], dl)
+        for rid, (t, origin, ci, dl) in enumerate(zip(
+            ev.t_s.tolist(), ev.origin.tolist(),
+            ev.cls_idx.tolist(), ev.deadline_s.tolist()))
+    ]
 
 
 # ---------------------------------------------------------------------------
@@ -417,10 +498,21 @@ class CarbonSloRouter(Router):
     *forecast grid carbon* of the service span among SLO-feasible sites
     (falling back to earliest-completion when none is feasible) —
     shedding load away from sites heading into forecast brownouts or
-    carbon peaks while respecting deadlines."""
+    carbon peaks while respecting deadlines.
 
-    def __init__(self, slo_margin: float = 0.9):
+    Under an active fault plan the router additionally consults the
+    realized fault calendar (``ForecastHorizon.site_repair_grid`` /
+    ``next_fault_start_grid``): remote candidates whose endpoint is dark
+    *now* or whose link is forecast to die before the payload lands are
+    vetoed, and when ``proactive_shed`` is on and no candidate can meet
+    the SLO budget at all, the batch is **shed** (:data:`SHED`) instead
+    of burning queue space and service energy on a guaranteed miss.
+    Both layers are inert on fault-free scenarios (the grids are None
+    without a plan), so fault-free routing digits are untouched."""
+
+    def __init__(self, slo_margin: float = 0.9, proactive_shed: bool = True):
         self.slo_margin = float(slo_margin)
+        self.proactive_shed = bool(proactive_shed)
 
     def route(self, batch: RequestBatch, state) -> int:
         sv = state.serving
@@ -431,16 +523,27 @@ class CarbonSloRouter(Router):
         # remaining deadline (absorbs jitter + estimate error)
         budget = t + self.slo_margin * max(deadline - t, 0.0)
         svc = batch.nominal_service_s
+        # realized fault calendar — None without an active fault plan,
+        # which keeps every fault-aware branch below inert on fault-free
+        # scenarios (bit-identical routing to the pre-fault router)
+        rep = fc.site_repair_grid(t) if fc is not None else None
+        nf = fc.next_fault_start_grid(t) if rep is not None else None
         best, best_key = batch.origin, None
         for s in self._candidates(batch, state):
             xfer = self._xfer_s(batch, state, s)
             if not np.isfinite(xfer):
                 continue
-            if s != batch.origin and fc is not None:
+            if s != batch.origin:
+                if rep is not None and (rep[s] > 0.0
+                                        or rep[batch.origin] > 0.0):
+                    continue  # endpoint blacked out right now
                 # a forecast outage opening before the payload lands
                 # would stall the batch mid-flight: shed away from it
-                if fc.next_outage_start_s(batch.origin, s, t) < t + xfer:
+                if fc is not None and fc.next_outage_start_s(
+                        batch.origin, s, t) < t + xfer:
                     continue
+                if nf is not None and nf[batch.origin, s] < t + xfer:
+                    continue  # hard fault forecast to cut the link
             est_start = t + xfer + float(sv.est_wait_s[s])
             est_done = est_start + svc
             feasible = est_done <= budget
@@ -452,6 +555,11 @@ class CarbonSloRouter(Router):
             key = (not feasible, grams, est_done, s)
             if best_key is None or key < best_key:
                 best, best_key = s, key
+        if (self.proactive_shed and rep is not None
+                and best_key is not None and best_key[0]):
+            # fault plan active and *no* candidate meets the SLO budget:
+            # serving would burn energy on a guaranteed miss — shed
+            return SHED
         return best
 
 
@@ -520,8 +628,8 @@ class ServingPlane:
         self._queues: List[deque] = [deque() for _ in range(n_sites)]
         self._queued_reqs = np.zeros(n_sites, dtype=np.int64)
         self._pending_service_s = np.zeros(n_sites)
-        self.replicas = np.full(n_sites, profile.replicas_per_site,
-                                dtype=np.int64)
+        self.replicas = np.array(
+            [profile.replicas_at(s) for s in range(n_sites)], dtype=np.int64)
         self.busy = np.zeros(n_sites, dtype=np.int64)
         # WAN flows
         self._flows: Dict[int, ServeFlow] = {}
@@ -533,7 +641,9 @@ class ServingPlane:
         self.arrived = 0
         self.served = 0
         self.dropped = 0
+        self.shed = 0  # router-initiated proactive sheds (not overflow)
         self.slo_violations = 0
+        self._timing: Optional[Dict[str, float]] = None
         self.latencies: List[float] = []
         self.queue_samples: List[int] = []
         self.site_served = np.zeros(n_sites, dtype=np.int64)
@@ -578,10 +688,23 @@ class ServingPlane:
         requests still in the system)."""
         return self._ptr < len(self.requests) or self._in_system > 0
 
+    def enable_timing(self) -> Dict[str, float]:
+        """Turn on the per-event-class wall breakdown (arrivals /
+        batch-close / flow / service / router) and return the live
+        accumulator dict — read it after the run."""
+        if self._timing is None:
+            self._timing = {"arrivals_s": 0.0, "batch_close_s": 0.0,
+                            "flow_s": 0.0, "service_s": 0.0,
+                            "router_s": 0.0}
+        return self._timing
+
     def process(self, t: float, eps: float = 1e-6) -> bool:
         """Handle every serving event due at ``t``; returns True when the
         WAN flow set changed (caller must re-split shared rates)."""
         flows_dirty = False
+        tm = self._timing
+        if tm is not None:
+            _t0 = time.perf_counter()
         # 1) arrivals -> batch formation (max-batch closes route now)
         while (self._ptr < len(self.requests)
                and self.requests[self._ptr].t_arrival_s <= t + eps):
@@ -604,6 +727,10 @@ class ServingPlane:
             if len(b.requests) >= self.profile.max_batch:
                 self._open.pop(key, None)
                 flows_dirty |= self._dispatch(b, t)
+        if tm is not None:
+            _t1 = time.perf_counter()
+            tm["arrivals_s"] += _t1 - _t0
+            _t0 = _t1
         # 2) batch-close timeouts
         while self._close_heap and self._close_heap[0][0] <= t + eps:
             _, bid = heapq.heappop(self._close_heap)
@@ -612,6 +739,10 @@ class ServingPlane:
                 continue  # already dispatched at max size
             self._open.pop((b.origin, b.cls.name), None)
             flows_dirty |= self._dispatch(b, t)
+        if tm is not None:
+            _t1 = time.perf_counter()
+            tm["batch_close_s"] += _t1 - _t0
+            _t0 = _t1
         # 3) WAN flow landings: the routed batch reaches its queue
         while self._flow_heap and self._flow_heap[0][0] <= t + eps:
             _, fid, ver = heapq.heappop(self._flow_heap)
@@ -622,12 +753,18 @@ class ServingPlane:
             self._flows.pop(fid, None)
             flows_dirty = True
             self._enqueue(f.batch, f.dst, t)
+        if tm is not None:
+            _t1 = time.perf_counter()
+            tm["flow_s"] += _t1 - _t0
+            _t0 = _t1
         # 4) service completions
         while self._svc_heap and self._svc_heap[0][0] <= t + eps:
             _, bid = heapq.heappop(self._svc_heap)
             b = self._batches.pop(bid)
             self._complete_service(b, t)
         self._start_services(t)
+        if tm is not None:
+            tm["service_s"] += time.perf_counter() - _t0
         if self.profile.validate:
             self.audit()
         return flows_dirty
@@ -662,10 +799,18 @@ class ServingPlane:
         """Route a closed batch; returns True when a WAN flow started."""
         site = batch.origin
         if self._state_fn is not None:
+            tm = self._timing
+            if tm is not None:
+                _t0 = time.perf_counter()
             try:
                 site = int(self.router.route(batch, self._state_fn(t)))
             except Exception:
                 site = batch.origin
+            if tm is not None:
+                tm["router_s"] += time.perf_counter() - _t0
+        if site == SHED:
+            self._shed(batch, t)
+            return False
         if not 0 <= site < self.n_sites:
             site = batch.origin
         if site != batch.origin and not self.topo.reachable(batch.origin,
@@ -695,6 +840,16 @@ class ServingPlane:
     def _drop(self, batch: RequestBatch, t: float) -> None:
         n = len(batch.requests)
         self.dropped += n
+        self._bump_area(t)
+        self._in_system -= n
+        self._batches.pop(batch.bid, None)
+
+    def _shed(self, batch: RequestBatch, t: float) -> None:
+        """Router-initiated proactive shed (carbon-slo ahead of forecast
+        faults): the batch leaves the system unserved, counted apart
+        from queue-overflow drops."""
+        n = len(batch.requests)
+        self.shed += n
         self._bump_area(t)
         self._in_system -= n
         self._batches.pop(batch.bid, None)
@@ -777,7 +932,7 @@ class ServingPlane:
         the dead site during the span starts draining.  Never changes the
         WAN flow set (returns False)."""
         s = int(site)
-        self.replicas[s] = self.profile.replicas_per_site
+        self.replicas[s] = self.profile.replicas_at(s)
         self._start_services(t)
         if self.profile.validate:
             self.audit()
@@ -840,10 +995,13 @@ class ServingPlane:
 
     def audit(self) -> None:
         """Conservation invariants (raise AssertionError on violation):
-        arrived == served + dropped + in-system, and the in-system count
-        decomposes exactly into open/flying/queued/in-service requests."""
-        assert self.arrived == self.served + self.dropped + self._in_system, (
-            self.arrived, self.served, self.dropped, self._in_system)
+        arrived == served + dropped + shed + in-system, and the in-system
+        count decomposes exactly into open/flying/queued/in-service
+        requests."""
+        assert self.arrived == (self.served + self.dropped + self.shed
+                                + self._in_system), (
+            self.arrived, self.served, self.dropped, self.shed,
+            self._in_system)
         open_n = sum(len(b.requests) for b in self._open.values())
         fly_n = sum(len(f.batch.requests) for f in self._flows.values())
         q_n = int(self._queued_reqs.sum())
@@ -868,8 +1026,9 @@ class ServingPlane:
 
 __all__ = [
     "DEFAULT_MODEL_CLASSES", "CarbonSloRouter", "GreenFirstRouter",
-    "ModelClass", "NearestRouter", "Request", "RequestBatch", "Router",
-    "ServeFlow", "ServingPlane", "ServingProfile", "ServingView",
-    "available_routers", "generate_requests", "make_router",
+    "ModelClass", "NearestRouter", "Request", "RequestBatch",
+    "RequestEvents", "Router", "SHED", "ServeFlow", "ServingPlane",
+    "ServingProfile", "ServingView", "available_routers",
+    "generate_request_events", "generate_requests", "make_router",
     "register_router",
 ]

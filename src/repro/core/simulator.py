@@ -207,6 +207,11 @@ class SimConfig:
     # [seed, 151, ...] streams, so enabling it never moves a training draw.
     serving: Optional[ServingProfile] = None
     serving_router: str = "green-first"
+    # serving engine selection: "chunked" (default) uses the span-advance
+    # fast path in core/serving_kernels.py whenever the router has a
+    # bit-exact kernel mirror, falling back to the per-event scalar plane
+    # otherwise; "event" forces the scalar plane (the parity oracle).
+    serving_engine: str = "chunked"
     # prosumer microgrid layer (core/ledger.py): per-site battery /
     # sell-back spec (None = storage off; with storage off the ledger
     # reproduces the pre-ledger accounting bit-for-bit), and the
@@ -257,7 +262,8 @@ class SimResult:
     # gCO2 columns above never include request energy)
     requests_arrived: int = 0
     requests_served: int = 0
-    requests_dropped: int = 0
+    requests_dropped: int = 0  # queue-overflow drops
+    requests_shed: int = 0  # router-initiated proactive sheds
     slo_violations: int = 0
     request_gco2: float = 0.0
     site_request_gco2: Tuple[float, ...] = ()
@@ -361,6 +367,7 @@ class SimResult:
             "requests_arrived": self.requests_arrived,
             "requests_served": self.requests_served,
             "requests_dropped": self.requests_dropped,
+            "requests_shed": self.requests_shed,
             "slo_violations": self.slo_violations,
             "slo_attainment": round(self.slo_attainment, 4),
             "request_gco2": round(self.request_gco2, 1),
@@ -515,12 +522,30 @@ class ClusterSimulator:
         if cfg.serving is not None and cfg.serving.enabled:
             from repro.core.traces import stack_traces
 
-            self.serving = ServingPlane(
-                cfg.serving, make_router(cfg.serving_router),
-                n_sites=cfg.n_sites, days=cfg.days, seed=cfg.seed,
-                topo=self.wan_topology, traces=self.traces,
-                signals=self.signals, state_fn=self._serving_state,
-                ledger=self.ledger)
+            router = make_router(cfg.serving_router)
+            from repro.core.serving_kernels import (
+                ChunkedServingPlane, supports_router)
+
+            if (cfg.serving_engine == "chunked"
+                    and supports_router(router)):
+                plane = ChunkedServingPlane(
+                    cfg.serving, router, n_sites=cfg.n_sites,
+                    days=cfg.days, seed=cfg.seed, topo=self.wan_topology,
+                    traces=self.traces, signals=self.signals,
+                    ledger=self.ledger)
+                plane.bind_context(
+                    forecast=self.forecast_horizon,
+                    mig_pairs_fn=lambda: [
+                        (j.site, j.transfer_dest)
+                        for j in self._by_state["migrating"].values()])
+                self.serving = plane
+            else:
+                self.serving = ServingPlane(
+                    cfg.serving, router,
+                    n_sites=cfg.n_sites, days=cfg.days, seed=cfg.seed,
+                    topo=self.wan_topology, traces=self.traces,
+                    signals=self.signals, state_fn=self._serving_state,
+                    ledger=self.ledger)
             self._serve_stack = stack_traces(self.traces)
             self._empty_soa = JobSoA.from_views([])
         # incremental (site, state) job index: jid-keyed dicts give
@@ -864,6 +889,7 @@ class ClusterSimulator:
                 requests_arrived=srv.arrived,
                 requests_served=srv.served,
                 requests_dropped=srv.dropped,
+                requests_shed=srv.shed,
                 slo_violations=srv.slo_violations,
                 request_gco2=srv.request_gco2,
                 site_request_gco2=tuple(float(x)
@@ -1322,6 +1348,10 @@ class ClusterSimulator:
             return link_changed
 
         arrivals = self._arrivals
+        # span-advance fast path: a chunked plane exposes process_span;
+        # the scalar plane (serving_engine="event") does not, keeping the
+        # historical one-heap-event-per-request interleave
+        serving_span = getattr(serving, "process_span", None)
         t = 0.0
         while (len(by_state["done"]) < n_jobs
                or (serving is not None and serving.pending())):
@@ -1330,11 +1360,27 @@ class ClusterSimulator:
             t_ld = peek(load_heap, "loading")
             t_df = defer_heap[0][0] if defer_heap else INF
             t_ed = edges[eptr] if eptr < len(edges) else INF
+            t_other = min(t_arr, peek(transfer_heap, "migrating"), t_ld,
+                          t_df, peek(done_heap, "running"), t_ed,
+                          next_brownout, next_failure, next_orch,
+                          next_fault, peek_stall())
             t_srv = serving.next_event_s() if serving is not None else INF
-            t_next = min(t_arr, peek(transfer_heap, "migrating"), t_ld, t_df,
-                         peek(done_heap, "running"), t_ed, next_brownout,
-                         next_failure, next_orch, t_srv, next_fault,
-                         peek_stall())
+            if (serving_span is not None and t_srv < t_other - EPS
+                    and t_srv <= t_end):
+                # every serving event strictly clear of the next engine
+                # event advances in one span (one engine iteration per
+                # event the per-event path would have ticked through);
+                # events that could coalesce with an engine event fall
+                # through to the normal tick below
+                n_ev, t_last, fdirty = serving_span(t_other - EPS, t_end,
+                                                    EPS)
+                if n_ev:
+                    t = t_last
+                    self.ticks += n_ev
+                    if fdirty:
+                        refresh_transfers(t_last)
+                    continue
+            t_next = t_other if t_other < t_srv else t_srv
             if t_next > t_end:
                 flush_live(t_end)  # account the unfinished tail to horizon
                 break
